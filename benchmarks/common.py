@@ -1,0 +1,40 @@
+"""Shared benchmark scaffolding.
+
+Simulated datasets are weak-scaled (1/10 sample count, 1/10 cache bytes) so
+the full harness runs in minutes on one CPU core; throughput *ratios* are
+scale-invariant because every resource demand is per-sample.  ``--full``
+runs paper-size populations.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import replace
+from typing import Callable, List, Tuple
+
+from repro.core.perf_model import (AWS_P3, AZURE_NC96, IN_HOUSE,
+                                   DatasetProfile, GB)
+
+SCALE = 10
+
+
+def scaled(ds: DatasetProfile, scale: int = SCALE) -> DatasetProfile:
+    return replace(ds, name=f"{ds.name}/{scale}",
+                   n_total=ds.n_total // scale)
+
+
+def scaled_cache(bytes_: float, scale: int = SCALE) -> float:
+    return bytes_ / scale
+
+
+Row = Tuple[str, float, str]          # (name, us_per_call, derived)
+
+
+def timed(name: str, fn: Callable[[], str]) -> Row:
+    t0 = time.monotonic()
+    derived = fn()
+    return (name, (time.monotonic() - t0) * 1e6, derived)
+
+
+def emit(rows: List[Row]) -> None:
+    for name, us, derived in rows:
+        print(f"{name},{us:.0f},{derived}")

@@ -1,0 +1,74 @@
+"""Fig. 8: DSI model validation — closed-form model vs simulator.
+
+The paper varies dataset size 64->512GB at a 64GB cache for six fixed
+splits on four hardware configs, and reports Pearson >= 0.90 between model
+and measurement.  Our "measurement" is the mechanistic simulator (same
+hardware constants, independent cache/sampler mechanics).
+"""
+from __future__ import annotations
+
+import numpy as np
+from dataclasses import replace
+
+from repro.core.perf_model import (VALIDATION_PROFILES, DatasetProfile,
+                                   JobProfile, dsi_throughput, GB, KB)
+from repro.sim.desim import DSISimulator, LoaderSpec, SimJob
+
+SPLITS = [(1.0, 0.0, 0.0), (0.0, 1.0, 0.0), (0.0, 0.0, 1.0),
+          (0.5, 0.5, 0.0), (0.5, 0.0, 0.5), (0.0, 0.5, 0.5)]
+
+S_DATA = 114.62 * KB          # replicated ImageNet-1K samples (paper setup)
+
+
+def run(full: bool = False):
+    rows = []
+    sizes_gb = [64, 128, 256, 384, 512] if full else [64, 128, 256, 448]
+    scale = 1 if full else 20
+    cache = 64 * GB / scale
+    min_corr = 1.0
+    for hw in VALIDATION_PROFILES:
+        hw = replace(hw, s_cache=cache)
+        for split in SPLITS:
+            model_v, sim_v = [], []
+            for gb in sizes_gb:
+                n = int(gb * GB / S_DATA / scale)
+                ds = DatasetProfile(f"in1k-{gb}gb", n, S_DATA)
+                model_v.append(float(dsi_throughput(
+                    hw, ds, JobProfile(), *split).overall))
+                spec = LoaderSpec(
+                    "fixed", split_override=split,
+                    cache_forms=("encoded", "decoded", "augmented"),
+                    sampling="random", evict_refcount=False)
+                # overlap=False reproduces Eq. 9's per-form serial service
+                # discipline (the overlapped-pipeline divergence on pure-
+                # augmented caches is reported in EXPERIMENTS.md §Fig8)
+                sim = DSISimulator(hw, ds, spec, cache_bytes=cache, seed=1,
+                                   overlap=False)
+                r = sim.run([SimJob(0, gpu_rate=hw.t_gpu,
+                                    batch_size=512, epochs=3)])
+                # steady-state: warm-epoch throughput (the model has no
+                # cold-start term; paper's "stable ECT" measurement)
+                stable = r.stable_epoch_s.get(0, r.makespan / 3)
+                sim_v.append(n / max(stable, 1e-9))
+            mv, sv = np.asarray(model_v), np.asarray(sim_v)
+            cv_m = np.std(mv) / max(np.mean(mv), 1e-9)
+            cv_s = np.std(sv) / max(np.mean(sv), 1e-9)
+            if cv_m < 0.02 and cv_s < 0.05:
+                corr = 1.0          # both flat: trivially consistent
+                flat = " (flat)"
+            else:
+                corr = float(np.corrcoef(mv, sv)[0, 1])
+                flat = ""
+            min_corr = min(min_corr, corr)
+            lab = "-".join(str(int(x * 100)) for x in split)
+            rel = float(np.mean(np.abs(sv - mv) / np.maximum(mv, 1e-9)))
+            rows.append((f"fig8/{hw.name}/{lab}",
+                         f"pearson={corr:.3f}{flat} rel_err={rel:.2f}"))
+    rows.append(("fig8/summary",
+                 f"min_pearson={min_corr:.3f} (paper: >=0.90)"))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, derived in run():
+        print(name, "|", derived)

@@ -1,0 +1,57 @@
+"""§Roofline: per-(arch x shape x mesh) three-term table from the dry-run
+artifact (results/dryrun.json)."""
+from __future__ import annotations
+
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results",
+                       "dryrun.json")
+
+
+def load(path: str = RESULTS):
+    with open(path) as f:
+        return json.load(f)
+
+
+def rows_from(results, mesh: str = "single"):
+    out = []
+    for key, rec in sorted(results.items()):
+        arch, shape, m = key.split("|")
+        if m != mesh:
+            continue
+        if "skipped" in rec:
+            out.append((f"roofline/{arch}/{shape}",
+                        f"SKIP ({rec['skipped']})"))
+            continue
+        if "error" in rec:
+            out.append((f"roofline/{arch}/{shape}", "ERROR"))
+            continue
+        out.append((
+            f"roofline/{arch}/{shape}",
+            f"compute={rec['t_compute'] * 1e3:.2f}ms "
+            f"memory={rec['t_memory'] * 1e3:.2f}ms "
+            f"collective={rec['t_collective'] * 1e3:.2f}ms "
+            f"bottleneck={rec['bottleneck']} "
+            f"frac={rec['roofline_fraction']:.2f} "
+            f"useful={rec['useful_ratio']:.2f}"))
+    return out
+
+
+def run(full: bool = False):
+    if not os.path.exists(RESULTS):
+        return [("roofline/missing",
+                 "run `python -m repro.launch.dryrun` first")]
+    results = load()
+    rows = rows_from(results, "single")
+    ok = sum(1 for v in results.values()
+             if "error" not in v and "skipped" not in v)
+    errs = sum(1 for v in results.values() if "error" in v)
+    rows.append(("roofline/dryrun_cells",
+                 f"{ok} compiled ok, {errs} failed (both meshes)"))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, derived in run():
+        print(name, "|", derived)

@@ -1,0 +1,64 @@
+"""Fault-tolerance demo: kill the trainer mid-run, watch it resume.
+
+    PYTHONPATH=src python examples/fault_tolerance.py
+
+Injects two simulated node failures; the ResilientTrainer restores the
+latest atomic checkpoint each time and the final parameters are bit-exact
+with an uninterrupted run (also covered by tests/test_checkpoint.py).
+"""
+import os
+import shutil
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+
+from repro.configs import registry
+from repro.configs.base import ParallelismConfig
+from repro.distributed.ft import FTConfig, ResilientTrainer
+from repro.launch.train import lm_batch_source
+from repro.models.model import build
+from repro.train.optimizer import AdamW
+from repro.train.step import build_train_step
+
+
+def main() -> None:
+    cfg = registry.get_reduced("deepseek-7b")
+    model = build(cfg)
+    opt = AdamW(lr=1e-3)
+    step = jax.jit(build_train_step(model, ParallelismConfig(), opt))
+    src = lm_batch_source(model, 8, 32)
+    fixed = src()                              # deterministic batch stream
+
+    def trainer(tag, injector=None):
+        d = f"/tmp/ft_demo_{tag}"
+        shutil.rmtree(d, ignore_errors=True)
+        params = model.init(jax.random.key(0))
+        return ResilientTrainer(
+            step_fn=step, params=params, opt_state=opt.init(params),
+            cfg=FTConfig(ckpt_dir=d, ckpt_every=10, max_restarts=5),
+            batch_source=lambda: fixed, failure_injector=injector)
+
+    clean = trainer("clean")
+    clean.run(40)
+    print(f"[ft] clean run:  40 steps, final loss "
+          f"{clean.history[-1]['loss']:.4f}")
+
+    failures = {17: True, 31: True}
+    faulty = trainer("faulty", injector=lambda s: failures.pop(s, False))
+    faulty.run(40)
+    print(f"[ft] faulty run: 40 steps, {faulty.restarts} restarts, "
+          f"final loss {faulty.history[-1]['loss']:.4f}")
+
+    same = all(
+        np.array_equal(np.asarray(a, np.float32), np.asarray(b, np.float32))
+        for a, b in zip(jax.tree.leaves(clean.params),
+                        jax.tree.leaves(faulty.params)))
+    print(f"[ft] final params bit-identical after 2 failures: {same}")
+    assert same
+
+
+if __name__ == "__main__":
+    main()

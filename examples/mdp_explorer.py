@@ -1,0 +1,48 @@
+"""Explore MDP: optimal cache splits across hardware and datasets.
+
+    PYTHONPATH=src python examples/mdp_explorer.py [--cache-gb 400]
+
+Prints the Table-6-style matrix plus a what-if sweep: how the optimal split
+and predicted throughput move as the cache grows (the paper's space-time
+trade-off, quantified).
+"""
+import argparse
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from dataclasses import replace
+
+from repro.core import mdp
+from repro.core.perf_model import (DATASETS, EVAL_PROFILES, GB,
+                                   IMAGENET_1K, AZURE_NC96)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cache-gb", type=float, default=0.0,
+                    help="override cache size for the matrix")
+    args = ap.parse_args()
+
+    print(f"{'dataset':14s} " + " ".join(f"{h.name:>16s}"
+                                         for h in EVAL_PROFILES))
+    for ds in DATASETS:
+        row = []
+        for hw in EVAL_PROFILES:
+            if args.cache_gb:
+                hw = replace(hw, s_cache=args.cache_gb * GB)
+            p = mdp.optimize(hw, ds)
+            row.append(f"{p.label}({p.throughput:,.0f}/s)")
+        print(f"{ds.name:14s} " + " ".join(f"{r:>16s}" for r in row))
+
+    print("\ncache-size sweep (azure, imagenet-1k):")
+    for gb in (64, 128, 256, 400, 800):
+        hw = replace(AZURE_NC96, s_cache=gb * GB)
+        p = mdp.optimize(hw, IMAGENET_1K)
+        print(f"  {gb:4d} GB -> {p.label:>9s}  {p.throughput:8,.0f} "
+              f"samples/s")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,71 @@
+"""Per-op collective attribution for one dry-run cell (hillclimb probe)."""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import sys, re
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+sys.path.insert(0, "src")
+from repro.configs import registry
+from repro.configs.base import SHAPES_BY_NAME
+from repro.launch import dryrun
+from repro.roofline import hlo_collectives as hc
+
+arch, shape_name = sys.argv[1], sys.argv[2]
+overrides = dict(kv.split("=",1) for kv in sys.argv[3:])
+cfg = registry.get(arch)
+shape = SHAPES_BY_NAME[shape_name]
+par = registry.default_parallelism(cfg, shape)
+if overrides:
+    kw = {}
+    for k, v in overrides.items():
+        cur = getattr(par, k)
+        kw[k] = (v in ("1","true")) if isinstance(cur, bool) else type(cur)(v)
+    par = par.replace(**kw)
+
+# monkeypatch analyze to collect per-line details
+orig_wire = hc._wire_bytes
+details = []
+def analyze_verbose(text):
+    comps = hc._segment(text)
+    trip_of_cond = {c: max([int(x) for ln in ls for x in hc._CONST_RE.findall(ln)] or [1]) for c, ls in comps.items()}
+    own, calls = {}, {}
+    lines_of = {}
+    for cname, lines in comps.items():
+        ops, cl = [], []
+        for line in lines:
+            m = hc._OP_RE.search(line)
+            if m:
+                ops.append((m.group(2), hc._wire_bytes(line, m.group(2)), line.strip()[:140]))
+            w = hc._WHILE_RE.search(line)
+            if w:
+                cl.append((w.group(2), max(trip_of_cond.get(w.group(1),1),1)))
+            else:
+                for callee in hc._CALL_RE.findall(line):
+                    cl.append((callee, 1))
+        own[cname] = ops; calls[cname] = cl
+    called = {b for c in calls.values() for b,_ in c}
+    roots = [c for c in comps if c not in called]
+    entry = max(roots or comps, key=lambda c: len(comps[c]))
+    def acc(cname, mult, depth=0):
+        if depth > 12 or cname not in own: return
+        for kind, wire, line in own[cname]:
+            details.append((wire*mult, mult, kind, line))
+        for callee, trips in calls[cname]:
+            acc(callee, mult*trips, depth+1)
+    acc(entry, 1.0)
+
+import repro.launch.dryrun as dr
+class FakeColl:
+    pass
+rec = None
+# lower manually using dryrun internals
+old_analyze = hc.analyze
+def patched(text):
+    analyze_verbose(text)
+    return old_analyze(text)
+hc.analyze = patched
+rec = dr.lower_cell(arch, shape, multi_pod=False, parallel=par)
+details.sort(reverse=True)
+print(f"total wire: {sum(d[0] for d in details)/1e12:.2f} TB over {len(details)} op sites")
+for wire, mult, kind, line in details[:15]:
+    print(f"{wire/1e9:9.1f} GB  x{mult:6.0f} {kind:18s} {line[:110]}")

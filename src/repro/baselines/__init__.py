@@ -1,0 +1,15 @@
+"""Baseline dataloaders (Table 7), expressed as simulator LoaderSpecs.
+
+Each baseline from the paper's comparison matrix is a configuration of the
+same mechanistic substrate (sim/desim.py) rather than a fork — PyTorch and
+DALI ride the page-cache LRU, MINIO pins encoded samples without eviction,
+Quiver over-samples 10x and substitutes, SHADE importance-samples on one
+thread, MDP partitions without ODS.  The live (threaded) pipeline runs the
+Seneca and naive policies; simulator-only baselines model the rest.
+"""
+from repro.sim.desim import (ALL_LOADERS, DALI_CPU, DALI_GPU, MDP_ONLY,
+                             MINIO, PYTORCH, QUIVER, SENECA, SHADE,
+                             LoaderSpec)
+
+__all__ = ["ALL_LOADERS", "DALI_CPU", "DALI_GPU", "MDP_ONLY", "MINIO",
+           "PYTORCH", "QUIVER", "SENECA", "SHADE", "LoaderSpec"]

@@ -1,0 +1,152 @@
+"""Three-form in-memory cache (the Redis analogue, DESIGN.md §2).
+
+Byte-accounted partitions for encoded / decoded / augmented samples with
+pluggable eviction.  Thread-safe: the real data pipeline hits this store
+from fetch worker threads while the trainer consumes batches.
+"""
+from __future__ import annotations
+
+import threading
+from collections import OrderedDict
+from dataclasses import dataclass, field
+from typing import Any, Dict, Iterable, List, Optional, Tuple
+
+import numpy as np
+
+FORMS = ("encoded", "decoded", "augmented")
+
+
+@dataclass
+class PartitionStats:
+    hits: int = 0
+    misses: int = 0
+    inserts: int = 0
+    evictions: int = 0
+    bytes_used: int = 0
+
+
+class CachePartition:
+    """One form's partition: id -> value with byte accounting + LRU order."""
+
+    def __init__(self, capacity_bytes: int, evict_policy: str = "none"):
+        assert evict_policy in ("none", "lru", "refcount")
+        self.capacity = int(capacity_bytes)
+        self.policy = evict_policy
+        self._data: "OrderedDict[int, Any]" = OrderedDict()
+        self._sizes: Dict[int, int] = {}
+        self.stats = PartitionStats()
+
+    def __contains__(self, key: int) -> bool:
+        return key in self._data
+
+    def __len__(self) -> int:
+        return len(self._data)
+
+    def keys(self) -> List[int]:
+        return list(self._data.keys())
+
+    def get(self, key: int):
+        v = self._data.get(key)
+        if v is None:
+            self.stats.misses += 1
+            return None
+        self.stats.hits += 1
+        if self.policy == "lru":
+            self._data.move_to_end(key)
+        return v
+
+    def put(self, key: int, value: Any, nbytes: int) -> List[int]:
+        """Insert; returns evicted keys (never evicts under 'none' — the
+        insert is rejected instead, MINIO-style).  Re-inserting an existing
+        key replaces it (the old entry is dropped first, so a rejected
+        oversized replacement leaves the key absent, not half-accounted)."""
+        evicted: List[int] = []
+        if key in self._data:
+            del self._data[key]
+            self.stats.bytes_used -= self._sizes.pop(key)
+        while self.stats.bytes_used + nbytes > self.capacity:
+            if self.policy == "lru" and self._data:
+                k, _ = self._data.popitem(last=False)
+                self.stats.bytes_used -= self._sizes.pop(k)
+                self.stats.evictions += 1
+                evicted.append(k)
+            else:
+                return evicted           # rejected (no-evict policy)
+        self._data[key] = value
+        self._sizes[key] = nbytes
+        self.stats.bytes_used += nbytes
+        self.stats.inserts += 1
+        return evicted
+
+    def remove(self, key: int) -> bool:
+        if key in self._data:
+            del self._data[key]
+            self.stats.bytes_used -= self._sizes.pop(key)
+            self.stats.evictions += 1
+            return True
+        return False
+
+    @property
+    def free_bytes(self) -> int:
+        return self.capacity - self.stats.bytes_used
+
+
+class TieredCache:
+    """The Seneca cache: three partitions sized by an MDP split."""
+
+    def __init__(self, capacity_bytes: int,
+                 split: Tuple[float, float, float],
+                 evict_policies: Optional[Dict[str, str]] = None):
+        x_e, x_d, x_a = split
+        assert abs(x_e + x_d + x_a - 1.0) < 1e-6, split
+        pol = evict_policies or {"encoded": "none", "decoded": "none",
+                                 "augmented": "refcount"}
+        self.capacity = capacity_bytes
+        self.split = split
+        self.parts: Dict[str, CachePartition] = {
+            "encoded": CachePartition(int(x_e * capacity_bytes),
+                                      pol["encoded"]),
+            "decoded": CachePartition(int(x_d * capacity_bytes),
+                                      pol["decoded"]),
+            "augmented": CachePartition(int(x_a * capacity_bytes),
+                                        pol["augmented"]),
+        }
+        self.lock = threading.Lock()
+
+    def lookup(self, key: int) -> Tuple[Optional[str], Any]:
+        """Most-processed form first (augmented > decoded > encoded)."""
+        with self.lock:
+            for form in ("augmented", "decoded", "encoded"):
+                part = self.parts[form]
+                if key in part:
+                    return form, part.get(key)
+            return None, None
+
+    def insert(self, key: int, form: str, value: Any, nbytes: int) -> bool:
+        """Insert; True when the key is resident afterwards."""
+        with self.lock:
+            self.parts[form].put(key, value, nbytes)
+            return key in self.parts[form]
+
+    def evict(self, key: int, form: str) -> bool:
+        with self.lock:
+            return self.parts[form].remove(key)
+
+    def status_array(self, n: int) -> np.ndarray:
+        """uint8[N] of ODS status codes (0 storage / 1 enc / 2 dec / 3 aug)."""
+        out = np.zeros(n, np.uint8)
+        with self.lock:
+            for code, form in ((1, "encoded"), (2, "decoded"),
+                               (3, "augmented")):
+                ks = self.parts[form].keys()
+                if ks:
+                    out[np.asarray(ks, int)] = code
+        return out
+
+    def hit_rate(self) -> float:
+        h = sum(p.stats.hits for p in self.parts.values())
+        m = sum(p.stats.misses for p in self.parts.values())
+        return h / (h + m) if h + m else 0.0
+
+    def bytes_used(self) -> int:
+        return sum(p.stats.bytes_used for p in self.parts.values())

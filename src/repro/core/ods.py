@@ -1,0 +1,189 @@
+"""Opportunistic Data Sampling (Seneca §5.2).
+
+Vectorized reimplementation of the paper's per-sample loop (DESIGN.md §2):
+the metadata is exactly the paper's — a per-job *seen* bit-vector, a
+per-dataset *status* byte and a *reference count* — but substitution is a
+masked argsort over the batch instead of pointer chasing, so a batch costs
+O(B log B + candidates) numpy time and has a direct jittable twin
+(:mod:`repro.core.ods_jax`).
+
+Guarantees (§5.2, tested in tests/test_ods.py):
+  1. a job sees every dataset sample exactly once per epoch;
+  2. an augmented sample is never reused across epochs (refcount eviction
+     at threshold = number of registered jobs);
+  3. the delivered order remains pseudo-random (substitutions depend only
+     on cache state and the job's PRNG).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+# status byte values (paper: 1B per sample encodes status + refcount)
+IN_STORAGE = 0
+ENCODED = 1
+DECODED = 2
+AUGMENTED = 3
+
+
+@dataclass
+class ODSState:
+    """Shared per-dataset state + per-job seen bit-vectors."""
+    n_samples: int
+    status: np.ndarray                    # uint8[N]
+    refcount: np.ndarray                  # int32[N] (augmented-tier refs)
+    seen: Dict[int, np.ndarray] = field(default_factory=dict)
+    epoch: Dict[int, int] = field(default_factory=dict)
+    served: Dict[int, int] = field(default_factory=dict)
+    rng: np.random.Generator = field(
+        default_factory=lambda: np.random.default_rng(0))
+    # stats
+    hits: int = 0
+    misses: int = 0
+    substitutions: int = 0
+
+    @classmethod
+    def create(cls, n_samples: int, seed: int = 0) -> "ODSState":
+        return cls(n_samples=n_samples,
+                   status=np.zeros(n_samples, np.uint8),
+                   refcount=np.zeros(n_samples, np.int32),
+                   rng=np.random.default_rng(seed))
+
+    # ------------------------------------------------------------------
+    def register_job(self, job_id: int) -> None:
+        self.seen[job_id] = np.zeros(self.n_samples, bool)
+        self.epoch[job_id] = 0
+        self.served[job_id] = 0
+
+    def unregister_job(self, job_id: int) -> None:
+        self.seen.pop(job_id, None)
+        self.epoch.pop(job_id, None)
+        self.served.pop(job_id, None)
+
+    @property
+    def n_jobs(self) -> int:
+        return max(len(self.seen), 1)
+
+    def metadata_bytes(self) -> int:
+        """Paper §5.2: ~1 bit/job/sample + 1 B/sample."""
+        return self.n_samples * len(self.seen) // 8 + self.n_samples
+
+    # ------------------------------------------------------------------
+    def mark_cached(self, ids: np.ndarray, form: int) -> None:
+        self.status[ids] = form
+        if form == AUGMENTED:
+            # an augmented tensor admitted via the serving path was already
+            # consumed by the jobs whose seen-bit is set; start the
+            # reference count there so threshold eviction still fires after
+            # the *remaining* jobs use it (paper §5.2 semantics: evict once
+            # every job consumed the augmentation once)
+            if self.seen:
+                seen_count = np.zeros(len(ids), np.int32)
+                for bits in self.seen.values():
+                    seen_count += bits[ids].astype(np.int32)
+                self.refcount[ids] = seen_count
+            else:
+                self.refcount[ids] = 0
+
+    def admission_value(self, sample_id: int) -> int:
+        """How many jobs could still be served by caching this sample's
+        augmented form (0 -> not worth a slot)."""
+        return self.n_jobs - int(sum(bits[sample_id]
+                                     for bits in self.seen.values()))
+
+    def mark_evicted(self, ids: np.ndarray) -> None:
+        self.status[ids] = IN_STORAGE
+        self.refcount[ids] = 0
+
+    # ------------------------------------------------------------------
+    def sample_batch(self, job_id: int, requested: np.ndarray
+                     ) -> Tuple[np.ndarray, np.ndarray]:
+        """ODS steps 1–4 (Fig. 6) for one batch request.
+
+        ``requested`` is the next slice of the job's pseudo-random epoch
+        permutation.  Returns (batch ids, eviction ids).  Slots whose
+        requested sample misses in the cache (or was already consumed as an
+        earlier substitute) are opportunistically replaced by cached,
+        unseen samples; slots with no candidate keep the storage fetch.
+        """
+        seen = self.seen[job_id]
+        requested = np.asarray(requested)
+        B = len(requested)
+
+        # epoch rollover: not enough unseen samples left for this batch
+        if self.n_samples - self.served[job_id] < B:
+            seen[:] = False
+            self.served[job_id] = 0
+            self.epoch[job_id] += 1
+
+        cached_req = self.status[requested] != IN_STORAGE
+        unseen_req = ~seen[requested]
+        direct = cached_req & unseen_req            # serve as-is (hits)
+        replace_slots = np.flatnonzero(~direct)     # misses + already-seen
+
+        batch = requested.copy()
+        if len(replace_slots):
+            # candidates: cached, unseen, not already part of this batch
+            cand_mask = (self.status != IN_STORAGE) & ~seen
+            cand_mask[requested[direct]] = False
+            cand = np.flatnonzero(cand_mask)
+            take = min(len(cand), len(replace_slots))
+            if take:
+                picks = self.rng.choice(cand, size=take, replace=False)
+                batch[replace_slots[:take]] = picks
+                # substitutions = storage fetches avoided via cached unseen
+                self.substitutions += int(
+                    np.count_nonzero(~cached_req[replace_slots[:take]]))
+            # leftover *already-seen* slots must still be served uniquely:
+            # fall back to unseen, uncached samples
+            left = replace_slots[take:]
+            if len(left):
+                need = left[seen[requested[left]]]
+                if len(need):
+                    pool = np.flatnonzero(~seen & (self.status == IN_STORAGE))
+                    pool = np.setdiff1d(pool, batch, assume_unique=False)
+                    fill = self.rng.permutation(pool)[:len(need)]
+                    batch[need] = fill
+
+        # step 3: increment refcounts of augmented-tier hits
+        aug_hits = batch[self.status[batch] == AUGMENTED]
+        self.refcount[aug_hits] += 1
+        hit_ids = batch[self.status[batch] != IN_STORAGE]
+        self.hits += len(hit_ids)
+        self.misses += B - len(hit_ids)
+
+        # step 4: update seen bit-vector
+        seen[batch] = True
+        self.served[job_id] += B
+
+        # step 5: refcount-threshold eviction of augmented samples
+        evict = aug_hits[self.refcount[aug_hits] >= self.n_jobs]
+        if len(evict):
+            self.mark_evicted(evict)
+        return batch, evict
+
+    # ------------------------------------------------------------------
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+
+class EpochSampler:
+    """Per-job pseudo-random epoch permutation, consumed batch by batch."""
+
+    def __init__(self, n_samples: int, batch_size: int, seed: int):
+        self.n = n_samples
+        self.bs = batch_size
+        self.rng = np.random.default_rng(seed)
+        self._perm = self.rng.permutation(self.n)
+        self._pos = 0
+
+    def next_request(self) -> np.ndarray:
+        if self._pos + self.bs > self.n:
+            self._perm = self.rng.permutation(self.n)
+            self._pos = 0
+        out = self._perm[self._pos:self._pos + self.bs]
+        self._pos += self.bs
+        return out

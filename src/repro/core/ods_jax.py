@@ -1,0 +1,81 @@
+"""Jittable ODS substitution (TPU-native adaptation, DESIGN.md §2).
+
+The paper's ODS walks the batch sample-by-sample.  On a TPU host we want the
+substitution decision itself to be a fused vectorized program so it can run
+inside the input pipeline's jitted prologue (and, at scale, on-device over a
+sharded metadata table).  This module implements one batch-substitution step
+as a pure function over flat arrays with ``jax.lax`` primitives only.
+
+Semantic difference vs :mod:`repro.core.ods` (documented, tested): candidate
+selection uses a priority argsort seeded by a fold-in PRNG instead of
+``Generator.choice``, so the two implementations agree on *which class* of
+sample fills each slot (the invariants), not on the specific random pick.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class ODSJaxState(NamedTuple):
+    status: jax.Array          # uint8[N]  0=storage 1=enc 2=dec 3=aug
+    refcount: jax.Array        # int32[N]
+    seen: jax.Array            # bool[N]   (one job's bit-vector)
+    served: jax.Array          # int32 scalar
+
+
+def create(n: int) -> ODSJaxState:
+    return ODSJaxState(
+        status=jnp.zeros(n, jnp.uint8),
+        refcount=jnp.zeros(n, jnp.int32),
+        seen=jnp.zeros(n, bool),
+        served=jnp.zeros((), jnp.int32))
+
+
+def substitute(state: ODSJaxState, requested: jax.Array, rng: jax.Array,
+               n_jobs: int) -> Tuple[ODSJaxState, jax.Array, jax.Array]:
+    """One ODS batch step. Returns (state', batch ids, evict mask[N]).
+
+    Fully shape-static: selection is done by ranking all N samples by
+    (serveability, random key) and taking the top slots needed.
+    """
+    N = state.status.shape[0]
+    B = requested.shape[0]
+
+    # epoch rollover when fewer than B unseen remain
+    roll = (N - state.served) < B
+    seen = jnp.where(roll, jnp.zeros_like(state.seen), state.seen)
+    served = jnp.where(roll, 0, state.served)
+
+    cached = state.status != 0
+    direct = cached[requested] & ~seen[requested]
+
+    # priority of every sample as a substitute: cached & unseen best,
+    # then uncached & unseen; seen and in-batch samples are excluded.
+    in_batch_direct = jnp.zeros(N, bool).at[requested].max(direct)
+    score = jnp.where(~seen & cached & ~in_batch_direct, 2, 0)
+    score = jnp.where(~seen & ~cached & ~in_batch_direct,
+                      jnp.maximum(score, 1), score)
+    noise = jax.random.uniform(rng, (N,))
+    rank = score.astype(jnp.float32) + noise          # in (0,3)
+    order = jnp.argsort(-rank)                         # best candidates first
+
+    n_replace = B - direct.sum()
+    take_slot = jnp.cumsum(~direct) - 1                # per-slot index
+    batch = jnp.where(direct, requested, order[jnp.clip(take_slot, 0, N - 1)])
+
+    # bookkeeping
+    aug_hit = state.status[batch] == 3
+    refcount = state.refcount.at[batch].add(aug_hit.astype(jnp.int32))
+    evict_ids = jnp.where(aug_hit & (refcount[batch] >= n_jobs), batch, N)
+    evict_mask = jnp.zeros(N + 1, bool).at[evict_ids].set(True)[:N]
+    status = jnp.where(evict_mask, 0, state.status).astype(jnp.uint8)
+    refcount = jnp.where(evict_mask, 0, refcount)
+    seen = seen.at[batch].set(True)
+    return (ODSJaxState(status, refcount, seen, served + B), batch,
+            evict_mask)
+
+
+substitute_jit = jax.jit(substitute, static_argnames=("n_jobs",))

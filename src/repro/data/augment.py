@@ -1,0 +1,37 @@
+"""Random augmentations (random crop + horizontal flip + normalize).
+
+Two equivalent implementations:
+* numpy (host CPU — the paper-faithful placement), used by the pipeline;
+* jnp (device), used by the Pallas-kernel path (kernels/augment) and as its
+  oracle.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+
+MEAN = np.array([0.485, 0.456, 0.406], np.float32)
+STD = np.array([0.229, 0.224, 0.225], np.float32)
+
+
+def augment_np(img: np.ndarray, crop_hw: Tuple[int, int],
+               rng: np.random.Generator) -> np.ndarray:
+    """uint8 HWC -> float32 CHW-free (kept HWC) augmented tensor."""
+    h, w, _ = img.shape
+    ch, cw = crop_hw
+    top = int(rng.integers(0, h - ch + 1))
+    left = int(rng.integers(0, w - cw + 1))
+    crop = img[top:top + ch, left:left + cw]
+    if rng.integers(0, 2):
+        crop = crop[:, ::-1]
+    out = crop.astype(np.float32) / 255.0
+    return (out - MEAN) / STD
+
+
+def augment_batch_np(imgs: np.ndarray, crop_hw: Tuple[int, int],
+                     seeds: np.ndarray) -> np.ndarray:
+    out = np.empty((len(imgs), crop_hw[0], crop_hw[1], 3), np.float32)
+    for i, (im, s) in enumerate(zip(imgs, seeds)):
+        out[i] = augment_np(im, crop_hw, np.random.default_rng(int(s)))
+    return out

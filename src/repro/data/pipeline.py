@@ -1,0 +1,170 @@
+"""The real (threaded) DSI pipeline: sampler -> fetch -> decode -> augment
+-> collate -> device.
+
+Plugs either a :class:`SenecaService` (MDP + ODS) or a naive baseline
+sampler on top of the same storage + cache substrate, so the paper's
+concurrency experiments run for real on CPU (examples/, tests/).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
+from dataclasses import dataclass, field
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.core.ods import AUGMENTED, DECODED, ENCODED, IN_STORAGE
+from repro.core.seneca import SenecaService
+from repro.data.augment import augment_np
+from repro.data.storage import RemoteStorage
+from repro.data.synthetic import SyntheticDataset
+
+
+@dataclass
+class StageTimes:
+    fetch: float = 0.0
+    decode: float = 0.0
+    augment: float = 0.0
+    collate: float = 0.0
+    batches: int = 0
+
+    def as_dict(self) -> Dict[str, float]:
+        return {"fetch": self.fetch, "decode": self.decode,
+                "augment": self.augment, "collate": self.collate,
+                "batches": self.batches}
+
+
+class DSIPipeline:
+    """Per-job pipeline over a shared SenecaService + RemoteStorage."""
+
+    def __init__(self, job_id: int, service: SenecaService,
+                 storage: RemoteStorage, batch_size: int,
+                 n_workers: int = 4, prefetch: int = 2, seed: int = 0):
+        self.job_id = job_id
+        self.svc = service
+        self.storage = storage
+        self.ds: SyntheticDataset = storage.dataset
+        self.bs = batch_size
+        self.pool = ThreadPoolExecutor(max_workers=n_workers)
+        self.times = StageTimes()
+        self.rng = np.random.default_rng(seed + job_id)
+        self._q: "queue.Queue" = queue.Queue(maxsize=prefetch)
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+        self.svc.register_job(job_id, batch_size)
+
+    # ------------------------------------------------------------------
+    def _produce_sample(self, sid: int, epoch_tag: int) -> np.ndarray:
+        """Run one sample through the remaining pipeline stages."""
+        form, value = self.svc.lookup(sid)
+        t0 = time.monotonic()
+        if form == "augmented":
+            self.times.fetch += time.monotonic() - t0
+            return value
+        if form == "decoded":
+            img = value
+            self.times.fetch += time.monotonic() - t0
+        elif form == "encoded":
+            enc = value
+            self.times.fetch += time.monotonic() - t0
+            t1 = time.monotonic()
+            img = self.ds.decode(enc, sid)
+            self.times.decode += time.monotonic() - t1
+            self._maybe_admit_decoded(sid, img)
+        else:
+            enc = self.storage.fetch(sid)
+            self.times.fetch += time.monotonic() - t0
+            self._maybe_admit_encoded(sid, enc)
+            t1 = time.monotonic()
+            img = self.ds.decode(enc, sid)
+            self.times.decode += time.monotonic() - t1
+            self._maybe_admit_decoded(sid, img)
+        t2 = time.monotonic()
+        aug_seed = (epoch_tag * 1_000_003 + sid) & 0x7FFFFFFF
+        out = augment_np(img, self.ds.crop_hw,
+                         np.random.default_rng(aug_seed))
+        self.times.augment += time.monotonic() - t2
+        self._maybe_admit_augmented(sid, out)
+        return out
+
+    def _maybe_admit_encoded(self, sid: int, enc: bytes) -> None:
+        part = self.svc.cache.parts["encoded"]
+        if part.capacity and part.free_bytes >= len(enc):
+            self.svc.admit(sid, "encoded", enc, len(enc))
+
+    def _maybe_admit_decoded(self, sid: int, img: np.ndarray) -> None:
+        part = self.svc.cache.parts["decoded"]
+        if part.capacity and part.free_bytes >= img.nbytes:
+            self.svc.admit(sid, "decoded", img, img.nbytes)
+
+    def _maybe_admit_augmented(self, sid: int, out: np.ndarray) -> None:
+        part = self.svc.cache.parts["augmented"]
+        if part.capacity and part.free_bytes >= out.nbytes:
+            self.svc.admit(sid, "augmented", out, out.nbytes)
+
+    # ------------------------------------------------------------------
+    def next_batch(self) -> Dict[str, np.ndarray]:
+        ids, _forms = self.svc.next_batch_ids(self.job_id)
+        epoch_tag = self.svc.ods.epoch.get(self.job_id, 0)
+        imgs = list(self.pool.map(
+            lambda s: self._produce_sample(int(s), epoch_tag), ids))
+        t0 = time.monotonic()
+        batch = {
+            "images": np.stack(imgs).astype(np.float32),
+            "labels": np.asarray([self.ds.label(int(s)) for s in ids],
+                                 np.int32),
+        }
+        self.times.collate += time.monotonic() - t0
+        self.times.batches += 1
+        self._process_refills()
+        return batch
+
+    def _process_refills(self, max_n: int = 32) -> None:
+        """ODS step 5: repopulate evicted augmented slots with *fresh*
+        random samples (unseen by every job), on the worker pool — the
+        paper's background-refill thread.  Also proactively tops up free
+        augmented capacity (cold start)."""
+        work = self.svc.take_refill_work(max_n)
+        part = self.svc.cache.parts["augmented"]
+        spare = max_n - len(work)
+        if spare > 0 and part.capacity:
+            free_slots = part.free_bytes // max(self.ds.augmented_bytes(), 1)
+            if free_slots > 0:
+                extra = self.svc.refill_candidates(min(spare, free_slots))
+                work = np.concatenate([work, extra]) if len(work) else extra
+        for sid in work:
+            self.pool.submit(self._refill_one, int(sid))
+
+    def _refill_one(self, sid: int) -> None:
+        try:
+            enc = self.storage.fetch(sid)
+            img = self.ds.decode(enc, sid)
+            out = augment_np(img, self.ds.crop_hw,
+                             np.random.default_rng(sid ^ 0x5EED))
+            self._maybe_admit_augmented(sid, out)
+        except Exception:      # background worker must never kill serving
+            pass
+
+    # ------------------------------------------------------------------
+    def start_prefetch(self) -> None:
+        def run():
+            while not self._stop.is_set():
+                try:
+                    self._q.put(self.next_batch(), timeout=0.5)
+                except queue.Full:
+                    continue
+        self._thread = threading.Thread(target=run, daemon=True)
+        self._thread.start()
+
+    def get(self, timeout: float = 60.0) -> Dict[str, np.ndarray]:
+        return self._q.get(timeout=timeout)
+
+    def stop(self) -> None:
+        self._stop.set()
+        if self._thread:
+            self._thread.join(timeout=2.0)
+        self.pool.shutdown(wait=False)
+        self.svc.unregister_job(self.job_id)

@@ -1,0 +1,50 @@
+"""Simulated remote storage with a shared bandwidth budget.
+
+A token-bucket limiter shared by all fetch threads reproduces the paper's
+NFS bottleneck; with ``bandwidth=None`` the store is rate-unlimited (unit
+tests).  Fetches return the deterministic synthetic payload.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Optional
+
+from repro.data.synthetic import SyntheticDataset
+
+
+class BandwidthBudget:
+    def __init__(self, bytes_per_s: Optional[float]):
+        self.rate = bytes_per_s
+        self._lock = threading.Lock()
+        self._available_at = time.monotonic()
+        self.bytes_served = 0
+
+    def consume(self, nbytes: int) -> float:
+        """Blocks until the transfer 'completes'; returns the stall time."""
+        if self.rate is None:
+            self.bytes_served += nbytes
+            return 0.0
+        with self._lock:
+            now = time.monotonic()
+            start = max(now, self._available_at)
+            self._available_at = start + nbytes / self.rate
+            wait = self._available_at - now
+            self.bytes_served += nbytes
+        if wait > 0:
+            time.sleep(wait)
+        return max(wait, 0.0)
+
+
+class RemoteStorage:
+    def __init__(self, dataset: SyntheticDataset,
+                 bandwidth: Optional[float] = None):
+        self.dataset = dataset
+        self.budget = BandwidthBudget(bandwidth)
+        self.fetches = 0
+
+    def fetch(self, sample_id: int) -> bytes:
+        data = self.dataset.encoded(sample_id)
+        self.budget.consume(len(data))
+        self.fetches += 1
+        return data

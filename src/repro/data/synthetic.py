@@ -1,0 +1,79 @@
+"""Deterministic synthetic multimedia dataset.
+
+Samples are generated from a per-id PRNG so any worker on any host can
+materialize sample ``i`` without shared state — the property real object
+stores give you and the one checkpoint/restart relies on.
+
+Encoded sizes follow a lognormal around the dataset's mean (Table 6 stats),
+clipped to [0.25x, 4x] of the mean, mimicking JPEG size spread.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Tuple
+
+import numpy as np
+
+
+@dataclass(frozen=True)
+class SyntheticDataset:
+    name: str
+    n_samples: int
+    mean_encoded_bytes: int
+    image_hw: Tuple[int, int] = (256, 256)
+    crop_hw: Tuple[int, int] = (224, 224)
+    n_classes: int = 1000
+    seed: int = 1234
+
+    def encoded_size(self, sample_id: int) -> int:
+        rng = np.random.default_rng(self.seed + sample_id)
+        s = rng.lognormal(mean=0.0, sigma=0.35)
+        s = float(np.clip(s, 0.25, 4.0))
+        return max(int(self.mean_encoded_bytes * s), 1024)
+
+    def encoded(self, sample_id: int) -> bytes:
+        """The 'file on storage' for this sample (header + payload)."""
+        n = self.encoded_size(sample_id)
+        rng = np.random.default_rng(self.seed + sample_id)
+        # realistic cost: materialize the payload (I/O-sized buffer)
+        payload = rng.integers(0, 256, size=n, dtype=np.uint8)
+        return payload.tobytes()
+
+    def label(self, sample_id: int) -> int:
+        return (sample_id * 2654435761) % self.n_classes
+
+    def decode(self, encoded: bytes, sample_id: int) -> np.ndarray:
+        """'JPEG decode': deterministic uint8 HWC image derived from the
+        payload.  Does real CPU work proportional to the image area."""
+        h, w = self.image_hw
+        rng = np.random.default_rng(self.seed * 31 + sample_id)
+        img = rng.integers(0, 256, size=(h, w, 3), dtype=np.uint8)
+        # mix in payload statistics so decode actually reads the buffer
+        head = np.frombuffer(encoded[:4096], dtype=np.uint8)
+        img = (img.astype(np.int32) + int(head.sum()) % 256) % 256
+        return img.astype(np.uint8)
+
+    def decoded_bytes(self) -> int:
+        h, w = self.image_hw
+        return h * w * 3
+
+    def augmented_bytes(self, dtype_size: int = 4) -> int:
+        h, w = self.crop_hw
+        return h * w * 3 * dtype_size
+
+    def inflation(self, dtype_size: int = 4) -> float:
+        return self.augmented_bytes(dtype_size) / self.mean_encoded_bytes
+
+
+# paper-shaped datasets scaled down for CPU-runnable examples/tests
+def tiny(n: int = 2048, mean_bytes: int = 24_000) -> SyntheticDataset:
+    return SyntheticDataset("tiny", n, mean_bytes, image_hw=(64, 64),
+                            crop_hw=(56, 56), n_classes=100)
+
+
+def imagenet_like(n: int = 1_300_000) -> SyntheticDataset:
+    return SyntheticDataset("imagenet-1k-like", n, 114_620)
+
+
+def openimages_like(n: int = 1_900_000) -> SyntheticDataset:
+    return SyntheticDataset("openimages-like", n, 315_840)

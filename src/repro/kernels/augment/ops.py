@@ -1,0 +1,30 @@
+"""Public op: device-side fused augmentation with PRNG-driven parameters.
+
+``augment_batch(rng, images, crop)`` derives per-sample crop offsets and
+flips from a JAX key and dispatches to the Pallas kernel (interpret mode on
+CPU; compiled on TPU).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.augment.kernel import augment
+from repro.kernels.augment.ref import augment_ref
+
+
+def augment_batch(rng: jax.Array, images: jax.Array, crop_h: int,
+                  crop_w: int, *, use_kernel: bool = True,
+                  interpret: bool = True,
+                  out_dtype=jnp.bfloat16) -> jax.Array:
+    B, H, W, _ = images.shape
+    k1, k2, k3 = jax.random.split(rng, 3)
+    tops = jax.random.randint(k1, (B,), 0, H - crop_h + 1, jnp.int32)
+    lefts = jax.random.randint(k2, (B,), 0, W - crop_w + 1, jnp.int32)
+    flips = jax.random.bernoulli(k3, 0.5, (B,))
+    if use_kernel:
+        return augment(images, tops, lefts, flips.astype(jnp.int32),
+                       crop_h=crop_h, crop_w=crop_w, out_dtype=out_dtype,
+                       interpret=interpret)
+    return augment_ref(images, tops, lefts, flips, crop_h, crop_w,
+                       out_dtype=out_dtype)

@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for the fused augmentation kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+MEAN = jnp.array([0.485, 0.456, 0.406], jnp.float32)
+STD = jnp.array([0.229, 0.224, 0.225], jnp.float32)
+
+
+def augment_ref(images: jax.Array, tops: jax.Array, lefts: jax.Array,
+                flips: jax.Array, crop_h: int, crop_w: int,
+                out_dtype=jnp.bfloat16) -> jax.Array:
+    """Dequantize + crop + horizontal flip + normalize.
+
+    images: (B, H, W, 3) uint8;  tops/lefts: (B,) int32;  flips: (B,) bool.
+    Returns (B, crop_h, crop_w, 3) ``out_dtype``.
+    """
+    def one(img, top, left, flip):
+        crop = jax.lax.dynamic_slice(img, (top, left, 0),
+                                     (crop_h, crop_w, 3))
+        crop = jnp.where(flip, crop[:, ::-1, :], crop)
+        x = crop.astype(jnp.float32) / 255.0
+        return ((x - MEAN) / STD).astype(out_dtype)
+
+    return jax.vmap(one)(images, tops, lefts, flips)

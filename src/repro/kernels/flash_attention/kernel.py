@@ -1,0 +1,104 @@
+"""Blockwise causal flash attention (forward) in Pallas.
+
+MXU-aligned (q_block x k_block = 128x128 by default) tiles with the online
+softmax recurrence; running (max, sum, acc) state lives in VMEM scratch.
+The kv loop is the innermost grid dimension, so each (batch*head, q_block)
+pair streams K/V tiles HBM->VMEM exactly once.
+
+Causality is exploited structurally: kv blocks strictly above the diagonal
+are skipped via ``pl.when`` (no wasted MXU work — this halves the FLOPs vs
+a masked dense pass and is the kernel's main roofline win at 32k prefill).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  q_block: int, k_block: int, causal: bool, scale: float):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # skip fully-masked blocks (strictly above the causal diagonal)
+    if causal:
+        active = ki * k_block <= qi * q_block + q_block - 1
+    else:
+        active = ki >= 0
+
+    @pl.when(active)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)              # (qb, hd)
+        k = k_ref[0].astype(jnp.float32)              # (kb, hd)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
+        if causal:
+            qpos = qi * q_block + jax.lax.broadcasted_iota(
+                jnp.int32, (q_block, k_block), 0)
+            kpos = ki * k_block + jax.lax.broadcasted_iota(
+                jnp.int32, (q_block, k_block), 1)
+            s = jnp.where(kpos <= qpos, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        p = jnp.exp(s - m_new[:, None])
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1)
+        acc_ref[...] = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())))
+        m_ref[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finish():
+        o_ref[0] = (acc_ref[...] /
+                    jnp.maximum(l_ref[...], 1e-20)[:, None]
+                    ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "q_block", "k_block",
+                                             "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, q_block: int = 128,
+                    k_block: int = 128, interpret: bool = True) -> jax.Array:
+    """q/k/v: (B, H, S, hd) -> (B, H, S, hd)."""
+    B, H, S, hd = q.shape
+    q_block = min(q_block, S)
+    k_block = min(k_block, S)
+    assert S % q_block == 0 and S % k_block == 0
+    grid = (B * H, S // q_block, S // k_block)
+    qr = q.reshape(B * H, S, hd)
+    kr = k.reshape(B * H, S, hd)
+    vr = v.reshape(B * H, S, hd)
+    kernel = functools.partial(
+        _flash_kernel, q_block=q_block, k_block=k_block, causal=causal,
+        scale=1.0 / (hd ** 0.5))
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, q_block, hd), lambda b, qi, ki: (b, qi, 0)),
+            pl.BlockSpec((1, k_block, hd), lambda b, qi, ki: (b, ki, 0)),
+            pl.BlockSpec((1, k_block, hd), lambda b, qi, ki: (b, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, q_block, hd), lambda b, qi, ki: (b, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B * H, S, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((q_block,), jnp.float32),
+            pltpu.VMEM((q_block,), jnp.float32),
+            pltpu.VMEM((q_block, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qr, kr, vr)
+    return out.reshape(B, H, S, hd)

@@ -1,0 +1,28 @@
+"""Public op: GQA-aware flash attention dispatch.
+
+``flash_mha(q, k, v)`` accepts model-layout (B, S, H, hd) tensors with
+grouped KV heads, expands the grouping, and calls the Pallas kernel
+(interpret on CPU, compiled on TPU).  Set ``attn_impl="splash"`` in
+ParallelismConfig to route model attention here.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention
+
+
+def flash_mha(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              causal: bool = True, interpret: bool = True) -> jax.Array:
+    """q: (B, Sq, H, hd); k/v: (B, Sk, K, hd) with H % K == 0."""
+    B, S, H, hd = q.shape
+    K = k.shape[2]
+    if K != H:                       # expand grouped KV heads
+        k = jnp.repeat(k, H // K, axis=2)
+        v = jnp.repeat(v, H // K, axis=2)
+    qt = jnp.swapaxes(q, 1, 2)       # (B, H, S, hd)
+    kt = jnp.swapaxes(k, 1, 2)
+    vt = jnp.swapaxes(v, 1, 2)
+    out = flash_attention(qt, kt, vt, causal=causal, interpret=interpret)
+    return jnp.swapaxes(out, 1, 2)

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for blockwise causal attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                  causal: bool = True) -> jax.Array:
+    """q/k/v: (B, H, S, hd).  fp32 softmax, output in q.dtype."""
+    S = q.shape[2]
+    scores = jnp.einsum("bhqd,bhkd->bhqk", q, k).astype(jnp.float32)
+    scores = scores / (q.shape[-1] ** 0.5)
+    if causal:
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        scores = jnp.where(mask[None, None], scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", probs.astype(q.dtype), v)

@@ -1,0 +1,15 @@
+"""Public op: SSD scan entry point with kernel/reference dispatch."""
+from __future__ import annotations
+
+import jax
+
+from repro.kernels.ssd_scan.kernel import ssd_scan
+from repro.kernels.ssd_scan.ref import ssd_ref
+
+
+def ssd(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
+        Cm: jax.Array, *, chunk: int = 128, use_kernel: bool = True,
+        interpret: bool = True):
+    if use_kernel:
+        return ssd_scan(x, dt, A, Bm, Cm, chunk=chunk, interpret=interpret)
+    return ssd_ref(x, dt, A, Bm, Cm)

@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the SSD chunked scan: the naive O(S) recurrence."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x: jax.Array, dt: jax.Array, A: jax.Array, Bm: jax.Array,
+            Cm: jax.Array, h0=None):
+    """Sequential SSD recurrence (ground truth).
+
+    x: (B, S, nh, P); dt: (B, S, nh) post-softplus; A: (nh,) negative;
+    Bm/Cm: (B, S, N).  Returns (y (B,S,nh,P), h_final (B,nh,P,N)).
+    """
+    Bsz, S, nh, P = x.shape
+    N = Bm.shape[-1]
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, nh, P, N), jnp.float32)
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp                       # (B,nh,P),(B,nh),(B,N)x2
+        decay = jnp.exp(dtt * A)                    # (B, nh)
+        upd = jnp.einsum("bh,bn,bhp->bhpn", dtt, bt, xt)
+        h = h * decay[..., None, None] + upd
+        y = jnp.einsum("bn,bhpn->bhp", ct, h)
+        return h, y
+
+    xs = (jnp.moveaxis(x.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(dt.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(Bm.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(Cm.astype(jnp.float32), 1, 0))
+    h_final, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), h_final

@@ -1,0 +1,39 @@
+"""Production mesh construction.
+
+A function (not a module-level constant) so importing this module never
+touches jax device state.  Single pod: 16x16 = 256 chips (data, model).
+Multi-pod: 2x16x16 = 512 chips (pod, data, model) — the 'pod' axis is the
+DCN dimension.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for the production mesh, have "
+            f"{len(devices)}; the dry-run launcher must set "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count=512 before "
+            f"any jax import")
+    auto = (jax.sharding.AxisType.Auto,) * len(axes)
+    return jax.make_mesh(shape, axes, axis_types=auto, devices=devices[:n])
+
+
+def make_debug_mesh(n_devices: int = 0, axes=("data", "model")):
+    """Small mesh over whatever devices exist (tests)."""
+    devs = jax.devices()
+    n = n_devices or len(devs)
+    model = 1
+    for m in (4, 2, 1):
+        if n % m == 0 and n >= m:
+            model = m
+            break
+    mesh_devs = np.asarray(devs[:n]).reshape(n // model, model)
+    return jax.sharding.Mesh(mesh_devs, axes)

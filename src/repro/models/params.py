@@ -1,0 +1,106 @@
+"""Parameter definition system.
+
+Models declare their parameters once as a pytree of :class:`ParamDef`
+(shape + logical axis names + initializer).  From that single source of
+truth we derive:
+
+* ``init_params``        — materialized arrays (seeded, per-leaf fold-in)
+* ``abstract_params``    — ShapeDtypeStructs for the dry-run (no allocation)
+* ``partition_specs``    — PartitionSpec pytree under a logical->mesh rule set
+
+Logical axis vocabulary (see distributed/sharding.py for the rules):
+  layers, embed, q_heads, kv_heads, mlp, vocab, expert, ssm_inner,
+  ssm_state, conv, classes, pos
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+
+@dataclass(frozen=True)
+class ParamDef:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]
+    init: str = "normal"          # normal | zeros | ones | embed | small
+    scale: float = 1.0            # multiplier on the default fan-in scale
+    dtype: Any = None             # None -> use global param dtype
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _init_leaf(key, d: ParamDef, dtype) -> jax.Array:
+    dt = d.dtype or dtype
+    if d.init == "zeros":
+        return jnp.zeros(d.shape, dt)
+    if d.init == "ones":
+        return jnp.ones(d.shape, dt)
+    if d.init == "embed":
+        return (jax.random.normal(key, d.shape, jnp.float32) * 0.02 * d.scale
+                ).astype(dt)
+    # fan-in scaled normal (truncation unnecessary at these scales)
+    fan_in = d.shape[-2] if len(d.shape) >= 2 else d.shape[-1]
+    std = d.scale / np.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, d.shape, jnp.float32) * std).astype(dt)
+
+
+def _is_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def init_params(rng: jax.Array, defs, dtype=jnp.bfloat16):
+    """Materialize a ParamDef pytree into arrays (deterministic per path)."""
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=_is_def)
+    keys = jax.random.split(rng, len(leaves))
+    out = [_init_leaf(k, d, dtype) for k, d in zip(keys, leaves)]
+    return jax.tree.unflatten(treedef, out)
+
+
+def abstract_params(defs, dtype=jnp.bfloat16):
+    """ShapeDtypeStruct pytree — feeds .lower() without any allocation."""
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, d.dtype or dtype),
+        defs, is_leaf=_is_def)
+
+
+def partition_specs(defs, rules: Dict[str, Any]):
+    """Map logical axes -> mesh axes via ``rules`` (missing/None -> replicated)."""
+    def spec(d: ParamDef) -> P:
+        return P(*[rules.get(a) if a is not None else None for a in d.axes])
+    return jax.tree.map(spec, defs, is_leaf=_is_def)
+
+
+def param_count(defs) -> int:
+    return sum(int(np.prod(d.shape))
+               for d in jax.tree.leaves(defs, is_leaf=_is_def))
+
+
+def param_bytes(defs, dtype=jnp.bfloat16) -> int:
+    total = 0
+    for d in jax.tree.leaves(defs, is_leaf=_is_def):
+        dt = jnp.dtype(d.dtype or dtype)
+        total += int(np.prod(d.shape)) * dt.itemsize
+    return total
+
+
+def stack_defs(defs, layers: int):
+    """Prepend a scanned ``layers`` dimension to every ParamDef in a tree."""
+    return jax.tree.map(
+        lambda d: ParamDef((layers,) + d.shape, ("layers",) + d.axes,
+                           init=d.init, scale=d.scale, dtype=d.dtype),
+        defs, is_leaf=_is_def)
+
+
+def round_up(x: int, m: int) -> int:
+    return -(-x // m) * m
+
+
+def padded_vocab(vocab: int, multiple: int = 2048) -> int:
+    """Pad vocab so embedding/logits shard 16-way with 128-lane alignment."""
+    return round_up(vocab, multiple)

@@ -1,0 +1,238 @@
+"""Mamba2 block (SSD — state-space duality, arXiv:2405.21060).
+
+Chunked SSD algorithm, jnp reference implementation (the Pallas kernel in
+``kernels/ssd_scan`` accelerates the same computation on TPU; both share this
+module's parameterization).
+
+Layout: d_inner = expand * d_model, nh = d_inner / head_dim SSD heads,
+ngroups = 1 (B, C shared across heads).  TP shards heads (``ssm_inner``)
+over 'model'; B/C/dt projections are tiny and replicated.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.sharding import shard
+from repro.models.params import ParamDef
+
+F32 = jnp.float32
+
+
+def ssm_defs(cfg: ModelConfig) -> Dict:
+    d = cfg.d_model
+    s = cfg.ssm
+    d_in = s.expand * d
+    nh = d_in // s.head_dim
+    return {
+        "wz": ParamDef((d, d_in), ("embed", "ssm_inner")),
+        "wx": ParamDef((d, d_in), ("embed", "ssm_inner")),
+        "wB": ParamDef((d, s.d_state), ("embed", "ssm_state")),
+        "wC": ParamDef((d, s.d_state), ("embed", "ssm_state")),
+        "wdt": ParamDef((d, nh), ("embed", "ssm_inner")),
+        "dt_bias": ParamDef((nh,), ("ssm_inner",), init="zeros"),
+        "A_log": ParamDef((nh,), ("ssm_inner",), init="zeros"),
+        "D_skip": ParamDef((nh,), ("ssm_inner",), init="ones"),
+        "conv_x": ParamDef((s.d_conv, d_in), ("conv", "ssm_inner"), scale=0.5),
+        "conv_B": ParamDef((s.d_conv, s.d_state), ("conv", "ssm_state"),
+                           scale=0.5),
+        "conv_C": ParamDef((s.d_conv, s.d_state), ("conv", "ssm_state"),
+                           scale=0.5),
+        "norm": ParamDef((d_in,), ("ssm_inner",), init="ones"),
+        "wo": ParamDef((d_in, d), ("ssm_inner", "embed"),
+                       scale=1.0 / max(1, (2 * cfg.n_layers)) ** 0.5),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array) -> jax.Array:
+    """Depthwise causal conv. x: (B, S, C), w: (K, C)."""
+    K = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x, dtype=F32)
+    for i in range(K):
+        out = out + xp[:, i:i + x.shape[1], :].astype(F32) * w[i].astype(F32)
+    return jax.nn.silu(out).astype(x.dtype)
+
+
+def _ssd_chunked(xh, dt, A, Bmat, Cmat, chunk: int, h0=None,
+                 head_group: int = 0) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan, optionally lax.map'd over head groups.
+
+    ``head_group > 0`` bounds the peak (B,nc,c,c,hg) decay tensor on a single
+    host (smoke tests); under TP the per-device head count is already small
+    and grouping would fight the 'model'-axis sharding, so it stays off.
+    """
+    nh = xh.shape[2]
+    if head_group and nh > head_group and nh % head_group == 0:
+        G = nh // head_group
+        Bsz, S, _, Pd = xh.shape
+        if h0 is None:
+            h0 = jnp.zeros((Bsz, nh, Pd, Bmat.shape[-1]), F32)
+        xg = jnp.moveaxis(xh.reshape(Bsz, S, G, head_group, Pd), 2, 0)
+        dtg = jnp.moveaxis(dt.reshape(Bsz, S, G, head_group), 2, 0)
+        Ag = A.reshape(G, head_group)
+        hg = jnp.moveaxis(
+            h0.reshape(Bsz, G, head_group, Pd, h0.shape[-1]), 1, 0)
+
+        def f(args):
+            xi, di, ai, hi = args
+            return _ssd_core(xi, di, ai, Bmat, Cmat, chunk, hi)
+
+        ys, hs = jax.lax.map(f, (xg, dtg, Ag, hg))
+        y = jnp.moveaxis(ys, 0, 2).reshape(Bsz, S, nh, Pd)
+        h = jnp.moveaxis(hs, 0, 1).reshape(Bsz, nh, Pd, h0.shape[-1])
+        return y, h
+    return _ssd_core(xh, dt, A, Bmat, Cmat, chunk, h0)
+
+
+def _ssd_core(xh, dt, A, Bmat, Cmat, chunk: int,
+              h0=None) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD scan.
+
+    xh: (B, S, nh, P); dt: (B, S, nh) (post-softplus); A: (nh,) negative;
+    Bmat/Cmat: (B, S, N).  Returns (y (B,S,nh,P), final state (B,nh,P,N)).
+    """
+    Bsz, S, nh, Pd = xh.shape
+    N = Bmat.shape[-1]
+    nc = S // chunk
+    xc = xh.reshape(Bsz, nc, chunk, nh, Pd)
+    dtc = dt.reshape(Bsz, nc, chunk, nh).astype(F32)
+    Bc = Bmat.reshape(Bsz, nc, chunk, N)
+    Cc = Cmat.reshape(Bsz, nc, chunk, N)
+
+    dA = dtc * A.astype(F32)                       # (B, nc, c, nh), negative
+    cum = jnp.cumsum(dA, axis=2)                   # within-chunk cumulative
+    seg_sum = cum[:, :, -1, :]                     # (B, nc, nh)
+
+    # ---- intra-chunk (dense, quadratic in chunk) ----
+    # decay(i, j) = exp(cum_i - cum_j) for j <= i
+    li = cum[:, :, :, None, :]                     # (B,nc,c,1,nh)
+    lj = cum[:, :, None, :, :]                     # (B,nc,1,c,nh)
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))[None, None, :, :, None]
+    decay = jnp.where(mask, jnp.exp(li - lj), 0.0)  # (B,nc,c,c,nh)
+    cb = jnp.einsum("bcin,bcjn->bcij", Cc.astype(F32), Bc.astype(F32))
+    w = cb[..., None] * decay                       # (B,nc,c,c,nh)
+    xdt = xc.astype(F32) * dtc[..., None]           # (B,nc,c,nh,P)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", w, xdt)
+
+    # ---- chunk states ----
+    # state_c = sum_j exp(seg_sum - cum_j) * dt_j * B_j (x) x_j
+    sdecay = jnp.exp(seg_sum[:, :, None, :] - cum)  # (B,nc,c,nh)
+    states = jnp.einsum("bcjn,bcjh,bcjhp->bchpn",
+                        Bc.astype(F32), sdecay * dtc, xc.astype(F32))
+
+    # ---- inter-chunk recurrence over nc (sequential scan) ----
+    if h0 is None:
+        h0 = jnp.zeros((Bsz, nh, Pd, N), F32)
+
+    def step(h, inp):
+        st, seg = inp                               # (B,nh,P,N), (B,nh)
+        h_new = h * jnp.exp(seg)[:, :, None, None] + st
+        return h_new, h
+
+    states_t = jnp.moveaxis(states, 1, 0)           # (nc, B, nh, P, N)
+    seg_t = jnp.moveaxis(seg_sum, 1, 0)             # (nc, B, nh)
+    h_final, h_prev = jax.lax.scan(step, h0, (states_t, seg_t))
+    h_prev = jnp.moveaxis(h_prev, 0, 1)             # (B, nc, nh, P, N)
+
+    # ---- contribution of carried-in state to each position ----
+    y_inter = jnp.einsum("bcin,bchpn,bcih->bcihp",
+                         Cc.astype(F32), h_prev, jnp.exp(cum))
+    y = (y_intra + y_inter).reshape(Bsz, S, nh, Pd)
+    return y.astype(xh.dtype), h_final
+
+
+def ssm_block(p: Dict, x: jax.Array, cfg: ModelConfig,
+              h0=None, conv_state=None, *, return_state: bool = False):
+    """Full-sequence Mamba2 block. x: (B, S, D)."""
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    nh = d_in // s.head_dim
+
+    z = jnp.einsum("bsd,di->bsi", x, p["wz"])
+    xs = jnp.einsum("bsd,di->bsi", x, p["wx"])
+    Bm = jnp.einsum("bsd,dn->bsn", x, p["wB"])
+    Cm = jnp.einsum("bsd,dn->bsn", x, p["wC"])
+    dt = jnp.einsum("bsd,dh->bsh", x, p["wdt"])
+    xs = shard(xs, "batch", "act_seq", "act_inner")
+    z = shard(z, "batch", "act_seq", "act_inner")
+
+    xs = _causal_conv(xs, p["conv_x"])
+    Bm = _causal_conv(Bm, p["conv_B"])
+    Cm = _causal_conv(Cm, p["conv_C"])
+
+    dt = jax.nn.softplus(dt.astype(F32) + p["dt_bias"].astype(F32))
+    A = -jnp.exp(p["A_log"].astype(F32))
+
+    xh = xs.reshape(*xs.shape[:2], nh, s.head_dim)
+    from repro.distributed.sharding import current_rules
+    hg = 0 if current_rules().enabled else 8
+    y, h_final = _ssd_chunked(xh, dt, A, Bm, Cm, min(s.chunk, xs.shape[1]),
+                              h0, head_group=hg)
+    y = y + xh.astype(F32).astype(y.dtype) * p["D_skip"].astype(y.dtype)[None, None, :, None]
+    y = y.reshape(*xs.shape[:2], d_in)
+    y = y * jax.nn.silu(z.astype(F32)).astype(y.dtype)
+    # gated RMSNorm (Mamba2 normalizes after gating)
+    yf = y.astype(F32)
+    y = (yf * jax.lax.rsqrt(jnp.mean(yf * yf, -1, keepdims=True) + cfg.norm_eps)
+         * p["norm"].astype(F32)).astype(x.dtype)
+    rules = current_rules()
+    if rules.enabled and rules.mapping.get("ssm_gather_out"):
+        # comm strategy: gather the inner-sharded y (bytes/4 vs psum of the
+        # projected output) and run the out-proj redundantly per rank
+        y = shard(y, "batch", "act_seq", None)
+    out = jnp.einsum("bsi,id->bsd", y, p["wo"])
+    out = shard(out, "batch", "act_seq", "act_embed")
+    if return_state:
+        return out, h_final
+    return out
+
+
+def ssm_decode_step(p: Dict, x: jax.Array, cfg: ModelConfig,
+                    h: jax.Array, conv_buf: jax.Array):
+    """Single-token recurrent step.
+
+    x: (B, 1, D); h: (B, nh, P, N) fp32 state;
+    conv_buf: (B, d_conv-1, d_in + 2N) previous conv inputs.
+    Returns (y (B,1,D), h_new, conv_buf_new).
+    """
+    s = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    nh = d_in // s.head_dim
+    Bsz = x.shape[0]
+
+    z = jnp.einsum("bsd,di->bsi", x, p["wz"])[:, 0]
+    xs = jnp.einsum("bsd,di->bsi", x, p["wx"])[:, 0]
+    Bm = jnp.einsum("bsd,dn->bsn", x, p["wB"])[:, 0]
+    Cm = jnp.einsum("bsd,dn->bsn", x, p["wC"])[:, 0]
+    dt = jnp.einsum("bsd,dh->bsh", x, p["wdt"])[:, 0]
+
+    # rolling causal conv over the last d_conv inputs
+    cat = jnp.concatenate([xs, Bm, Cm], axis=-1)          # (B, d_in+2N)
+    hist = jnp.concatenate([conv_buf, cat[:, None, :]], axis=1)
+    new_buf = hist[:, 1:, :]
+    wfull = jnp.concatenate([p["conv_x"], p["conv_B"], p["conv_C"]], axis=-1)
+    conv = jnp.einsum("bkc,kc->bc", hist.astype(F32), wfull.astype(F32))
+    conv = jax.nn.silu(conv)
+    xs = conv[:, :d_in].astype(x.dtype)
+    Bm = conv[:, d_in:d_in + s.d_state].astype(x.dtype)
+    Cm = conv[:, d_in + s.d_state:].astype(x.dtype)
+
+    dt = jax.nn.softplus(dt.astype(F32) + p["dt_bias"].astype(F32))  # (B, nh)
+    A = -jnp.exp(p["A_log"].astype(F32))
+    xh = xs.reshape(Bsz, nh, s.head_dim).astype(F32)
+
+    decay = jnp.exp(dt * A)                                # (B, nh)
+    upd = jnp.einsum("bh,bn,bhp->bhpn", dt, Bm.astype(F32), xh)
+    h_new = h * decay[:, :, None, None] + upd
+    y = jnp.einsum("bn,bhpn->bhp", Cm.astype(F32), h_new)
+    y = y + xh * p["D_skip"].astype(F32)[None, :, None]
+    y = y.reshape(Bsz, d_in)
+    y = y * jax.nn.silu(z.astype(F32))
+    y = (y * jax.lax.rsqrt(jnp.mean(y * y, -1, keepdims=True) + cfg.norm_eps)
+         * p["norm"].astype(F32))
+    out = jnp.einsum("bi,id->bd", y.astype(x.dtype), p["wo"])[:, None, :]
+    return shard(out, "batch", None, "act_embed"), h_new, new_buf

@@ -1,0 +1,118 @@
+"""Roofline terms from the compiled dry-run artifact (TPU v5e targets).
+
+    compute    = HLO_FLOPs / (chips x 197 TFLOP/s)
+    memory     = HLO_bytes / (chips x 819 GB/s)
+    collective = wire_bytes / (chips x 50 GB/s per ICI link)
+
+cost_analysis() and the HLO module are per-device programs, so the
+per-device numbers ARE the per-chip terms; chips enter when converting
+model-level FLOPs (6ND) to per-chip work.
+
+Known XLA caveat (measured in EXPERIMENTS.md §Dry-run): CPU-backend
+cost_analysis does not multiply ``while``-loop bodies by trip count, so a
+scan-over-layers program under-reports by ~n_layers.  We therefore report
+BOTH the raw cost_analysis numbers and analytic MODEL_FLOPS (6·N·D dense /
+6·N_active·D MoE + attention) and derive the roofline from whichever is
+self-consistent (see ``flops_source`` in each record).
+"""
+from __future__ import annotations
+
+from dataclasses import asdict, dataclass, field
+from typing import Dict, Optional
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+PEAK_FLOPS = 197e12          # bf16 per chip
+HBM_BW = 819e9               # B/s per chip
+ICI_BW = 50e9                # B/s per link (1 link per axis-neighbor)
+DCN_BW = 25e9                # B/s per pod for the 'pod' axis
+
+
+@dataclass
+class RooflineRecord:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    # raw artifact numbers (per device)
+    hlo_flops_per_dev: float
+    hlo_bytes_per_dev: float
+    wire_bytes_per_dev: float
+    collectives: Dict[str, float]
+    # analytic
+    model_flops: float               # global, 6ND(+attn) per step
+    flops_source: str
+    # derived terms (seconds)
+    t_compute: float = 0.0
+    t_memory: float = 0.0
+    t_collective: float = 0.0
+    bottleneck: str = ""
+    useful_ratio: float = 0.0        # MODEL_FLOPS / (HLO flops global)
+    roofline_fraction: float = 0.0   # t_compute / max(all terms)
+    note: str = ""
+
+    def finalize(self) -> "RooflineRecord":
+        hlo_global = self.hlo_flops_per_dev * self.chips
+        self.t_compute = self.hlo_flops_per_dev / PEAK_FLOPS
+        self.t_memory = self.hlo_bytes_per_dev / HBM_BW
+        self.t_collective = self.wire_bytes_per_dev / ICI_BW
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        self.bottleneck = max(terms, key=terms.get)
+        self.useful_ratio = (self.model_flops / hlo_global
+                             if hlo_global else 0.0)
+        tmax = max(terms.values())
+        self.roofline_fraction = self.t_compute / tmax if tmax else 0.0
+        return self
+
+
+def attention_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """Dot-product attention FLOPs per training/prefill step (fwd only)."""
+    if cfg.n_heads == 0:
+        return 0.0
+    B, S = shape.global_batch, shape.seq_len
+    hd = cfg.resolved_head_dim
+    layers = cfg.n_layers + cfg.n_encoder_layers
+    # causal: S^2/2 per pair of (qk, av) matmuls
+    return 2.0 * layers * B * (S * S / 2) * cfg.n_heads * hd * 2
+
+
+def model_flops(cfg: ModelConfig, shape: ShapeConfig) -> float:
+    """6·N·D (dense) or 6·N_active·D (MoE) + attention term.
+
+    Training: 6ND (fwd+bwd).  Prefill: 2ND (fwd only).  Decode: 2N per
+    token x batch.
+    """
+    n_active = cfg.n_active_params()
+    B, S = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        flops = 6.0 * n_active * B * S + 3.0 * attention_flops(cfg, shape)
+    elif shape.kind == "prefill":
+        flops = 2.0 * n_active * B * S + attention_flops(cfg, shape)
+    else:  # decode: one token per sequence; attention reads the S-cache
+        hd = cfg.resolved_head_dim
+        attn = (2.0 * cfg.n_layers * B * S * cfg.n_heads * hd * 2
+                if cfg.n_heads else 0.0)
+        flops = 2.0 * n_active * B + attn
+    return flops
+
+
+def build_record(*, arch: str, shape: ShapeConfig, cfg: ModelConfig,
+                 mesh_name: str, chips: int, cost: Dict,
+                 wire_bytes: float, collectives: Dict[str, float],
+                 note: str = "") -> RooflineRecord:
+    hlo_flops = float(cost.get("flops", 0.0))
+    hlo_bytes = float(cost.get("bytes accessed", 0.0))
+    mf = model_flops(cfg, shape)
+    # XLA-CPU cost_analysis does not multiply while-loop (scan) bodies;
+    # detect gross under-count and substitute the analytic floor.
+    src = "cost_analysis"
+    if hlo_flops * chips < 0.5 * mf:
+        hlo_flops = mf / chips
+        src = "analytic_6ND(cost_analysis_undercounts_loops)"
+    rec = RooflineRecord(
+        arch=arch, shape=shape.name, mesh=mesh_name, chips=chips,
+        hlo_flops_per_dev=hlo_flops, hlo_bytes_per_dev=hlo_bytes,
+        wire_bytes_per_dev=wire_bytes, collectives=dict(collectives),
+        model_flops=mf, flops_source=src, note=note)
+    return rec.finalize()

@@ -1,0 +1,173 @@
+"""Collective-byte accounting from compiled HLO text.
+
+``cost_analysis()`` does not expose collective traffic, so we parse the
+post-SPMD module: every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute op is matched, its result shape sized, and
+ring-algorithm wire-byte factors applied per op kind and replica-group
+size.  Numbers are per-device (the SPMD module is a per-device program).
+
+Loop awareness: a scan-over-layers program holds its per-layer collectives
+inside a ``while`` body that executes ``n_layers`` times.  We segment the
+module into computations, extract each while loop's trip count from its
+condition's comparison constant, and multiply collective bytes by the
+product of enclosing trip counts (nested scans compose, e.g. microbatch
+accumulation x layers).
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+# e.g.:  %ag = bf16[16,1024]{1,0} all-gather(...), replica_groups={{0,1,..}}
+_OP_RE = re.compile(
+    r"=\s*(?:\()?\s*((?:[a-z0-9]+\[[0-9,]*\][^ ]*\s*,?\s*)+)\s*"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{?\{([0-9, ]+)\}")
+# iota form: replica_groups=[n_groups,group_size]<=[...]
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+_PAIRS_RE = re.compile(r"source_target_pairs=\{")
+
+
+def _shape_bytes(shapes_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shapes_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    per_kind_bytes: Dict[str, float] = field(
+        default_factory=lambda: defaultdict(float))
+    per_kind_count: Dict[str, int] = field(
+        default_factory=lambda: defaultdict(int))
+
+    @property
+    def total_wire_bytes(self) -> float:
+        return sum(self.per_kind_bytes.values())
+
+    def summary(self) -> Dict[str, float]:
+        out = {f"{k}_bytes": v for k, v in self.per_kind_bytes.items()}
+        out.update({f"{k}_count": v for k, v in self.per_kind_count.items()})
+        out["total_wire_bytes"] = self.total_wire_bytes
+        return out
+
+
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->\s*\S.*\{$")
+_WHILE_RE = re.compile(
+    r"while\(.*condition=%?([\w.\-]+),\s*body=%?([\w.\-]+)")
+_CALL_RE = re.compile(r"(?:calls=|to_apply=)%?([\w.\-]+)")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+
+def _wire_bytes(line: str, kind: str) -> float:
+    m = _OP_RE.search(line)
+    shapes_str = m.group(1)
+    out_bytes = _shape_bytes(shapes_str)
+    g = 2
+    gm = _GROUPS_IOTA_RE.search(line)
+    if gm:
+        g = max(int(gm.group(2)), 2)
+    else:
+        gm = _GROUPS_RE.search(line)
+        if gm:
+            g = max(len(gm.group(1).split(",")), 2)
+    if kind == "all-reduce":
+        return out_bytes * 2.0 * (g - 1) / g
+    if kind == "all-gather":
+        return out_bytes * (g - 1) / g            # output = gathered size
+    if kind == "reduce-scatter":
+        return out_bytes * (g - 1)                # output = scattered shard
+    if kind == "all-to-all":
+        return out_bytes * (g - 1) / g
+    return out_bytes                              # collective-permute
+
+
+def _segment(hlo_text: str) -> Dict[str, List[str]]:
+    """computation name -> its lines."""
+    comps: Dict[str, List[str]] = {}
+    cur: List[str] = []
+    name = "__preamble__"
+    for line in hlo_text.splitlines():
+        m = _COMP_RE.match(line.strip())
+        if m and "{" in line:
+            name = m.group(1)
+            cur = []
+            comps[name] = cur
+        else:
+            cur.append(line) if name in comps else None
+    return comps
+
+
+def analyze(hlo_text: str) -> CollectiveStats:
+    comps = _segment(hlo_text)
+    if not comps:
+        comps = {"__all__": hlo_text.splitlines()}
+
+    # trip count of each while condition: the largest int constant compared
+    trip_of_cond: Dict[str, int] = {}
+    for cname, lines in comps.items():
+        consts = [int(c) for ln in lines for c in _CONST_RE.findall(ln)]
+        trip_of_cond[cname] = max(consts) if consts else 1
+
+    # per-computation: own collectives + callees with multipliers
+    own: Dict[str, CollectiveStats] = {}
+    calls: Dict[str, List[Tuple[str, int]]] = {}
+    for cname, lines in comps.items():
+        st = CollectiveStats()
+        cl: List[Tuple[str, int]] = []
+        for line in lines:
+            m = _OP_RE.search(line)
+            if m:
+                kind = m.group(2)
+                st.per_kind_bytes[kind] += _wire_bytes(line, kind)
+                st.per_kind_count[kind] += 1
+            w = _WHILE_RE.search(line)
+            if w:
+                cond, body = w.group(1), w.group(2)
+                cl.append((body, max(trip_of_cond.get(cond, 1), 1)))
+            else:
+                for callee in _CALL_RE.findall(line):
+                    cl.append((callee, 1))
+        own[cname] = st
+        calls[cname] = cl
+
+    # entry = computation that nobody calls (fall back to the largest)
+    called = {b for cl in calls.values() for b, _ in cl}
+    roots = [c for c in comps if c not in called]
+    entry = max(roots or comps, key=lambda c: len(comps[c]))
+
+    total = CollectiveStats()
+    seen: set = set()
+
+    def accumulate(cname: str, mult: float, depth: int = 0) -> None:
+        if depth > 12 or cname not in own:
+            return
+        key = (cname, round(mult, 3))
+        st = own[cname]
+        for k, v in st.per_kind_bytes.items():
+            total.per_kind_bytes[k] += v * mult
+        for k, v in st.per_kind_count.items():
+            total.per_kind_count[k] += int(v * mult)
+        for callee, trips in calls[cname]:
+            accumulate(callee, mult * trips, depth + 1)
+
+    accumulate(entry, 1.0)
+    return total

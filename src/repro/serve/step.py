@@ -1,0 +1,92 @@
+"""Serving steps: batched prefill + decode with KV caches.
+
+``Server`` implements simple continuous batching over a fixed slot count:
+requests occupy slots, prefill fills the slot's cache region, decode steps
+advance all active slots in lockstep (one jitted decode_step per token).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.model import Model
+
+
+@dataclasses.dataclass
+class Request:
+    req_id: int
+    prompt: np.ndarray           # (prompt_len,) int32
+    max_new: int = 16
+    # runtime
+    generated: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class Server:
+    """Batched decode over ``n_slots`` sequences with a shared jitted step."""
+
+    def __init__(self, model: Model, params, n_slots: int, s_max: int):
+        self.model = model
+        self.params = params
+        self.n_slots = n_slots
+        self.s_max = s_max
+        self.cache = model.init_cache(batch=n_slots, s_max=s_max)
+        self.pos = np.zeros(n_slots, np.int64)
+        self.slots: List[Optional[Request]] = [None] * n_slots
+        self._decode = jax.jit(model.decode_step)
+        self.steps = 0
+
+    def add_request(self, req: Request) -> bool:
+        for i, s in enumerate(self.slots):
+            if s is None:
+                self.slots[i] = req
+                self.pos[i] = 0
+                # sequential prefill through the decode path keeps one
+                # compiled program; bulk prefill is model.prefill
+                for t in req.prompt:
+                    self._step_slot(i, int(t))
+                return True
+        return False
+
+    def _step_slot(self, slot: int, token: int) -> int:
+        tokens = np.zeros((self.n_slots, 1), np.int32)
+        tokens[slot, 0] = token
+        logits, self.cache = self._decode(
+            self.params, self.cache, jnp.asarray(tokens),
+            jnp.int32(self.pos[slot]))
+        self.pos[slot] += 1
+        self.steps += 1
+        return int(jnp.argmax(logits[slot, 0, :self.model.cfg.vocab_size]))
+
+    def decode_round(self) -> int:
+        """One lockstep decode for all active slots; returns #active."""
+        active = [i for i, s in enumerate(self.slots)
+                  if s is not None and not s.done]
+        if not active:
+            return 0
+        tokens = np.zeros((self.n_slots, 1), np.int32)
+        for i in active:
+            req = self.slots[i]
+            tokens[i, 0] = req.generated[-1] if req.generated else \
+                int(req.prompt[-1])
+        # all slots share one position index in this simple scheduler:
+        # use per-slot max; decode_step takes a scalar index so we step the
+        # furthest slot's position (slots are prefilling in lockstep in the
+        # examples; ragged positions are future work).
+        idx = int(self.pos[active].max())
+        logits, self.cache = self._decode(
+            self.params, self.cache, jnp.asarray(tokens), jnp.int32(idx))
+        for i in active:
+            req = self.slots[i]
+            nxt = int(jnp.argmax(logits[i, 0, :self.model.cfg.vocab_size]))
+            req.generated.append(nxt)
+            self.pos[i] = idx + 1
+            if len(req.generated) >= req.max_new:
+                req.done = True    # caller harvests and frees the slot
+        self.steps += 1
+        return len(active)

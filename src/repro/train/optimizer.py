@@ -1,0 +1,174 @@
+"""AdamW with memory-tiered optimizer state (no optax dependency).
+
+Moment dtype options per ParallelismConfig.opt_state_dtype:
+* ``float32``  — classic AdamW;
+* ``bfloat16`` — halves optimizer HBM (used for the >=100B dense archs);
+* ``int8``     — blockwise-quantized moments (scale per trailing block of
+  256), the trick that lets kimi-k2-1t train on 2 pods (DESIGN.md §3 /
+  EXPERIMENTS.md memory budget).
+
+States inherit the parameter PartitionSpecs, so FSDP shards them over
+'data' automatically.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+QBLOCK = 256
+
+
+class Quantized(NamedTuple):
+    q: jax.Array          # int8 payload
+    scale: jax.Array      # fp32 per-block scales
+
+
+def _blocks(x: jax.Array) -> Tuple[jax.Array, bool]:
+    """Blocked view.  Structure-preserving when the trailing axis divides
+    QBLOCK: shape (..., D) -> (..., D/Q, Q), so the quantized state keeps
+    the parameter's leading axes and inherits its PartitionSpec — without
+    this, sharded optimizers re-shard full fp32 moment tensors every step
+    (the §Perf kimi-k2 iteration-2 finding: 7.7 TB/step of all-gathers)."""
+    if x.ndim >= 1 and x.shape[-1] % QBLOCK == 0:
+        return x.reshape(*x.shape[:-1], x.shape[-1] // QBLOCK, QBLOCK), True
+    flat = x.reshape(-1)
+    pad = (-flat.shape[0]) % QBLOCK
+    return jnp.pad(flat, (0, pad)).reshape(-1, QBLOCK), False
+
+
+def _unblocks(blocks: jax.Array, shape: Tuple[int, ...]) -> jax.Array:
+    if len(shape) >= 1 and shape[-1] % QBLOCK == 0 and \
+            blocks.ndim == len(shape) + 1:
+        return blocks.reshape(shape)
+    n = 1
+    for s in shape:
+        n *= s
+    return blocks.reshape(-1)[:n].reshape(shape)
+
+
+def _quantize(x: jax.Array) -> Quantized:
+    """Signed symmetric absmax int8 (for the first moment)."""
+    blocks, _ = _blocks(x)
+    scale = jnp.max(jnp.abs(blocks), axis=-1, keepdims=True) / 127.0
+    q = jnp.round(blocks / jnp.maximum(scale, 1e-12)).astype(jnp.int8)
+    return Quantized(q, scale.astype(jnp.float32))
+
+
+def _dequantize(qv: Quantized, shape: Tuple[int, ...]) -> jax.Array:
+    return _unblocks(qv.q.astype(jnp.float32) * qv.scale, shape)
+
+
+def _quantize_pos(x: jax.Array) -> Quantized:
+    """Fourth-root uint8 coding for the (non-negative) second moment —
+    covers ~8 decades of dynamic range per block (8-bit-Adam-style dynamic
+    map; symmetric absmax collapses small v entries to 0 and the update
+    m/(sqrt(0)+eps) explodes)."""
+    blocks, _ = _blocks(x)
+    vmax = jnp.max(blocks, axis=-1, keepdims=True)
+    root = jnp.sqrt(jnp.sqrt(blocks / jnp.maximum(vmax, 1e-30)))
+    q = jnp.round(root * 255.0).astype(jnp.uint8)
+    return Quantized(q, vmax.astype(jnp.float32))
+
+
+def _dequantize_pos(qv: Quantized, shape: Tuple[int, ...]) -> jax.Array:
+    root = qv.q.astype(jnp.float32) / 255.0
+    return _unblocks((root ** 4) * qv.scale, shape)
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: Any                # pytree matching params (dtype-tiered)
+    v: Any
+
+
+class AdamW:
+    def __init__(self, lr=3e-4, b1=0.9, b2=0.95, eps=1e-8,
+                 weight_decay=0.1, grad_clip=1.0,
+                 state_dtype: str = "float32",
+                 schedule=None):
+        self.lr, self.b1, self.b2, self.eps = lr, b1, b2, eps
+        self.wd = weight_decay
+        self.clip = grad_clip
+        self.state_dtype = state_dtype
+        self.schedule = schedule
+
+    # -- state representation helpers --
+    def _to_state(self, x: jax.Array, positive: bool = False):
+        if self.state_dtype == "int8":
+            return _quantize_pos(x) if positive else _quantize(x)
+        if self.state_dtype == "bfloat16":
+            return x.astype(jnp.bfloat16)
+        return x.astype(jnp.float32)
+
+    def _from_state(self, s, shape, positive: bool = False):
+        if self.state_dtype == "int8":
+            return _dequantize_pos(s, shape) if positive \
+                else _dequantize(s, shape)
+        return s.astype(jnp.float32)
+
+    def init(self, params) -> AdamWState:
+        def z(p, positive):
+            return self._to_state(jnp.zeros(p.shape, jnp.float32), positive)
+        return AdamWState(
+            step=jnp.zeros((), jnp.int32),
+            m=jax.tree.map(lambda p: z(p, False), params),
+            v=jax.tree.map(lambda p: z(p, True), params))
+
+    def update(self, grads, state: AdamWState, params):
+        step = state.step + 1
+        lr = self.lr if self.schedule is None else self.schedule(step)
+
+        gnorm = jnp.sqrt(sum(
+            jnp.sum(jnp.square(g.astype(jnp.float32)))
+            for g in jax.tree.leaves(grads)))
+        scale = jnp.minimum(1.0, self.clip / jnp.maximum(gnorm, 1e-12)) \
+            if self.clip else 1.0
+
+        b1c = 1.0 - self.b1 ** step.astype(jnp.float32)
+        b2c = 1.0 - self.b2 ** step.astype(jnp.float32)
+
+        is_q = self.state_dtype == "int8"
+
+        def upd(p, g, m, v):
+            g = g.astype(jnp.float32) * scale
+            mf = self._from_state(m, p.shape)
+            vf = self._from_state(v, p.shape, positive=True)
+            mf = self.b1 * mf + (1 - self.b1) * g
+            vf = self.b2 * vf + (1 - self.b2) * g * g
+            mh = mf / b1c
+            vh = vf / b2c
+            delta = mh / (jnp.sqrt(vh) + self.eps)
+            if self.wd and p.ndim >= 2:       # no decay on norms/biases
+                delta = delta + self.wd * p.astype(jnp.float32)
+            new_p = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+            return (new_p, self._to_state(mf),
+                    self._to_state(vf, positive=True))
+
+        leaves_p, treedef = jax.tree.flatten(params)
+        leaves_g = treedef.flatten_up_to(grads)
+        leaves_m = treedef.flatten_up_to(state.m) if not is_q else \
+            jax.tree.flatten(state.m, is_leaf=lambda x: isinstance(
+                x, Quantized))[0]
+        leaves_v = treedef.flatten_up_to(state.v) if not is_q else \
+            jax.tree.flatten(state.v, is_leaf=lambda x: isinstance(
+                x, Quantized))[0]
+        out = [upd(p, g, m, v) for p, g, m, v in
+               zip(leaves_p, leaves_g, leaves_m, leaves_v)]
+        new_p = treedef.unflatten([o[0] for o in out])
+        new_m = treedef.unflatten([o[1] for o in out])
+        new_v = treedef.unflatten([o[2] for o in out])
+        return new_p, AdamWState(step=step, m=new_m, v=new_v), gnorm
+
+
+def warmup_cosine(base_lr: float, warmup: int, total: int,
+                  floor: float = 0.1):
+    def f(step):
+        s = step.astype(jnp.float32)
+        warm = s / max(warmup, 1)
+        prog = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return base_lr * jnp.where(s < warmup, warm, cos)
+    return f

@@ -1,0 +1,60 @@
+"""Train-step builder: loss + grad (+ microbatch accumulation) + optimizer.
+
+``build_train_step(model, parallel, opt)`` returns a pure
+``step(params, opt_state, batch) -> (params', opt_state', metrics)``
+suitable for jit/pjit.  Gradient accumulation runs as a ``lax.scan`` over
+microbatches with the per-layer remat policy applied inside, so activation
+memory is bounded by one microbatch regardless of global batch.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ParallelismConfig
+from repro.models.model import Model
+from repro.train.optimizer import AdamW, AdamWState
+
+
+def _split_microbatches(batch: Dict, n: int) -> Dict:
+    return jax.tree.map(
+        lambda x: x.reshape((n, x.shape[0] // n) + x.shape[1:]), batch)
+
+
+def build_train_step(model: Model, parallel: ParallelismConfig,
+                     opt: AdamW) -> Callable:
+    remat = parallel.remat
+    n_micro = parallel.microbatches
+
+    def loss_fn(params, mb):
+        return model.loss(params, mb, remat=remat)
+
+    def step(params, opt_state: AdamWState, batch):
+        if n_micro > 1:
+            mbs = _split_microbatches(batch, n_micro)
+
+            def acc(carry, mb):
+                loss, g = jax.value_and_grad(loss_fn)(params, mb)
+                return jax.tree.map(jnp.add, carry, g), loss
+
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            grads, losses = jax.lax.scan(acc, zero, mbs)
+            grads = jax.tree.map(lambda g: g / n_micro, grads)
+            loss = jnp.mean(losses)
+        else:
+            loss, grads = jax.value_and_grad(loss_fn)(params, batch)
+        new_params, new_state, gnorm = opt.update(grads, opt_state, params)
+        metrics = {"loss": loss.astype(jnp.float32), "grad_norm": gnorm}
+        return new_params, new_state, metrics
+
+    return step
+
+
+def build_eval_step(model: Model) -> Callable:
+    def step(params, batch):
+        return model.loss(params, batch)
+    return step

@@ -1,0 +1,7 @@
+import os
+import sys
+
+# keep smoke tests on 1 device — ONLY the dry-run forces 512 fake devices
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))

@@ -1,0 +1,61 @@
+"""Tiered cache store: byte accounting, policies, lookup order."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.cache.store import CachePartition, TieredCache
+
+
+@settings(max_examples=25, deadline=None)
+@given(cap=st.integers(100, 10_000),
+       ops=st.lists(st.tuples(st.integers(0, 50), st.integers(1, 2_000)),
+                    min_size=1, max_size=60),
+       policy=st.sampled_from(["none", "lru"]))
+def test_capacity_never_exceeded(cap, ops, policy):
+    part = CachePartition(cap, policy)
+    for key, size in ops:
+        part.put(key, b"x", size)
+        assert part.stats.bytes_used <= cap
+    # accounting consistent with contents
+    assert part.stats.bytes_used == sum(part._sizes.values())
+
+
+def test_no_evict_rejects_when_full():
+    part = CachePartition(100, "none")
+    assert part.put(1, "a", 60) == []
+    part.put(2, "b", 60)
+    assert 2 not in part                       # rejected, MINIO-style
+    assert 1 in part
+
+
+def test_lru_evicts_oldest():
+    part = CachePartition(100, "lru")
+    part.put(1, "a", 50)
+    part.put(2, "b", 50)
+    part.get(1)                                # 1 becomes MRU
+    part.put(3, "c", 50)
+    assert 2 not in part and 1 in part and 3 in part
+
+
+def test_tiered_lookup_most_processed_first():
+    c = TieredCache(3000, (0.34, 0.33, 0.33))
+    c.insert(7, "encoded", b"e", 10)
+    c.insert(7, "augmented", b"a", 10)
+    form, val = c.lookup(7)
+    assert form == "augmented"
+
+
+def test_status_array_roundtrip():
+    c = TieredCache(3000, (0.34, 0.33, 0.33))
+    c.insert(1, "encoded", b"", 10)
+    c.insert(2, "decoded", b"", 10)
+    c.insert(3, "augmented", b"", 10)
+    s = c.status_array(5)
+    assert list(s) == [0, 1, 2, 3, 0]
+
+
+def test_partition_split_respects_mdp():
+    c = TieredCache(1000, (0.5, 0.3, 0.2))
+    assert c.parts["encoded"].capacity == 500
+    assert c.parts["decoded"].capacity == 300
+    assert c.parts["augmented"].capacity == 200

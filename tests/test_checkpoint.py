@@ -1,0 +1,99 @@
+"""Checkpoint + fault-tolerance behaviour."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.configs.base import TRAIN_4K, ParallelismConfig
+from repro.distributed import checkpoint as ckpt
+from repro.distributed.ft import FTConfig, ResilientTrainer
+from repro.models.model import build, make_batch
+from repro.train.optimizer import AdamW
+from repro.train.step import build_train_step
+
+
+def _tree():
+    return {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "b": {"c": jnp.ones((4,), jnp.bfloat16),
+                  "d": jnp.zeros((3,), jnp.int8)}}
+
+
+def test_roundtrip_exact(tmp_path):
+    t = _tree()
+    ckpt.save(str(tmp_path), 7, t)
+    back, manifest = ckpt.restore(str(tmp_path), t)
+    assert manifest["step"] == 7
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+        assert a.dtype == b.dtype
+
+
+def test_latest_pointer_and_prune(tmp_path):
+    t = _tree()
+    for s in (1, 2, 3, 4):
+        ckpt.save(str(tmp_path), s, t)
+    assert ckpt.latest_step(str(tmp_path)) == 4
+    removed = ckpt.prune(str(tmp_path), keep=2)
+    assert len(removed) == 2
+    assert ckpt.latest_step(str(tmp_path)) == 4
+
+
+def test_shape_mismatch_rejected(tmp_path):
+    ckpt.save(str(tmp_path), 1, {"a": jnp.ones((2, 2))})
+    with pytest.raises(ValueError):
+        ckpt.restore(str(tmp_path), {"a": jnp.ones((3, 3))})
+
+
+def test_resilient_trainer_survives_failures(tmp_path):
+    """Inject failures mid-run; the final state must equal a failure-free
+    run (determinism of restore + fixed batch stream)."""
+    cfg = registry.get_reduced("deepseek-7b")
+    m = build(cfg)
+    opt = AdamW(lr=1e-3)
+    batch = make_batch(jax.random.key(1), m, TRAIN_4K, reduced_shape=(2, 16))
+    step = jax.jit(build_train_step(m, ParallelismConfig(), opt))
+
+    def mk_trainer(dirname, injector=None):
+        params = m.init(jax.random.key(0))
+        return ResilientTrainer(
+            step_fn=step, params=params, opt_state=opt.init(params),
+            cfg=FTConfig(ckpt_dir=str(tmp_path / dirname), ckpt_every=5,
+                         max_restarts=5),
+            batch_source=lambda: batch, failure_injector=injector)
+
+    clean = mk_trainer("clean")
+    clean.run(20)
+
+    fails = {12: True, 17: True}
+    faulty = mk_trainer("faulty",
+                        injector=lambda s: fails.pop(s, False))
+    faulty.run(20)
+    assert faulty.restarts == 2
+    for a, b in zip(jax.tree.leaves(clean.params),
+                    jax.tree.leaves(faulty.params)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_resume_after_interrupt(tmp_path):
+    cfg = registry.get_reduced("deepseek-7b")
+    m = build(cfg)
+    opt = AdamW(lr=1e-3)
+    batch = make_batch(jax.random.key(1), m, TRAIN_4K, reduced_shape=(2, 16))
+    step = jax.jit(build_train_step(m, ParallelismConfig(), opt))
+    params = m.init(jax.random.key(0))
+    t1 = ResilientTrainer(step, params, opt.init(params),
+                          FTConfig(ckpt_dir=str(tmp_path), ckpt_every=5),
+                          batch_source=lambda: batch)
+    t1.run(10)      # writes step_10
+    t2 = ResilientTrainer(step, m.init(jax.random.key(9)),
+                          opt.init(params),
+                          FTConfig(ckpt_dir=str(tmp_path), ckpt_every=5),
+                          batch_source=lambda: batch)
+    t2.run(12)      # must resume from 10, not retrain from 0
+    assert t2.step == 12
+    assert len(t2.history) == 2

@@ -1,0 +1,106 @@
+"""ODS invariants (Seneca §5.2) — the properties the paper guarantees."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.ods import (AUGMENTED, DECODED, ENCODED, IN_STORAGE,
+                            EpochSampler, ODSState)
+
+
+def _drive(n, batch, jobs, cached_frac, steps, form=AUGMENTED, seed=0,
+           refill=True):
+    st_ = ODSState.create(n, seed=seed)
+    rng = np.random.default_rng(seed + 1)
+    for j in range(jobs):
+        st_.register_job(j)
+    cached = rng.choice(n, int(n * cached_frac), replace=False)
+    st_.mark_cached(cached, form)
+    samplers = {j: EpochSampler(n, batch, seed + 7 * j) for j in range(jobs)}
+    seen = {j: set() for j in range(jobs)}
+    for _ in range(steps):
+        for j in range(jobs):
+            b, ev = st_.sample_batch(j, samplers[j].next_request())
+            yield j, b, ev, st_, seen
+            if refill and len(ev):
+                pool = np.flatnonzero(st_.status == IN_STORAGE)
+                st_.mark_cached(rng.permutation(pool)[:len(ev)], form)
+
+
+@settings(max_examples=12, deadline=None)
+@given(n=st.integers(60, 400), batch=st.integers(4, 30),
+       jobs=st.integers(1, 3), frac=st.floats(0.0, 0.9))
+def test_no_duplicates_within_epoch(n, batch, jobs, frac):
+    """Property 1: a job never sees a sample twice within an epoch."""
+    epoch_len = (n // batch) * batch
+    for j, b, ev, st_, seen in _drive(n, batch, jobs, frac,
+                                      steps=3 * n // batch):
+        assert len(set(b.tolist())) == len(b)
+        dup = seen[j] & set(b.tolist())
+        assert not dup, f"job {j} resaw {sorted(dup)[:3]}"
+        seen[j] |= set(b.tolist())
+        if len(seen[j]) >= epoch_len:
+            seen[j] = set()
+
+
+def test_full_epoch_coverage_when_divisible():
+    """Property 1b: with B | N every sample is served exactly once/epoch."""
+    n, batch = 300, 30
+    served = set()
+    for j, b, ev, st_, seen in _drive(n, batch, 1, 0.5,
+                                      steps=n // batch):
+        served |= set(b.tolist())
+    assert served == set(range(n))
+
+
+def test_augmented_never_reused_across_epochs():
+    """Property 2: refcount threshold (=n_jobs) evicts augmented samples
+    after every job consumed them once."""
+    n, batch, jobs = 200, 20, 2
+    use_count = {}
+    for j, b, ev, st_, seen in _drive(n, batch, jobs, 0.4,
+                                      steps=4 * n // batch, refill=False):
+        for sid in b[st_.status[b] == AUGMENTED]:
+            use_count[sid] = use_count.get(sid, 0) + 1
+    assert use_count, "no augmented hits happened"
+    assert max(use_count.values()) <= jobs
+
+
+def test_substitution_prefers_cached():
+    st_ = ODSState.create(100, seed=0)
+    st_.register_job(0)
+    st_.mark_cached(np.arange(50), ENCODED)
+    req = np.arange(50, 80)                    # all misses
+    batch, _ = st_.sample_batch(0, req)
+    assert np.all(st_.status[batch] == ENCODED), \
+        "all misses should be substituted by cached unseen samples"
+
+
+def test_ods_randomness_across_seeds():
+    """Property 3: the delivered order depends on the PRNG seed."""
+    outs = []
+    for seed in (0, 1):
+        st_ = ODSState.create(100, seed=seed)
+        st_.register_job(0)
+        st_.mark_cached(np.arange(0, 100, 2), ENCODED)
+        batch, _ = st_.sample_batch(0, np.arange(1, 100, 2)[:20])
+        outs.append(tuple(batch.tolist()))
+    assert outs[0] != outs[1]
+
+
+def test_metadata_footprint_matches_paper():
+    """§5.2: 8 jobs x 1.3M samples ~ 2.6MB of ODS metadata."""
+    st_ = ODSState.create(1_300_000)
+    for j in range(8):
+        st_.register_job(j)
+    mb = st_.metadata_bytes() / 1e6
+    assert 2.0 <= mb <= 3.5, mb
+
+
+def test_hit_rate_exceeds_cache_fraction_with_churn():
+    """Fig. 13 mechanism: with eviction+refill, ODS hit rate beats the
+    static cached fraction."""
+    last = None
+    for j, b, ev, st_, seen in _drive(1000, 50, 2, 0.3,
+                                      steps=4 * 1000 // 50):
+        last = st_
+    assert last.hit_rate() > 0.4, last.hit_rate()

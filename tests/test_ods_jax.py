@@ -1,0 +1,48 @@
+"""Jittable ODS twin: same invariants under jit."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import ods_jax
+
+
+def test_invariants_under_jit():
+    N, B = 256, 16
+    state = ods_jax.create(N)
+    state = state._replace(
+        status=state.status.at[jnp.arange(0, N, 3)].set(3))
+    rng = jax.random.key(0)
+    seen = set()
+    for i in range(2 * (N // B)):
+        rng, sub = jax.random.split(rng)
+        req = jnp.arange(i * B, i * B + B) % N
+        state, batch, ev = ods_jax.substitute_jit(state, req, sub, 2)
+        b = np.asarray(batch)
+        assert len(set(b.tolist())) == B
+        assert not (seen & set(b.tolist()))
+        seen |= set(b.tolist())
+        if len(seen) == N:
+            seen = set()
+
+
+def test_prefers_cached_unseen():
+    N, B = 128, 8
+    state = ods_jax.create(N)
+    state = state._replace(status=state.status.at[:64].set(1))
+    rng = jax.random.key(1)
+    req = jnp.arange(64, 64 + B)              # all uncached
+    state, batch, _ = ods_jax.substitute_jit(state, req, rng, 1)
+    assert np.all(np.asarray(state.status)[np.asarray(batch)] == 1)
+
+
+def test_eviction_mask_threshold():
+    N, B = 64, 8
+    state = ods_jax.create(N)
+    state = state._replace(status=state.status.at[:16].set(3))
+    rng = jax.random.key(2)
+    req = jnp.arange(0, B)                    # cached augmented directs
+    state, batch, ev = ods_jax.substitute_jit(state, req, rng, 1)
+    # threshold 1 job: every served augmented sample evicts immediately
+    served_aug = np.asarray(batch)[np.asarray(batch) < 16]
+    assert np.asarray(ev)[served_aug].all()
+    assert np.all(np.asarray(state.status)[served_aug] == 0)

@@ -1,0 +1,115 @@
+"""DSI performance model (Eqs. 1-9) + MDP properties."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import mdp
+from repro.core.perf_model import (AZURE_NC96, DATASETS, EVAL_PROFILES,
+                                   IMAGENET_1K, IMAGENET_22K, IN_HOUSE,
+                                   OPENIMAGES, DatasetProfile,
+                                   HardwareProfile, JobProfile,
+                                   dsi_throughput, GB, Gbit, MB, KB)
+from dataclasses import replace
+
+
+def test_min_form_bounds():
+    """No DSI path can exceed GPU ingestion or the pipeline min."""
+    out = dsi_throughput(IN_HOUSE, IMAGENET_1K, JobProfile(), 0.4, 0.3, 0.3)
+    n = IN_HOUSE.n_nodes
+    for v in (out.dsi_a, out.dsi_d, out.dsi_e, out.dsi_s):
+        assert v <= n * IN_HOUSE.t_gpu + 1e-9
+    assert out.dsi_e <= n * IN_HOUSE.t_da + 1e-9
+    assert out.dsi_d <= n * IN_HOUSE.t_a + 1e-9
+    assert out.dsi_s <= out.dsi_e + 1e-9                      # Eq. 7
+
+
+def test_population_conservation():
+    out = dsi_throughput(AZURE_NC96, OPENIMAGES, JobProfile(), 0.2, 0.5, 0.3)
+    total = out.n_a + out.n_d + out.n_e + out.n_storage
+    assert abs(total - OPENIMAGES.n_total) < 1.0              # Eq. 8
+
+
+def test_overall_is_weighted_mean():
+    out = dsi_throughput(IN_HOUSE, IMAGENET_1K, JobProfile(), 1.0, 0.0, 0.0)
+    lo = min(out.dsi_e, out.dsi_s)
+    hi = max(out.dsi_e, out.dsi_s)
+    assert lo - 1e-9 <= out.overall <= hi + 1e-9
+
+
+@settings(max_examples=30, deadline=None)
+@given(scale=st.floats(1.1, 8.0))
+def test_monotonic_in_bandwidth(scale):
+    """More of any bandwidth never reduces predicted throughput."""
+    base = dsi_throughput(IN_HOUSE, OPENIMAGES, JobProfile(),
+                          0.4, 0.3, 0.3).overall
+    for field in ("b_cache", "b_storage", "b_nic", "b_pcie"):
+        hw = replace(IN_HOUSE, **{field: getattr(IN_HOUSE, field) * scale})
+        up = dsi_throughput(hw, OPENIMAGES, JobProfile(),
+                            0.4, 0.3, 0.3).overall
+        assert up >= base - 1e-9, field
+
+
+@settings(max_examples=25, deadline=None)
+@given(xe=st.floats(0, 1), xd=st.floats(0, 1))
+def test_vectorized_matches_scalar(xe, xd):
+    if xe + xd > 1:
+        xe, xd = xe / 2, xd / 2
+    xa = 1 - xe - xd
+    s = dsi_throughput(AZURE_NC96, IMAGENET_1K, JobProfile(), xe, xd, xa)
+    v = dsi_throughput(AZURE_NC96, IMAGENET_1K, JobProfile(),
+                       np.array([xe, 0.1]), np.array([xd, 0.2]),
+                       np.array([xa, 0.7]))
+    assert np.isclose(float(v.overall[0]), float(s.overall))
+
+
+def test_simplex_grid_complete():
+    xe, xd, xa = mdp.simplex_grid(0.01)
+    assert len(xe) == 5151                    # C(102,2)
+    assert np.allclose(xe + xd + xa, 1.0)
+
+
+def test_mdp_beats_or_ties_paper_splits():
+    """Our brute-force optimum >= the paper's Table 6 split throughput
+    under the same equations (core soundness of MDP)."""
+    paper = {
+        ("imagenet-1k", "in-house"): (0.58, 0.42, 0.0),
+        ("imagenet-1k", "azure-nc96ads"): (0.0, 0.48, 0.52),
+        ("openimages-v7", "azure-nc96ads"): (0.05, 0.95, 0.0),
+        ("imagenet-22k", "azure-nc96ads"): (1.0, 0.0, 0.0),
+    }
+    for (ds_name, hw_name), split in paper.items():
+        ds = next(d for d in DATASETS if d.name == ds_name)
+        hw = next(h for h in EVAL_PROFILES if h.name == hw_name)
+        ours = mdp.optimize(hw, ds)
+        theirs = float(dsi_throughput(hw, ds, JobProfile(), *split).overall)
+        assert ours.throughput >= theirs - 1e-6, (ds_name, hw_name)
+
+
+def test_mdp_imagenet22k_all_encoded():
+    """Table 6: the 1.4TB dataset forces a pure encoded cache on Azure."""
+    p = mdp.optimize(next(h for h in EVAL_PROFILES
+                          if h.name == "azure-nc96ads"), IMAGENET_22K)
+    assert p.x_e >= 0.9
+
+
+def test_mdp_openimages_azure_decoded():
+    """Table 6 marquee cell: OpenImages/Azure is decoded-dominated
+    (paper: 5-95-0)."""
+    p = mdp.optimize(next(h for h in EVAL_PROFILES
+                          if h.name == "azure-nc96ads"), OPENIMAGES)
+    assert p.x_d >= 0.5
+
+
+def test_mdp_fast_enough():
+    import time
+    t0 = time.monotonic()
+    mdp.optimize(AZURE_NC96, IMAGENET_1K)
+    assert time.monotonic() - t0 < 1.0        # paper: "<1s"
+
+
+def test_nvlink_zeroes_pcie_overhead():
+    hw = replace(IN_HOUSE, nvlink_intra=True, gpus_per_node=8)
+    job = JobProfile(model_bytes=2_000 * MB, batch_size=32)
+    base = dsi_throughput(IN_HOUSE, IMAGENET_1K, job, 0, 0, 1).overall
+    nv = dsi_throughput(hw, IMAGENET_1K, job, 0, 0, 1).overall
+    assert nv >= base - 1e-9

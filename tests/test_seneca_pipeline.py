@@ -1,0 +1,91 @@
+"""End-to-end mechanistic pipeline: real threads, cache, ODS, decode."""
+import numpy as np
+import pytest
+
+from repro.core.perf_model import (AZURE_NC96, GB, DatasetProfile,
+                                   JobProfile)
+from repro.core.seneca import SenecaConfig, SenecaService
+from repro.data.pipeline import DSIPipeline
+from repro.data.storage import RemoteStorage
+from repro.data.synthetic import tiny
+
+
+def _service(ds, cache_frac=0.4, use_ods=True, split=None):
+    profile = DatasetProfile(ds.name, ds.n_samples, ds.mean_encoded_bytes,
+                             decoded_bytes=ds.decoded_bytes(),
+                             augmented_bytes=ds.augmented_bytes())
+    cache_bytes = int(cache_frac * ds.n_samples * ds.augmented_bytes())
+    return SenecaService(SenecaConfig(
+        cache_bytes=cache_bytes, hardware=AZURE_NC96, dataset=profile,
+        use_ods=use_ods, split=split, seed=1))
+
+
+def test_pipeline_produces_normalized_batches():
+    ds = tiny(n=256)
+    svc = _service(ds)
+    pipe = DSIPipeline(0, svc, RemoteStorage(ds), batch_size=16,
+                       n_workers=2)
+    b = pipe.next_batch()
+    assert b["images"].shape == (16, *ds.crop_hw, 3)
+    assert b["labels"].shape == (16,)
+    assert abs(float(b["images"].mean())) < 2.0      # normalized
+    assert np.isfinite(b["images"]).all()
+    pipe.stop()
+
+
+def test_two_jobs_share_cache_and_keep_epoch_semantics():
+    ds = tiny(n=240)
+    svc = _service(ds)
+    storage = RemoteStorage(ds)
+    p0 = DSIPipeline(0, svc, storage, batch_size=20, n_workers=2)
+    p1 = DSIPipeline(1, svc, storage, batch_size=20, n_workers=2)
+    seen = {0: [], 1: []}
+    for _ in range(ds.n_samples // 20):
+        for jid, p in ((0, p0), (1, p1)):
+            ids, _ = svc.next_batch_ids(jid)
+            seen[jid].extend(ids.tolist())
+    for jid in (0, 1):
+        assert sorted(seen[jid]) == list(range(ds.n_samples)), \
+            f"job {jid} must see every sample exactly once per epoch"
+    p0.stop()
+    p1.stop()
+
+
+def test_ods_improves_hit_rate_vs_mdp_only():
+    ds = tiny(n=400)
+    results = {}
+    for use_ods in (False, True):
+        svc = _service(ds, cache_frac=0.3, use_ods=use_ods,
+                       split=(0.0, 0.0, 1.0))
+        storage = RemoteStorage(ds)
+        pipes = [DSIPipeline(j, svc, storage, batch_size=20, n_workers=2)
+                 for j in (0, 1)]
+        for _ in range(2 * ds.n_samples // 20):
+            for p in pipes:
+                p.next_batch()
+        results[use_ods] = svc.ods.hit_rate()
+        for p in pipes:
+            p.stop()
+    assert results[True] > results[False] + 0.02, results
+
+
+def test_deterministic_samples():
+    ds = tiny(n=64)
+    a = ds.encoded(7)
+    b = ds.encoded(7)
+    assert a == b
+    assert ds.encoded(8) != a
+    img = ds.decode(a, 7)
+    assert img.shape == (*ds.image_hw, 3) and img.dtype == np.uint8
+
+
+def test_storage_bandwidth_budget():
+    import time
+    ds = tiny(n=16, mean_bytes=50_000)
+    storage = RemoteStorage(ds, bandwidth=1e6)   # 1 MB/s
+    t0 = time.monotonic()
+    storage.fetch(0)
+    storage.fetch(1)
+    dt = time.monotonic() - t0
+    expected = (ds.encoded_size(0) + ds.encoded_size(1)) / 1e6
+    assert dt >= expected * 0.5

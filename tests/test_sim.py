@@ -1,0 +1,74 @@
+"""Simulator-level reproduction checks (paper-claim scale tests live in
+benchmarks/; these are fast sanity versions)."""
+import numpy as np
+import pytest
+
+from repro.core import mdp
+from repro.core.perf_model import (AZURE_NC96, GB, DatasetProfile,
+                                   JobProfile, dsi_throughput)
+from repro.sim.desim import (ALL_LOADERS, DSISimulator, LoaderSpec,
+                             MDP_ONLY, MINIO, PYTORCH, QUIVER, SENECA,
+                             SimJob)
+
+DS = DatasetProfile("openimages-tiny", 60_000, 315.84e3)
+
+
+def _run(spec, jobs=2, epochs=2, cache=12 * GB, seed=0, **kw):
+    sim = DSISimulator(AZURE_NC96, DS, spec, cache_bytes=cache, seed=seed)
+    return sim.run([SimJob(j, gpu_rate=3500, batch_size=512, epochs=epochs)
+                    for j in range(jobs)]), sim
+
+
+def test_seneca_beats_all_baselines():
+    results = {s.name: _run(s)[0].throughput
+               for s in (PYTORCH, MINIO, QUIVER, SENECA)}
+    assert results["seneca"] >= results["minio"], results
+    assert results["seneca"] >= results["pytorch"], results
+    assert results["seneca"] >= results["quiver"] * 0.95, results
+
+
+def test_seneca_makespan_reduction_vs_pytorch():
+    """Fig. 10 direction: concurrent-job makespan drops substantially."""
+    r_pt, _ = _run(PYTORCH)
+    r_se, _ = _run(SENECA)
+    reduction = 1 - r_se.makespan / r_pt.makespan
+    assert reduction > 0.25, reduction
+
+
+def test_mdp_only_beats_static_encoded():
+    r_minio, _ = _run(MINIO)
+    r_mdp, _ = _run(MDP_ONLY)
+    assert r_mdp.throughput >= r_minio.throughput
+
+
+def test_epoch_times_monotone_warmup():
+    """First (cold) epoch is slower than stable epochs (Fig. 15 lines)."""
+    r, _ = _run(SENECA, epochs=3)
+    for j in r.first_epoch_s:
+        assert r.first_epoch_s[j] >= 0.8 * r.stable_epoch_s[j]
+
+
+def test_model_sim_correlation_quick():
+    """Fig. 8 in miniature: closed-form model vs simulator across splits
+    correlates strongly (full sweep in benchmarks/fig8_validation)."""
+    splits = [(1.0, 0.0, 0.0), (0.0, 1.0, 0.0), (0.0, 0.0, 1.0),
+              (0.5, 0.5, 0.0), (0.0, 0.5, 0.5)]
+    model_v, sim_v = [], []
+    for sp in splits:
+        spec = LoaderSpec(f"fixed{sp}", split_override=sp,
+                          cache_forms=("encoded", "decoded", "augmented"),
+                          sampling="random", evict_refcount=False)
+        r, _ = _run(spec, jobs=1, epochs=2)
+        sim_v.append(r.throughput)
+        model_v.append(float(dsi_throughput(
+            AZURE_NC96, DatasetProfile(DS.name, DS.n_total, DS.s_data),
+            JobProfile(), *sp).overall))
+    corr = np.corrcoef(model_v, sim_v)[0, 1]
+    assert corr > 0.8, (corr, model_v, sim_v)
+
+
+def test_preprocess_sharing_reduces_ops():
+    """Fig. 4b: a shared decoded/augmented cache cuts preprocessing ops."""
+    r_pt, _ = _run(PYTORCH, jobs=4, epochs=1)
+    r_se, _ = _run(SENECA, jobs=4, epochs=1)
+    assert r_se.preprocess_ops < r_pt.preprocess_ops

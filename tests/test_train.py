@@ -1,0 +1,107 @@
+"""Optimizer / train-step / compression unit tests."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.configs.base import TRAIN_4K, ParallelismConfig
+from repro.models.model import build, make_batch
+from repro.train import compression
+from repro.train.optimizer import (AdamW, Quantized, _dequantize,
+                                   _dequantize_pos, _quantize,
+                                   _quantize_pos, warmup_cosine)
+from repro.train.step import build_train_step
+
+
+def _setup(arch="qwen3-8b", bs=(4, 32)):
+    cfg = registry.get_reduced(arch)
+    m = build(cfg)
+    params = m.init(jax.random.key(0))
+    batch = make_batch(jax.random.key(1), m, TRAIN_4K, reduced_shape=bs)
+    return m, params, batch
+
+
+@pytest.mark.parametrize("state_dtype", ["float32", "bfloat16", "int8"])
+def test_loss_decreases(state_dtype):
+    m, params, batch = _setup()
+    opt = AdamW(lr=1e-3, state_dtype=state_dtype, eps=1e-6)
+    state = opt.init(params)
+    step = jax.jit(build_train_step(m, ParallelismConfig(), opt))
+    first = None
+    for _ in range(15):
+        params, state, metrics = step(params, state, batch)
+        first = first if first is not None else float(metrics["loss"])
+    assert float(metrics["loss"]) < first - 0.5
+
+
+def test_microbatch_grads_match_full_batch():
+    m, params, batch = _setup(bs=(4, 16))
+    g_full = jax.grad(lambda p: m.loss(p, batch))(params)
+    mbs = jax.tree.map(lambda x: x.reshape((2, 2) + x.shape[1:]), batch)
+    g_acc = jax.tree.map(jnp.zeros_like, g_full)
+    for i in range(2):
+        mb = jax.tree.map(lambda x: x[i], mbs)
+        g = jax.grad(lambda p: m.loss(p, mb))(params)
+        g_acc = jax.tree.map(jnp.add, g_acc, g)
+    g_acc = jax.tree.map(lambda x: x / 2, g_acc)
+    for a, b in zip(jax.tree.leaves(g_full), jax.tree.leaves(g_acc)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   atol=3e-2, rtol=3e-2)
+
+
+def test_grad_clip_limits_norm():
+    m, params, batch = _setup()
+    opt = AdamW(lr=0.0, grad_clip=0.5)
+    state = opt.init(params)
+    step = build_train_step(m, ParallelismConfig(), opt)
+    _, _, metrics = step(params, state, batch)
+    assert float(metrics["grad_norm"]) > 0
+
+
+def test_warmup_cosine_shape():
+    f = warmup_cosine(1.0, warmup=10, total=100)
+    assert float(f(jnp.int32(0))) == 0.0
+    assert abs(float(f(jnp.int32(10))) - 1.0) < 0.11
+    assert float(f(jnp.int32(100))) < 0.15
+    assert float(f(jnp.int32(5))) < float(f(jnp.int32(10)))
+
+
+def test_quantize_roundtrip_signed():
+    x = jax.random.normal(jax.random.key(0), (1000,)) * 3.0
+    q = _quantize(x)
+    err = jnp.max(jnp.abs(_dequantize(q, x.shape) - x))
+    assert float(err) <= float(jnp.max(jnp.abs(x))) / 127 + 1e-6
+
+
+def test_quantize_pos_dynamic_range():
+    """Fourth-root coding must resolve values 6 decades below blockmax."""
+    x = jnp.concatenate([jnp.full((128,), 1e-6), jnp.full((128,), 1.0)])
+    q = _quantize_pos(x)
+    back = _dequantize_pos(q, x.shape)
+    assert float(back[0]) > 0, "small v must not collapse to 0"
+    np.testing.assert_allclose(np.asarray(back[-1]), 1.0, rtol=0.02)
+
+
+def test_compression_error_bound():
+    g = jax.random.normal(jax.random.key(1), (513,))
+    r = jnp.zeros_like(g)
+    q, scale, new_r = compression.compress(g, r)
+    deq = compression.decompress(q, scale, g.shape)
+    assert float(jnp.max(jnp.abs(deq + new_r - g))) < 1e-5  # exact split
+    assert float(jnp.max(jnp.abs(new_r))) <= float(
+        jnp.max(jnp.abs(scale))) + 1e-6
+
+
+def test_error_feedback_is_unbiased_over_steps():
+    """Repeatedly compressing the same gradient with EF transmits its full
+    magnitude over time (residual does not grow)."""
+    g = jax.random.normal(jax.random.key(2), (300,)) * 1e-3
+    r = jnp.zeros_like(g)
+    sent = jnp.zeros_like(g)
+    for _ in range(50):
+        q, s, r = compression.compress(g, r)
+        sent = sent + compression.decompress(q, s, g.shape)
+    np.testing.assert_allclose(np.asarray(sent / 50), np.asarray(g),
+                               atol=1e-4)
