@@ -9,8 +9,8 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import SCALE, scaled, scaled_cache
-from repro.core.perf_model import AWS_P3, GB, IMAGENET_1K
-from repro.sim.desim import DSISimulator, PYTORCH, SENECA, SimJob
+from repro.api import (AWS_P3, DSISimulator, GB, IMAGENET_1K, PYTORCH,
+                       SENECA, SimJob)
 
 # per-model GPU ingest rates (samples/s on V100s, DS-Analyzer-style mix:
 # small models fast, ViT/VGG slow) for the 12-job trace

@@ -9,9 +9,8 @@ from __future__ import annotations
 import dataclasses
 
 from benchmarks.common import scaled
-from repro.core.perf_model import AZURE_NC96, IMAGENET_1K
-from repro.sim.desim import (DSISimulator, MDP_ONLY, MINIO, QUIVER, SENECA,
-                             SHADE, SimJob)
+from repro.api import (AZURE_NC96, DSISimulator, IMAGENET_1K, MDP_ONLY,
+                       MINIO, QUIVER, SENECA, SHADE, SimJob)
 
 # the paper's Azure/ImageNet-1K MDP split (0-48-52): half the cache is the
 # augmented tier, whose refcount-eviction churn is what lifts the hit rate

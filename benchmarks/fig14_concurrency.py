@@ -9,9 +9,9 @@ per-resource busy fractions.
 from __future__ import annotations
 
 from benchmarks.common import scaled, scaled_cache
-from repro.core.perf_model import AZURE_NC96, GB, OPENIMAGES
-from repro.sim.desim import (ALL_LOADERS, DSISimulator, DALI_CPU, MDP_ONLY,
-                             MINIO, PYTORCH, QUIVER, SENECA, SHADE, SimJob)
+from repro.api import (AZURE_NC96, DALI_CPU, DSISimulator, GB, MDP_ONLY,
+                       MINIO, OPENIMAGES, PYTORCH, QUIVER, SENECA, SHADE,
+                       SimJob)
 
 
 def run(full: bool = False):

@@ -8,10 +8,9 @@ page-cache loaders collapse and Seneca still wins ~29% (15c).
 from __future__ import annotations
 
 from benchmarks.common import scaled, scaled_cache
-from repro.core.perf_model import (AWS_P3, AZURE_NC96, GB, IMAGENET_1K,
-                                   IMAGENET_22K, OPENIMAGES)
-from repro.sim.desim import (DALI_CPU, DSISimulator, MINIO, PYTORCH, QUIVER,
-                             SENECA, SimJob)
+from repro.api import (AWS_P3, AZURE_NC96, DALI_CPU, DSISimulator, GB,
+                       IMAGENET_1K, IMAGENET_22K, MINIO, OPENIMAGES,
+                       PYTORCH, QUIVER, SENECA, SimJob)
 
 CELLS = [
     ("15a", AZURE_NC96, IMAGENET_1K, 400 * GB),

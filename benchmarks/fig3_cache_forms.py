@@ -8,8 +8,8 @@ fetch rises 87.2% — i.e. the best form flips with capacity, motivating MDP.
 from __future__ import annotations
 
 from benchmarks.common import scaled, scaled_cache
-from repro.core.perf_model import AZURE_NC96, GB, OPENIMAGES
-from repro.sim.desim import DSISimulator, LoaderSpec, SimJob
+from repro.api import (AZURE_NC96, DSISimulator, GB, LoaderSpec,
+                       OPENIMAGES, SimJob)
 
 ENC = LoaderSpec("enc", split_override=(1.0, 0.0, 0.0),
                  cache_forms=("encoded",), sampling="random",

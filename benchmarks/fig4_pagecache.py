@@ -10,9 +10,8 @@ from __future__ import annotations
 from dataclasses import replace
 
 from benchmarks.common import scaled_cache
-from repro.core.perf_model import AZURE_NC96, GB, KB, DatasetProfile
-from repro.sim.desim import (DSISimulator, LoaderSpec, PYTORCH, SENECA,
-                             SimJob)
+from repro.api import (AZURE_NC96, DatasetProfile, DSISimulator, GB, KB,
+                       LoaderSpec, PYTORCH, SENECA, SimJob)
 
 
 def run(full: bool = False):

@@ -10,9 +10,9 @@ from __future__ import annotations
 import numpy as np
 from dataclasses import replace
 
-from repro.core.perf_model import (VALIDATION_PROFILES, DatasetProfile,
-                                   JobProfile, dsi_throughput, GB, KB)
-from repro.sim.desim import DSISimulator, LoaderSpec, SimJob
+from repro.api import (DatasetProfile, DSISimulator, GB, JobProfile, KB,
+                       LoaderSpec, SimJob, VALIDATION_PROFILES,
+                       dsi_throughput)
 
 SPLITS = [(1.0, 0.0, 0.0), (0.0, 1.0, 0.0), (0.0, 0.0, 1.0),
           (0.5, 0.5, 0.0), (0.5, 0.0, 0.5), (0.0, 0.5, 0.5)]

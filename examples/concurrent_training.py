@@ -1,13 +1,14 @@
 """The paper's headline scenario, for real: two training jobs share one
-dataset through a Seneca service (MDP-partitioned cache + ODS sampling).
+dataset through a Seneca server (MDP-partitioned cache + ODS sampling).
 
     PYTHONPATH=src python examples/concurrent_training.py
 
 Trains two reduced ViT classifiers concurrently on the same synthetic image
-dataset, each fed by its own threaded DSI pipeline over the SHARED cache,
-and reports per-job throughput, the MDP partition, the ODS hit rate, and
-the substitution count — then repeats with ODS disabled to show the delta
-(Fig. 13/14 mechanics on live threads, not simulation).
+dataset, each fed by its own threaded DSI pipeline over a *session* on the
+SHARED ``repro.api.SenecaServer``, and reports per-job throughput, the MDP
+partition, the ODS hit rate, and the substitution count — then repeats
+with ODS disabled to show the delta (Fig. 13/14 mechanics on live threads,
+not simulation).
 """
 import os
 import sys
@@ -19,10 +20,9 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import jax
 import numpy as np
 
+from repro.api import SenecaServer
 from repro.configs import registry
 from repro.configs.base import ParallelismConfig
-from repro.core.perf_model import AZURE_NC96, DatasetProfile
-from repro.core.seneca import SenecaConfig, SenecaService
 from repro.data.pipeline import DSIPipeline
 from repro.data.storage import RemoteStorage
 from repro.data.synthetic import tiny
@@ -31,17 +31,12 @@ from repro.train.optimizer import AdamW
 from repro.train.step import build_train_step
 
 
-def run_once(use_ods: bool, steps: int = 15):
+def run_once(use_ods: bool, steps: int = 15, backend: str = "numpy"):
     ds = tiny(n=1024)
     storage = RemoteStorage(ds, bandwidth=300e6)
-    svc = SenecaService(SenecaConfig(
-        cache_bytes=int(0.35 * ds.n_samples * ds.augmented_bytes()),
-        hardware=AZURE_NC96,
-        dataset=DatasetProfile(ds.name, ds.n_samples,
-                               ds.mean_encoded_bytes,
-                               decoded_bytes=ds.decoded_bytes(),
-                               augmented_bytes=ds.augmented_bytes()),
-        use_ods=use_ods, seed=0))
+    server = SenecaServer.for_dataset(ds, cache_frac=0.35,
+                                      use_ods=use_ods, seed=0,
+                                      backend=backend)
 
     cfg = registry.get_reduced("vit-huge")
     model = build(cfg)
@@ -50,25 +45,26 @@ def run_once(use_ods: bool, steps: int = 15):
     results = {}
 
     def job(jid: int):
-        pipe = DSIPipeline(jid, svc, storage, batch_size=32, n_workers=3)
-        params = model.init(jax.random.key(jid))
-        state = opt.init(params)
-        t0 = time.monotonic()
-        for _ in range(steps):
-            raw = pipe.next_batch()
-            B = raw["images"].shape[0]
-            flat = raw["images"].reshape(B, -1)
-            T, D = cfg.frontend_tokens, cfg.d_model
-            reps = -(-T * D // flat.shape[1])
-            emb = np.tile(flat, (1, reps))[:, :T * D].reshape(B, T, D)
-            batch = {"patch_embeds": jax.numpy.asarray(emb,
-                                                       jax.numpy.bfloat16),
-                     "labels": jax.numpy.asarray(
-                         raw["labels"] % cfg.n_classes)}
-            params, state, m = step(params, state, batch)
-        dt = time.monotonic() - t0
-        results[jid] = steps * 32 / dt
-        pipe.stop()
+        with server.open_session(batch_size=32) as sess:
+            pipe = DSIPipeline(sess, storage, n_workers=3)
+            params = model.init(jax.random.key(jid))
+            state = opt.init(params)
+            t0 = time.monotonic()
+            for _ in range(steps):
+                raw = pipe.next_batch()
+                B = raw["images"].shape[0]
+                flat = raw["images"].reshape(B, -1)
+                T, D = cfg.frontend_tokens, cfg.d_model
+                reps = -(-T * D // flat.shape[1])
+                emb = np.tile(flat, (1, reps))[:, :T * D].reshape(B, T, D)
+                batch = {"patch_embeds": jax.numpy.asarray(
+                             emb, jax.numpy.bfloat16),
+                         "labels": jax.numpy.asarray(
+                             raw["labels"] % cfg.n_classes)}
+                params, state, m = step(params, state, batch)
+            dt = time.monotonic() - t0
+            results[jid] = steps * 32 / dt
+            pipe.stop()
 
     threads = [threading.Thread(target=job, args=(j,)) for j in (0, 1)]
     t0 = time.monotonic()
@@ -77,24 +73,29 @@ def run_once(use_ods: bool, steps: int = 15):
     for t in threads:
         t.join()
     wall = time.monotonic() - t0
+    stats = server.stats()
     return {
-        "partition": svc.partition.label,
+        "partition": stats["partition"],
         "per_job_samples_s": {k: round(v, 1) for k, v in results.items()},
         "aggregate_samples_s": round(sum(results.values()), 1),
-        "hit_rate": round(svc.ods.hit_rate(), 3),
-        "substitutions": svc.ods.substitutions,
+        "hit_rate": round(stats["ods_hit_rate"], 3),
+        "substitutions": stats["substitutions"],
         "storage_fetches": storage.fetches,
         "wall_s": round(wall, 1),
     }
 
 
 def main() -> None:
-    print("[concurrent] with ODS:")
-    with_ods = run_once(True)
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--backend", default="numpy", choices=("numpy", "jax"))
+    args = ap.parse_args()
+    print(f"[concurrent] with ODS (backend={args.backend}):")
+    with_ods = run_once(True, backend=args.backend)
     for k, v in with_ods.items():
         print(f"   {k}: {v}")
     print("[concurrent] without ODS (MDP-only):")
-    without = run_once(False)
+    without = run_once(False, backend=args.backend)
     for k, v in without.items():
         print(f"   {k}: {v}")
     print(f"[concurrent] ODS hit-rate delta: "

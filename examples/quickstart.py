@@ -1,12 +1,17 @@
-"""Quickstart: train a small LM end-to-end with the full framework stack.
+"""Quickstart: the `repro.api` facade end-to-end on CPU.
 
     PYTHONPATH=src python examples/quickstart.py
 
-Builds the reduced qwen3-8b config (~0.3M params on CPU; pass --arch/--steps
-to change), trains a few hundred steps with AdamW + warmup-cosine under the
-ResilientTrainer (atomic checkpoints every 50 steps), and prints the loss
-curve.  This is the (b)-deliverable end-to-end driver in its smallest form;
-``python -m repro.launch.train`` exposes the same path with all knobs.
+Opens a :class:`repro.api.SenecaServer` over a synthetic image dataset,
+pulls a session, feeds a threaded DSI pipeline (storage -> MDP-partitioned
+cache -> ODS -> augment) into a reduced ViT training loop, and prints the
+server's stats — the smallest real run of the paper's whole stack.  Pass
+``--backend jax`` to route batch substitution through the fused
+``ods_jax.substitute_jit`` kernel behind the same API.
+
+``--lm`` instead runs the original LM driver (reduced qwen3-8b under the
+ResilientTrainer with atomic checkpoints); ``python -m repro.launch.train``
+exposes the same paths with all knobs.
 """
 import argparse
 import os
@@ -16,23 +21,70 @@ import time
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax
+import numpy as np
 
+from repro.api import SenecaServer
 from repro.configs import registry
 from repro.configs.base import ParallelismConfig
-from repro.distributed.ft import FTConfig, ResilientTrainer
-from repro.launch.train import lm_batch_source
+from repro.data.pipeline import DSIPipeline
+from repro.data.storage import RemoteStorage
+from repro.data.synthetic import tiny
 from repro.models.model import build
 from repro.train.optimizer import AdamW, warmup_cosine
 from repro.train.step import build_train_step
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="qwen3-8b")
-    ap.add_argument("--steps", type=int, default=200)
-    ap.add_argument("--batch", type=int, default=8)
-    ap.add_argument("--seq", type=int, default=64)
-    args = ap.parse_args()
+def run_seneca(args) -> None:
+    # -- the docs/API.md quickstart, verbatim ---------------------------
+    ds = tiny(n=1024)
+    server = SenecaServer.for_dataset(ds, cache_frac=0.35, seed=0,
+                                      backend=args.backend)
+    print(f"[quickstart] MDP partition: {server.partition.label} "
+          f"(backend={args.backend})")
+
+    cfg = registry.get_reduced("vit-huge")
+    model = build(cfg)
+    print(f"[quickstart] {cfg.name} (reduced): {model.n_params():,} params")
+    params = model.init(jax.random.key(0))
+    opt = AdamW(lr=1e-3, schedule=warmup_cosine(1e-3, 10, args.steps))
+    state = opt.init(params)
+    step = jax.jit(build_train_step(model, ParallelismConfig(), opt))
+
+    losses = []
+    t0 = time.monotonic()
+    with server.open_session(batch_size=args.batch) as sess:
+        pipe = DSIPipeline(sess, RemoteStorage(ds), n_workers=3)
+        for _ in range(args.steps):
+            raw = pipe.next_batch()
+            B = raw["images"].shape[0]
+            flat = raw["images"].reshape(B, -1)
+            T, D = cfg.frontend_tokens, cfg.d_model
+            reps = -(-T * D // flat.shape[1])
+            emb = np.tile(flat, (1, reps))[:, :T * D].reshape(B, T, D)
+            batch = {"patch_embeds": jax.numpy.asarray(emb,
+                                                       jax.numpy.bfloat16),
+                     "labels": jax.numpy.asarray(
+                         raw["labels"] % cfg.n_classes)}
+            params, state, m = step(params, state, batch)
+            losses.append(float(m["loss"]))
+        stats = sess.stats()
+        pipe.stop()
+    dt = time.monotonic() - t0
+
+    print(f"[quickstart] {len(losses)} steps in {dt:.1f}s "
+          f"({len(losses) * args.batch / dt:.1f} samples/s)")
+    print(f"[quickstart] loss {losses[0]:.3f} -> {losses[-1]:.3f}")
+    print(f"[quickstart] ods_hit_rate={stats['ods_hit_rate']:.3f} "
+          f"substitutions={stats['substitutions']} "
+          f"tier_counts={stats['tier_counts']}")
+    assert np.isfinite(losses).all()
+    assert stats["hits"] + stats["misses"] > 0
+    print("[quickstart] OK — trained through the repro.api facade")
+
+
+def run_lm(args) -> None:
+    from repro.distributed.ft import FTConfig, ResilientTrainer
+    from repro.launch.train import lm_batch_source
 
     cfg = registry.get_reduced(args.arch)
     model = build(cfg)
@@ -51,12 +103,30 @@ def main() -> None:
     dt = time.monotonic() - t0
     print(f"[quickstart] {len(hist)} steps in {dt:.1f}s "
           f"({len(hist) * args.batch * args.seq / dt:,.0f} tok/s)")
-    for i in range(0, len(hist), max(len(hist) // 10, 1)):
-        print(f"  step {hist[i]['step']:4d}  loss {hist[i]['loss']:.3f}")
-    print(f"  step {hist[-1]['step']:4d}  loss {hist[-1]['loss']:.3f}")
+    print(f"  loss {hist[0]['loss']:.3f} -> {hist[-1]['loss']:.3f}")
     assert hist[-1]["loss"] < hist[0]["loss"]
     print("[quickstart] OK — loss decreased; checkpoints in "
           "/tmp/quickstart_ckpt")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--lm", action="store_true",
+                    help="run the LM ResilientTrainer driver instead")
+    ap.add_argument("--arch", default="qwen3-8b")
+    ap.add_argument("--backend", default="numpy",
+                    choices=("numpy", "jax"))
+    ap.add_argument("--steps", type=int, default=None,
+                    help="training steps (default: 30, or 200 with --lm)")
+    ap.add_argument("--batch", type=int, default=16)
+    ap.add_argument("--seq", type=int, default=64)
+    args = ap.parse_args()
+    if args.steps is None:
+        args.steps = 200 if args.lm else 30
+    if args.lm:
+        run_lm(args)
+    else:
+        run_seneca(args)
 
 
 if __name__ == "__main__":

@@ -1,0 +1,64 @@
+"""repro.api — the single public surface of the Seneca reproduction.
+
+Live service (sessions over one shared cache + sampler)::
+
+    from repro.api import SenecaServer
+
+    server = SenecaServer.for_dataset(ds, cache_frac=0.35)
+    with server.open_session(batch_size=32) as sess:
+        ids, forms = sess.next_batch_ids()
+
+Pluggable behavior: ``SenecaServer(cfg, backend="jax")`` swaps the ODS
+metadata engine; ``sampler=`` / ``admission=`` / ``eviction=`` select
+policies by registered name ("ods"/"naive", "unseen-only"/"capacity",
+"refcount"/"lru"); :func:`register_policy` adds new ones.
+
+The fluid-flow simulator behind the paper-figure benchmarks is re-exported
+here too, so benchmark and example code imports one namespace only.  See
+docs/API.md for the full tour.
+"""
+from repro.api.backends import (JaxOdsBackend, NumpyOdsBackend, OdsBackend,
+                                backend_names, register_backend,
+                                resolve_backend)
+from repro.api.policies import (AdmissionPolicy, CapacityAdmission,
+                                EvictionPolicy, LruEviction, NaiveSampler,
+                                OdsSampler, RefcountEviction, SamplerPolicy,
+                                UnseenOnlyAdmission, policy_names,
+                                register_policy, resolve_policy)
+from repro.api.server import (CODE_FORM, FORM_CODE, SenecaConfig,
+                              SenecaServer, SenecaService, Session,
+                              SessionClosed)
+# hardware / dataset profiles + the closed-form DSI model (Eqs. 1-9)
+from repro.core.perf_model import (AWS_P3, AZURE_NC96, DATASETS,
+                                   EVAL_PROFILES, GB, Gbit, IMAGENET_1K,
+                                   IMAGENET_22K, IN_HOUSE, KB, MB,
+                                   OPENIMAGES, VALIDATION_PROFILES,
+                                   DatasetProfile, HardwareProfile,
+                                   JobProfile, dsi_throughput)
+# mechanistic simulator (Table 7 loader matrix) for the fig* benchmarks
+from repro.sim.desim import (ALL_LOADERS, DALI_CPU, DALI_GPU, DSISimulator,
+                             LoaderSpec, MDP_ONLY, MINIO, PYTORCH, QUIVER,
+                             SENECA, SHADE, SimJob, SimResult)
+
+__all__ = [
+    # server / session facade
+    "SenecaServer", "Session", "SessionClosed", "SenecaConfig",
+    "SenecaService", "FORM_CODE", "CODE_FORM",
+    # policies
+    "SamplerPolicy", "AdmissionPolicy", "EvictionPolicy",
+    "OdsSampler", "NaiveSampler", "UnseenOnlyAdmission",
+    "CapacityAdmission", "RefcountEviction", "LruEviction",
+    "register_policy", "resolve_policy", "policy_names",
+    # backends
+    "OdsBackend", "NumpyOdsBackend", "JaxOdsBackend",
+    "register_backend", "resolve_backend", "backend_names",
+    # profiles + closed-form model
+    "HardwareProfile", "DatasetProfile", "JobProfile", "dsi_throughput",
+    "AZURE_NC96", "AWS_P3", "IN_HOUSE", "VALIDATION_PROFILES",
+    "EVAL_PROFILES", "DATASETS", "IMAGENET_1K", "IMAGENET_22K",
+    "OPENIMAGES", "GB", "MB", "KB", "Gbit",
+    # simulator
+    "DSISimulator", "LoaderSpec", "SimJob", "SimResult", "ALL_LOADERS",
+    "PYTORCH", "DALI_CPU", "DALI_GPU", "MINIO", "QUIVER", "SHADE",
+    "MDP_ONLY", "SENECA",
+]

@@ -1,0 +1,210 @@
+"""Pluggable Seneca policies: sampling, admission, eviction.
+
+The paper hard-wires three decisions into the service loop — which sample
+fills each batch slot (ODS substitution, §5.2), whether a produced form is
+worth a cache slot (the all-seen rejection), and when a cached augmented
+tensor dies (refcount threshold = number of jobs).  This module extracts
+each as a small strategy object so `repro.api.SenecaServer` can mix the
+paper's behaviors with baselines (naive sampling, plain LRU) or with
+user-registered experiments, CoorDL-style: policy separated from loader
+mechanics.
+
+Policies are registered by name; `resolve_policy("sampler", "ods")` is how
+string knobs on :class:`repro.api.SenecaConfig` become objects.  Custom
+policies register with :func:`register_policy` and are then addressable by
+name from configs.
+
+Locking contract (see cache/store.py): ``AdmissionPolicy.wants`` runs under
+the service metadata lock, ``AdmissionPolicy.fits`` runs under the *cache*
+lock (so the capacity check and the insert are atomic — the seed's
+check-then-act race is structurally gone).  The two locks are never held
+together in that order, which keeps the service's lock ordering
+(metadata -> cache) deadlock-free.
+"""
+from __future__ import annotations
+
+from typing import Dict, Optional, Protocol, Tuple, runtime_checkable
+
+import numpy as np
+
+from repro.cache.store import CachePartition
+
+__all__ = [
+    "SamplerPolicy", "AdmissionPolicy", "EvictionPolicy",
+    "OdsSampler", "NaiveSampler",
+    "UnseenOnlyAdmission", "CapacityAdmission",
+    "RefcountEviction", "LruEviction",
+    "register_policy", "resolve_policy", "policy_names",
+]
+
+
+# ----------------------------------------------------------------------
+# protocols
+@runtime_checkable
+class SamplerPolicy(Protocol):
+    """Decides the final batch composition for one request."""
+
+    name: str
+
+    def sample(self, backend, job_id: int, requested: np.ndarray,
+               evict_threshold: Optional[int]
+               ) -> Tuple[np.ndarray, np.ndarray]:
+        """Return (batch ids, augmented ids to evict). Runs under the
+        service metadata lock."""
+        ...
+
+
+@runtime_checkable
+class AdmissionPolicy(Protocol):
+    """Two-phase admission: a metadata vote and a capacity vote."""
+
+    name: str
+
+    def wants(self, backend, sample_id: int, form: str) -> bool:
+        """Metadata-level decision (under the service lock)."""
+        ...
+
+    def fits(self, part: CachePartition, nbytes: int) -> bool:
+        """Capacity decision, called under the cache lock immediately
+        before the insert."""
+        ...
+
+
+@runtime_checkable
+class EvictionPolicy(Protocol):
+    """Controls both the per-partition store policy and the ODS step-5
+    refcount threshold."""
+
+    name: str
+
+    def partition_policies(self) -> Dict[str, str]:
+        """Per-form store policy ("none" | "lru" | "refcount")."""
+        ...
+
+    def threshold(self, backend) -> Optional[int]:
+        """Refcount at which a served augmented sample is evicted;
+        None disables refcount eviction entirely."""
+        ...
+
+
+# ----------------------------------------------------------------------
+# sampler implementations
+class OdsSampler:
+    """The paper's Opportunistic Data Sampling (Fig. 6 steps 1-5)."""
+
+    name = "ods"
+
+    def sample(self, backend, job_id, requested, evict_threshold):
+        return backend.sample_batch(job_id, requested,
+                                    evict_threshold=evict_threshold)
+
+
+class NaiveSampler:
+    """Serve exactly what the epoch permutation asked for (the paper's
+    MDP-only bar); still counts hits/misses for stats."""
+
+    name = "naive"
+
+    def sample(self, backend, job_id, requested, evict_threshold):
+        requested = np.asarray(requested)
+        backend.count_serve(requested)
+        return requested, np.empty(0, np.int64)
+
+
+# ----------------------------------------------------------------------
+# admission implementations
+class _CapacityGate:
+    def fits(self, part: CachePartition, nbytes: int) -> bool:
+        if part.capacity < nbytes or part.capacity == 0:
+            return False
+        # only "lru" partitions make room inside put(); "none" and
+        # "refcount" reject when full, so the entry must fit now
+        return part.policy == "lru" or part.free_bytes >= nbytes
+
+
+class UnseenOnlyAdmission(_CapacityGate):
+    """Reject augmented admissions no registered job could still consume
+    this epoch (they would pin a slot until rollover without serving
+    anyone — the seed's `admission_value == 0` rule)."""
+
+    name = "unseen-only"
+
+    def wants(self, backend, sample_id, form):
+        return form != "augmented" or backend.admission_value(sample_id) > 0
+
+
+class CapacityAdmission(_CapacityGate):
+    """Admit anything that fits (MINIO-style baseline)."""
+
+    name = "capacity"
+
+    def wants(self, backend, sample_id, form):
+        return True
+
+
+# ----------------------------------------------------------------------
+# eviction implementations
+class RefcountEviction:
+    """Paper §5.2: augmented entries die once every registered job has
+    consumed them (threshold tracks the live job count)."""
+
+    name = "refcount"
+
+    def partition_policies(self):
+        return {"encoded": "none", "decoded": "none",
+                "augmented": "refcount"}
+
+    def threshold(self, backend):
+        return backend.n_jobs
+
+
+class LruEviction:
+    """Plain LRU on every tier, no refcount churn (page-cache-like
+    baseline)."""
+
+    name = "lru"
+
+    def partition_policies(self):
+        return {"encoded": "lru", "decoded": "lru", "augmented": "lru"}
+
+    def threshold(self, backend):
+        return None
+
+
+# ----------------------------------------------------------------------
+# registry
+_REGISTRY: Dict[str, Dict[str, type]] = {
+    "sampler": {"ods": OdsSampler, "naive": NaiveSampler},
+    "admission": {"unseen-only": UnseenOnlyAdmission,
+                  "capacity": CapacityAdmission},
+    "eviction": {"refcount": RefcountEviction, "lru": LruEviction},
+}
+
+_PROTOCOLS = {"sampler": SamplerPolicy, "admission": AdmissionPolicy,
+              "eviction": EvictionPolicy}
+
+
+def register_policy(kind: str, name: str, factory: type) -> None:
+    """Make a policy class addressable by name from SenecaConfig knobs."""
+    if kind not in _REGISTRY:
+        raise ValueError(f"unknown policy kind {kind!r}; "
+                         f"expected one of {sorted(_REGISTRY)}")
+    _REGISTRY[kind][name] = factory
+
+
+def policy_names(kind: str) -> Tuple[str, ...]:
+    return tuple(sorted(_REGISTRY[kind]))
+
+
+def resolve_policy(kind: str, spec):
+    """Turn a config knob (name string or ready instance) into a policy."""
+    if isinstance(spec, str):
+        try:
+            return _REGISTRY[kind][spec]()
+        except KeyError:
+            raise ValueError(
+                f"unknown {kind} policy {spec!r}; registered: "
+                f"{policy_names(kind)}") from None
+    if not isinstance(spec, _PROTOCOLS[kind]):
+        raise TypeError(f"{spec!r} does not implement the {kind} protocol")
+    return spec

@@ -1,0 +1,367 @@
+"""SenecaServer + Session: the public face of the cache/sampler service.
+
+The seed exposed the paper's Figure-7 loop as :class:`SenecaService` with
+raw ``job_id`` ints threaded through every call and pipelines poking
+``svc.cache.parts[...]`` for admission.  This module keeps that engine
+(same name, now policy-driven) and wraps it in a session facade::
+
+    server = SenecaServer.for_dataset(ds, cache_frac=0.35)
+    with server.open_session(batch_size=32) as sess:
+        ids, forms = sess.next_batch_ids()
+        ...
+    print(server.stats())
+
+Sessions own job registration/unregistration — opening one bumps the ODS
+job count (and with it the refcount-eviction threshold), closing it drops
+both — so the paper's headline many-jobs-one-cache scenario is just N
+``open_session`` calls against one server.
+
+Construction knobs (``SenecaConfig`` fields or ``SenecaServer`` kwargs):
+``backend`` selects the ODS metadata engine ("numpy" | "jax" — the latter
+runs the fused ``ods_jax.substitute_jit`` kernel), and ``sampler`` /
+``admission`` / ``eviction`` select policies by registered name
+(see :mod:`repro.api.policies`).
+"""
+from __future__ import annotations
+
+import itertools
+import threading
+from dataclasses import dataclass, field, replace
+from typing import Dict, Optional, Tuple
+
+import numpy as np
+
+from repro.api.backends import NO_REFCOUNT_EVICT, resolve_backend
+from repro.api.policies import resolve_policy
+from repro.cache.store import FORMS, TieredCache
+from repro.core import mdp
+from repro.core.ods import (AUGMENTED, DECODED, ENCODED, IN_STORAGE,
+                            EpochSampler)
+from repro.core.perf_model import (AZURE_NC96, DatasetProfile,
+                                   HardwareProfile, JobProfile)
+
+__all__ = ["SenecaConfig", "SenecaService", "SenecaServer", "Session",
+           "SessionClosed", "FORM_CODE", "CODE_FORM"]
+
+FORM_CODE = {"encoded": ENCODED, "decoded": DECODED, "augmented": AUGMENTED}
+CODE_FORM = {v: k for k, v in FORM_CODE.items()}
+
+
+class SessionClosed(RuntimeError):
+    """Raised when a closed Session is asked to sample."""
+
+
+@dataclass
+class SenecaConfig:
+    cache_bytes: int
+    hardware: HardwareProfile
+    dataset: DatasetProfile
+    job: JobProfile = field(default_factory=JobProfile)
+    partition_step: float = 0.01
+    seed: int = 0
+    use_ods: bool = True          # False -> MDP-only (paper's "MDP" bar)
+    # manual override (x_e, x_d, x_a); None -> run MDP
+    split: Optional[Tuple[float, float, float]] = None
+    # facade knobs: ODS metadata engine + policies by registered name
+    backend: str = "numpy"
+    sampler: Optional[str] = None      # None -> "ods" / "naive" per use_ods
+    admission: Optional[str] = None    # None -> "unseen-only" / "capacity"
+    eviction: Optional[str] = None     # None -> "refcount"
+
+
+class SenecaService:
+    """One shared dataset's cache + sampler engine (policy-driven).
+
+    Prefer :class:`SenecaServer` / :class:`Session`; this class remains the
+    synchronous engine underneath and the back-compat surface for the old
+    ``register_job``/``job_id`` call style.
+    """
+
+    def __init__(self, cfg: SenecaConfig, *, backend=None, sampler=None,
+                 admission=None, eviction=None):
+        self.cfg = cfg
+        if cfg.split is not None:
+            self.partition = mdp.Partition(*cfg.split, throughput=float("nan"))
+        else:
+            hw = cfg.hardware
+            if hw.s_cache != cfg.cache_bytes:
+                hw = replace(hw, s_cache=float(cfg.cache_bytes))
+            self.partition = mdp.optimize(hw, cfg.dataset, cfg.job,
+                                          cfg.partition_step)
+        self.sampler = resolve_policy(
+            "sampler", sampler or cfg.sampler
+            or ("ods" if cfg.use_ods else "naive"))
+        self.admission = resolve_policy(
+            "admission", admission or cfg.admission
+            or ("unseen-only" if cfg.use_ods else "capacity"))
+        self.eviction = resolve_policy(
+            "eviction", eviction or cfg.eviction or "refcount")
+        self.cache = TieredCache(
+            cfg.cache_bytes,
+            (self.partition.x_e, self.partition.x_d, self.partition.x_a),
+            evict_policies=self.eviction.partition_policies())
+        self.backend = resolve_backend(backend or cfg.backend,
+                                       cfg.dataset.n_total, seed=cfg.seed)
+        self.rng = np.random.default_rng(cfg.seed + 1)
+        self._samplers: Dict[int, EpochSampler] = {}
+        self._lock = threading.Lock()
+        self._refill_pending: list = []
+
+    # legacy alias: the engine's ODS metadata (numpy state or jax adapter)
+    @property
+    def ods(self):
+        return getattr(self.backend, "state", self.backend)
+
+    # ------------------------------------------------------------------
+    def register_job(self, job_id: int, batch_size: int) -> None:
+        with self._lock:
+            self.backend.register_job(job_id)
+            self._samplers[job_id] = EpochSampler(
+                self.cfg.dataset.n_total, batch_size,
+                self.cfg.seed + 97 * (job_id + 1))
+
+    def unregister_job(self, job_id: int) -> None:
+        with self._lock:
+            self.backend.unregister_job(job_id)
+            self._samplers.pop(job_id, None)
+
+    # ------------------------------------------------------------------
+    def next_batch_ids(self, job_id: int) -> Tuple[np.ndarray, np.ndarray]:
+        """Sample a batch for ``job_id``.
+
+        Returns (ids, forms): forms is the uint8 status of each id, i.e.
+        which tier will serve it (0 = storage fetch).
+        """
+        with self._lock:
+            requested = self._samplers[job_id].next_request()
+            thr = self.eviction.threshold(self.backend)
+            batch, evicted = self.sampler.sample(
+                self.backend, job_id, requested,
+                NO_REFCOUNT_EVICT if thr is None else thr)
+            if len(evicted):
+                for k in evicted:
+                    self.cache.evict(int(k), "augmented")
+                self._refill_pending.extend(int(k) for k in evicted)
+            forms = self.backend.status_of(batch)
+            return batch, forms
+
+    # ------------------------------------------------------------------
+    def admit(self, sample_id: int, form: str, value, nbytes: int) -> bool:
+        """Policy-gated insert; updates ODS status on success.
+
+        The metadata vote (``AdmissionPolicy.wants``) runs under the
+        service lock, the capacity vote + insert run atomically under the
+        cache lock (no check-then-act window between them).
+        """
+        # partition capacities are immutable after construction: skip the
+        # locks entirely for tiers the MDP split zeroed out (pipeline
+        # workers admit every produced form on the hot path)
+        if self.cache.parts[form].capacity == 0:
+            return False
+        with self._lock:
+            if not self.admission.wants(self.backend, sample_id, form):
+                return False
+        ok = self.cache.insert_gated(sample_id, form, value, nbytes,
+                                     self.admission)
+        if ok:
+            with self._lock:
+                self.backend.mark_cached(np.asarray([sample_id]),
+                                         FORM_CODE[form])
+        return ok
+
+    def refill_candidates(self, k: int) -> np.ndarray:
+        """Background-refill picks: random storage-resident samples
+        (paper step 5: evicted slots repopulate pseudo-randomly)."""
+        with self._lock:
+            pool = self.backend.storage_pool()
+            if not len(pool):
+                return pool
+            return self.rng.choice(pool, size=min(k, len(pool)),
+                                   replace=False)
+
+    def take_refill_work(self, max_n: int = 64) -> np.ndarray:
+        """Claim pending eviction slots and return fresh random samples to
+        preprocess into them (the paper's background-refill thread body)."""
+        with self._lock:
+            n = min(len(self._refill_pending), max_n)
+            if not n:
+                return np.empty(0, np.int64)
+            del self._refill_pending[:n]
+        return self.refill_candidates(n)
+
+    def lookup(self, sample_id: int):
+        return self.cache.lookup(sample_id)
+
+    def tier_capacity(self, form: str) -> int:
+        return self.cache.parts[form].capacity
+
+    def tier_free_bytes(self, form: str) -> int:
+        with self.cache.lock:
+            return self.cache.parts[form].free_bytes
+
+    # ------------------------------------------------------------------
+    def stats(self) -> Dict[str, float]:
+        tiers = np.bincount(
+            self.cache.status_array(self.cfg.dataset.n_total), minlength=4)
+        return {
+            "partition": self.partition.label,
+            "predicted_throughput": self.partition.throughput,
+            "backend": self.backend.name,
+            "policies": {"sampler": self.sampler.name,
+                         "admission": self.admission.name,
+                         "eviction": self.eviction.name},
+            "ods_hit_rate": self.backend.hit_rate(),
+            "hits": self.backend.hits,
+            "misses": self.backend.misses,
+            "substitutions": self.backend.substitutions,
+            "cache_bytes_used": self.cache.bytes_used(),
+            "cache_lookup_hit_rate": self.cache.hit_rate(),
+            "tier_counts": {form: int(tiers[FORM_CODE[form]])
+                            for form in FORMS},
+            "metadata_bytes": self.backend.metadata_bytes(),
+        }
+
+
+class Session:
+    """One training job's handle on a shared SenecaServer.
+
+    Owns the job registration: constructing (via ``open_session``) bumps
+    the server's ODS job count, ``close()`` (or leaving the ``with`` block)
+    drops it — which also lowers the refcount-eviction threshold for the
+    remaining sessions.
+    """
+
+    def __init__(self, service: SenecaService, job_id: int,
+                 batch_size: int, on_close=None):
+        self.service = service
+        self.job_id = job_id
+        self.batch_size = batch_size
+        self._on_close = on_close
+        self._closed = False
+
+    # ------------------------------------------------------------------
+    @property
+    def closed(self) -> bool:
+        return self._closed
+
+    @property
+    def epoch(self) -> int:
+        return self.service.backend.epoch_of(self.job_id)
+
+    def next_batch_ids(self) -> Tuple[np.ndarray, np.ndarray]:
+        if self._closed:
+            raise SessionClosed(
+                f"session {self.job_id} is closed; open a new one with "
+                f"SenecaServer.open_session()")
+        return self.service.next_batch_ids(self.job_id)
+
+    def admit(self, sample_id: int, form: str, value, nbytes: int) -> bool:
+        # in-flight pipeline workers may race a close(); drop their
+        # admissions instead of corrupting the unregistered job's metadata
+        if self._closed:
+            return False
+        return self.service.admit(sample_id, form, value, nbytes)
+
+    def lookup(self, sample_id: int):
+        return self.service.lookup(sample_id)
+
+    def stats(self) -> Dict[str, float]:
+        out = self.service.stats()
+        out["session"] = {"job_id": self.job_id, "epoch": self.epoch,
+                          "batch_size": self.batch_size,
+                          "closed": self._closed}
+        return out
+
+    def close(self) -> None:
+        if self._closed:
+            return
+        self._closed = True
+        self.service.unregister_job(self.job_id)
+        if self._on_close is not None:
+            self._on_close(self)
+
+    # ------------------------------------------------------------------
+    def __enter__(self) -> "Session":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+class SenecaServer:
+    """Facade handing out Sessions over one shared cache+sampler service."""
+
+    def __init__(self, cfg: SenecaConfig = None, *, backend=None,
+                 sampler=None, admission=None, eviction=None,
+                 service: Optional[SenecaService] = None):
+        if service is None:
+            if cfg is None:
+                raise ValueError("SenecaServer needs a SenecaConfig "
+                                 "(or an existing service=)")
+            service = SenecaService(cfg, backend=backend, sampler=sampler,
+                                    admission=admission, eviction=eviction)
+        self.service = service
+        self._ids = itertools.count()
+        self._sessions: Dict[int, Session] = {}
+        self._lock = threading.Lock()
+
+    # ------------------------------------------------------------------
+    @classmethod
+    def for_dataset(cls, ds, cache_bytes: Optional[int] = None,
+                    cache_frac: float = 0.4,
+                    hardware: HardwareProfile = AZURE_NC96,
+                    **cfg_kwargs) -> "SenecaServer":
+        """Build a server for a :mod:`repro.data.synthetic`-style dataset
+        (anything with n_samples / mean_encoded_bytes / decoded_bytes() /
+        augmented_bytes()), sizing the cache as a fraction of the
+        fully-augmented dataset unless ``cache_bytes`` is given."""
+        profile = DatasetProfile(ds.name, ds.n_samples,
+                                 ds.mean_encoded_bytes,
+                                 decoded_bytes=ds.decoded_bytes(),
+                                 augmented_bytes=ds.augmented_bytes())
+        if cache_bytes is None:
+            cache_bytes = int(cache_frac * ds.n_samples
+                              * ds.augmented_bytes())
+        return cls(SenecaConfig(cache_bytes=cache_bytes, hardware=hardware,
+                                dataset=profile, **cfg_kwargs))
+
+    # ------------------------------------------------------------------
+    def open_session(self, batch_size: int) -> Session:
+        with self._lock:
+            job_id = next(self._ids)
+            self.service.register_job(job_id, batch_size)
+            sess = Session(self.service, job_id, batch_size,
+                           on_close=self._forget)
+            self._sessions[job_id] = sess
+            return sess
+
+    def _forget(self, sess: Session) -> None:
+        with self._lock:
+            self._sessions.pop(sess.job_id, None)
+
+    @property
+    def n_sessions(self) -> int:
+        with self._lock:
+            return len(self._sessions)
+
+    @property
+    def partition(self):
+        return self.service.partition
+
+    def stats(self) -> Dict[str, float]:
+        out = self.service.stats()
+        out["n_sessions"] = self.n_sessions
+        return out
+
+    def close(self) -> None:
+        with self._lock:
+            live = list(self._sessions.values())
+        for sess in live:
+            sess.close()
+
+    # ------------------------------------------------------------------
+    def __enter__(self) -> "SenecaServer":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

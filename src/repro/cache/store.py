@@ -9,7 +9,7 @@ from __future__ import annotations
 import threading
 from collections import OrderedDict
 from dataclasses import dataclass, field
-from typing import Any, Dict, Iterable, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
@@ -112,6 +112,10 @@ class TieredCache:
                                         pol["augmented"]),
         }
         self.lock = threading.Lock()
+        # misses counted at lookup granularity: a key absent from every
+        # partition is ONE miss, not zero (the partitions are only probed
+        # via __contains__) and not three
+        self.lookup_misses = 0
 
     def lookup(self, key: int) -> Tuple[Optional[str], Any]:
         """Most-processed form first (augmented > decoded > encoded)."""
@@ -120,6 +124,7 @@ class TieredCache:
                 part = self.parts[form]
                 if key in part:
                     return form, part.get(key)
+            self.lookup_misses += 1
             return None, None
 
     def insert(self, key: int, form: str, value: Any, nbytes: int) -> bool:
@@ -127,6 +132,18 @@ class TieredCache:
         with self.lock:
             self.parts[form].put(key, value, nbytes)
             return key in self.parts[form]
+
+    def insert_gated(self, key: int, form: str, value: Any, nbytes: int,
+                     policy) -> bool:
+        """Insert with the admission policy's capacity vote evaluated under
+        the cache lock, atomically with the put — concurrent workers cannot
+        both pass a stale free-bytes check."""
+        with self.lock:
+            part = self.parts[form]
+            if not policy.fits(part, nbytes):
+                return False
+            part.put(key, value, nbytes)
+            return key in part
 
     def evict(self, key: int, form: str) -> bool:
         with self.lock:
@@ -145,7 +162,8 @@ class TieredCache:
 
     def hit_rate(self) -> float:
         h = sum(p.stats.hits for p in self.parts.values())
-        m = sum(p.stats.misses for p in self.parts.values())
+        m = sum(p.stats.misses
+                for p in self.parts.values()) + self.lookup_misses
         return h / (h + m) if h + m else 0.0
 
     def bytes_used(self) -> int:

@@ -17,7 +17,7 @@ Guarantees (§5.2, tested in tests/test_ods.py):
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, Optional, Tuple
 
 import numpy as np
 
@@ -98,7 +98,8 @@ class ODSState:
         self.refcount[ids] = 0
 
     # ------------------------------------------------------------------
-    def sample_batch(self, job_id: int, requested: np.ndarray
+    def sample_batch(self, job_id: int, requested: np.ndarray,
+                     evict_threshold: Optional[int] = None
                      ) -> Tuple[np.ndarray, np.ndarray]:
         """ODS steps 1–4 (Fig. 6) for one batch request.
 
@@ -107,6 +108,10 @@ class ODSState:
         requested sample misses in the cache (or was already consumed as an
         earlier substitute) are opportunistically replaced by cached,
         unseen samples; slots with no candidate keep the storage fetch.
+
+        ``evict_threshold`` overrides the step-5 refcount threshold
+        (default: the registered job count, the paper's rule; eviction
+        policies pass a large sentinel to disable refcount churn).
         """
         seen = self.seen[job_id]
         requested = np.asarray(requested)
@@ -159,7 +164,8 @@ class ODSState:
         self.served[job_id] += B
 
         # step 5: refcount-threshold eviction of augmented samples
-        evict = aug_hits[self.refcount[aug_hits] >= self.n_jobs]
+        thr = self.n_jobs if evict_threshold is None else evict_threshold
+        evict = aug_hits[self.refcount[aug_hits] >= thr]
         if len(evict):
             self.mark_evicted(evict)
         return batch, evict

@@ -1,157 +1,27 @@
-"""Seneca: MDP + ODS + tiered cache, glued into a data-loader service.
+"""Deprecated shim — the service engine moved to :mod:`repro.api`.
 
-This is the paper's Figure 7 as a composable object:
+The Figure-7 glue (MDP partitioning + ODS sampling + tiered cache) now
+lives behind the session facade::
 
-* at construction, **MDP** partitions the cache from the performance model
-  (hardware profile x dataset profile x job profile);
-* at runtime, **ODS** substitutes cache misses with unseen hits per job,
-  maintains the seen/status/refcount metadata, and triggers the
-  refcount-threshold eviction + background refill of the augmented tier.
+    from repro.api import SenecaServer
+    server = SenecaServer.for_dataset(ds)
+    with server.open_session(batch_size=32) as sess:
+        ids, forms = sess.next_batch_ids()
 
-Multiple concurrent jobs (the paper's headline scenario) register against
-one ``SenecaService``; see examples/concurrent_training.py.
+``SenecaService`` / ``SenecaConfig`` keep working from here for old
+callers; new code should import from :mod:`repro.api`.
 """
 from __future__ import annotations
 
-import threading
-from dataclasses import dataclass, field
-from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
+import warnings
 
-import numpy as np
+from repro.api.server import (CODE_FORM, FORM_CODE, SenecaConfig,
+                              SenecaServer, SenecaService, Session,
+                              SessionClosed)
 
-from repro.cache.store import TieredCache
-from repro.core import mdp
-from repro.core.ods import (AUGMENTED, DECODED, ENCODED, IN_STORAGE,
-                            EpochSampler, ODSState)
-from repro.core.perf_model import (DatasetProfile, HardwareProfile,
-                                   JobProfile)
+__all__ = ["SenecaConfig", "SenecaService", "SenecaServer", "Session",
+           "SessionClosed", "FORM_CODE", "CODE_FORM"]
 
-FORM_CODE = {"encoded": ENCODED, "decoded": DECODED, "augmented": AUGMENTED}
-CODE_FORM = {v: k for k, v in FORM_CODE.items()}
-
-
-@dataclass
-class SenecaConfig:
-    cache_bytes: int
-    hardware: HardwareProfile
-    dataset: DatasetProfile
-    job: JobProfile = field(default_factory=JobProfile)
-    partition_step: float = 0.01
-    seed: int = 0
-    use_ods: bool = True          # False -> MDP-only (paper's "MDP" bar)
-    # manual override (x_e, x_d, x_a); None -> run MDP
-    split: Optional[Tuple[float, float, float]] = None
-
-
-class SenecaService:
-    """One shared dataset's cache + sampler service."""
-
-    def __init__(self, cfg: SenecaConfig):
-        self.cfg = cfg
-        if cfg.split is not None:
-            self.partition = mdp.Partition(*cfg.split, throughput=float("nan"))
-        else:
-            hw = cfg.hardware
-            if hw.s_cache != cfg.cache_bytes:
-                from dataclasses import replace
-                hw = replace(hw, s_cache=float(cfg.cache_bytes))
-            self.partition = mdp.optimize(hw, cfg.dataset, cfg.job,
-                                          cfg.partition_step)
-        self.cache = TieredCache(
-            cfg.cache_bytes,
-            (self.partition.x_e, self.partition.x_d, self.partition.x_a))
-        self.ods = ODSState.create(cfg.dataset.n_total, seed=cfg.seed)
-        self.rng = np.random.default_rng(cfg.seed + 1)
-        self._samplers: Dict[int, EpochSampler] = {}
-        self._lock = threading.Lock()
-        self._refill_pending: List[int] = []
-
-    # ------------------------------------------------------------------
-    def register_job(self, job_id: int, batch_size: int) -> None:
-        with self._lock:
-            self.ods.register_job(job_id)
-            self._samplers[job_id] = EpochSampler(
-                self.cfg.dataset.n_total, batch_size,
-                self.cfg.seed + 97 * (job_id + 1))
-
-    def unregister_job(self, job_id: int) -> None:
-        with self._lock:
-            self.ods.unregister_job(job_id)
-            self._samplers.pop(job_id, None)
-
-    # ------------------------------------------------------------------
-    def next_batch_ids(self, job_id: int) -> Tuple[np.ndarray, np.ndarray]:
-        """Sample a batch for ``job_id``.
-
-        Returns (ids, forms): forms is the uint8 status of each id, i.e.
-        which tier will serve it (0 = storage fetch).
-        """
-        with self._lock:
-            requested = self._samplers[job_id].next_request()
-            if self.cfg.use_ods:
-                batch, evicted = self.ods.sample_batch(job_id, requested)
-                if len(evicted):
-                    for k in evicted:
-                        self.cache.evict(int(k), "augmented")
-                    self._refill_pending.extend(int(k) for k in evicted)
-            else:
-                batch = requested
-                # MDP-only still tracks hits/misses for stats
-                cached = self.ods.status[batch] != IN_STORAGE
-                self.ods.hits += int(cached.sum())
-                self.ods.misses += int((~cached).sum())
-            forms = self.ods.status[batch].copy()
-            return batch, forms
-
-    # ------------------------------------------------------------------
-    def admit(self, sample_id: int, form: str, value, nbytes: int) -> bool:
-        """Insert a sample into its tier; updates ODS status on success.
-
-        Augmented admissions that no job could still consume this epoch
-        (all seen-bits set) are rejected — they would pin a slot until the
-        epoch rollover without serving anyone.
-        """
-        with self._lock:
-            if form == "augmented" and self.cfg.use_ods and \
-                    self.ods.admission_value(sample_id) == 0:
-                return False
-        ok = self.cache.insert(sample_id, form, value, nbytes)
-        if ok:
-            with self._lock:
-                self.ods.mark_cached(np.asarray([sample_id]),
-                                     FORM_CODE[form])
-        return ok
-
-    def refill_candidates(self, k: int) -> np.ndarray:
-        """Background-refill picks: random storage-resident samples
-        (paper step 5: evicted slots repopulate pseudo-randomly)."""
-        with self._lock:
-            pool = np.flatnonzero(self.ods.status == IN_STORAGE)
-            if not len(pool):
-                return pool
-            return self.rng.choice(pool, size=min(k, len(pool)),
-                                   replace=False)
-
-    def take_refill_work(self, max_n: int = 64) -> np.ndarray:
-        """Claim pending eviction slots and return fresh random samples to
-        preprocess into them (the paper's background-refill thread body)."""
-        with self._lock:
-            n = min(len(self._refill_pending), max_n)
-            if not n:
-                return np.empty(0, np.int64)
-            del self._refill_pending[:n]
-        return self.refill_candidates(n)
-
-    def lookup(self, sample_id: int):
-        return self.cache.lookup(sample_id)
-
-    # ------------------------------------------------------------------
-    def stats(self) -> Dict[str, float]:
-        return {
-            "partition": self.partition.label,
-            "predicted_throughput": self.partition.throughput,
-            "ods_hit_rate": self.ods.hit_rate(),
-            "substitutions": self.ods.substitutions,
-            "cache_bytes_used": self.cache.bytes_used(),
-            "metadata_bytes": self.ods.metadata_bytes(),
-        }
+warnings.warn(
+    "repro.core.seneca is deprecated; import SenecaServer / SenecaService "
+    "from repro.api instead", DeprecationWarning, stacklevel=2)

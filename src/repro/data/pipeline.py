@@ -1,23 +1,34 @@
 """The real (threaded) DSI pipeline: sampler -> fetch -> decode -> augment
 -> collate -> device.
 
-Plugs either a :class:`SenecaService` (MDP + ODS) or a naive baseline
-sampler on top of the same storage + cache substrate, so the paper's
-concurrency experiments run for real on CPU (examples/, tests/).
+Feeds from a :class:`repro.api.Session` over the shared Seneca service
+(MDP-partitioned cache + pluggable sampling/admission/eviction policies),
+so the paper's concurrency experiments run for real on CPU::
+
+    server = SenecaServer.for_dataset(ds)
+    pipe = DSIPipeline(server.open_session(batch_size=32), storage)
+    batch = pipe.next_batch()
+
+Cache admission goes through the service's :class:`AdmissionPolicy` hooks
+(capacity is voted under the cache lock, atomically with the insert) —
+this module never touches cache partitions directly.
+
+The old ``DSIPipeline(job_id, service, storage, batch_size=...)`` call
+style still works as a deprecated shim that opens a session internally.
 """
 from __future__ import annotations
 
 import queue
 import threading
 import time
+import warnings
 from concurrent.futures import ThreadPoolExecutor
-from dataclasses import dataclass, field
-from typing import Dict, Optional, Tuple
+from dataclasses import dataclass
+from typing import Dict, Optional
 
 import numpy as np
 
-from repro.core.ods import AUGMENTED, DECODED, ENCODED, IN_STORAGE
-from repro.core.seneca import SenecaService
+from repro.api.server import SenecaService, Session
 from repro.data.augment import augment_np
 from repro.data.storage import RemoteStorage
 from repro.data.synthetic import SyntheticDataset
@@ -38,28 +49,49 @@ class StageTimes:
 
 
 class DSIPipeline:
-    """Per-job pipeline over a shared SenecaService + RemoteStorage."""
+    """Per-session pipeline over a shared Seneca service + RemoteStorage."""
 
-    def __init__(self, job_id: int, service: SenecaService,
-                 storage: RemoteStorage, batch_size: int,
+    def __init__(self, session, storage: Optional[RemoteStorage] = None,
+                 *legacy_storage, batch_size: Optional[int] = None,
                  n_workers: int = 4, prefetch: int = 2, seed: int = 0):
-        self.job_id = job_id
-        self.svc = service
+        if isinstance(session, Session):
+            self.session = session
+            if not isinstance(storage, RemoteStorage):
+                raise TypeError("DSIPipeline(session, storage) needs a "
+                                "RemoteStorage as its second argument")
+        else:
+            # legacy (job_id, service, storage, batch_size=...) call style
+            warnings.warn(
+                "DSIPipeline(job_id, service, storage, batch_size=...) is "
+                "deprecated; pass a Session from "
+                "SenecaServer.open_session()", DeprecationWarning,
+                stacklevel=2)
+            job_id, service = int(session), storage
+            if len(legacy_storage) > 1 and batch_size is None:
+                batch_size = legacy_storage[1]   # old positional form
+            if not (isinstance(service, SenecaService) and legacy_storage
+                    and batch_size):
+                raise TypeError(
+                    "expected DSIPipeline(session, storage) or legacy "
+                    "DSIPipeline(job_id, service, storage, batch_size=N)")
+            storage = legacy_storage[0]
+            service.register_job(job_id, batch_size)
+            self.session = Session(service, job_id, batch_size)
+        self.svc: SenecaService = self.session.service
         self.storage = storage
         self.ds: SyntheticDataset = storage.dataset
-        self.bs = batch_size
+        self.bs = self.session.batch_size
         self.pool = ThreadPoolExecutor(max_workers=n_workers)
         self.times = StageTimes()
-        self.rng = np.random.default_rng(seed + job_id)
+        self.rng = np.random.default_rng(seed + self.session.job_id)
         self._q: "queue.Queue" = queue.Queue(maxsize=prefetch)
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
-        self.svc.register_job(job_id, batch_size)
 
     # ------------------------------------------------------------------
     def _produce_sample(self, sid: int, epoch_tag: int) -> np.ndarray:
         """Run one sample through the remaining pipeline stages."""
-        form, value = self.svc.lookup(sid)
+        form, value = self.session.lookup(sid)
         t0 = time.monotonic()
         if form == "augmented":
             self.times.fetch += time.monotonic() - t0
@@ -73,42 +105,27 @@ class DSIPipeline:
             t1 = time.monotonic()
             img = self.ds.decode(enc, sid)
             self.times.decode += time.monotonic() - t1
-            self._maybe_admit_decoded(sid, img)
+            self.session.admit(sid, "decoded", img, img.nbytes)
         else:
             enc = self.storage.fetch(sid)
             self.times.fetch += time.monotonic() - t0
-            self._maybe_admit_encoded(sid, enc)
+            self.session.admit(sid, "encoded", enc, len(enc))
             t1 = time.monotonic()
             img = self.ds.decode(enc, sid)
             self.times.decode += time.monotonic() - t1
-            self._maybe_admit_decoded(sid, img)
+            self.session.admit(sid, "decoded", img, img.nbytes)
         t2 = time.monotonic()
         aug_seed = (epoch_tag * 1_000_003 + sid) & 0x7FFFFFFF
         out = augment_np(img, self.ds.crop_hw,
                          np.random.default_rng(aug_seed))
         self.times.augment += time.monotonic() - t2
-        self._maybe_admit_augmented(sid, out)
+        self.session.admit(sid, "augmented", out, out.nbytes)
         return out
-
-    def _maybe_admit_encoded(self, sid: int, enc: bytes) -> None:
-        part = self.svc.cache.parts["encoded"]
-        if part.capacity and part.free_bytes >= len(enc):
-            self.svc.admit(sid, "encoded", enc, len(enc))
-
-    def _maybe_admit_decoded(self, sid: int, img: np.ndarray) -> None:
-        part = self.svc.cache.parts["decoded"]
-        if part.capacity and part.free_bytes >= img.nbytes:
-            self.svc.admit(sid, "decoded", img, img.nbytes)
-
-    def _maybe_admit_augmented(self, sid: int, out: np.ndarray) -> None:
-        part = self.svc.cache.parts["augmented"]
-        if part.capacity and part.free_bytes >= out.nbytes:
-            self.svc.admit(sid, "augmented", out, out.nbytes)
 
     # ------------------------------------------------------------------
     def next_batch(self) -> Dict[str, np.ndarray]:
-        ids, _forms = self.svc.next_batch_ids(self.job_id)
-        epoch_tag = self.svc.ods.epoch.get(self.job_id, 0)
+        ids, _forms = self.session.next_batch_ids()
+        epoch_tag = self.session.epoch
         imgs = list(self.pool.map(
             lambda s: self._produce_sample(int(s), epoch_tag), ids))
         t0 = time.monotonic()
@@ -128,10 +145,10 @@ class DSIPipeline:
         paper's background-refill thread.  Also proactively tops up free
         augmented capacity (cold start)."""
         work = self.svc.take_refill_work(max_n)
-        part = self.svc.cache.parts["augmented"]
         spare = max_n - len(work)
-        if spare > 0 and part.capacity:
-            free_slots = part.free_bytes // max(self.ds.augmented_bytes(), 1)
+        if spare > 0 and self.svc.tier_capacity("augmented"):
+            free_slots = self.svc.tier_free_bytes("augmented") \
+                // max(self.ds.augmented_bytes(), 1)
             if free_slots > 0:
                 extra = self.svc.refill_candidates(min(spare, free_slots))
                 work = np.concatenate([work, extra]) if len(work) else extra
@@ -144,7 +161,7 @@ class DSIPipeline:
             img = self.ds.decode(enc, sid)
             out = augment_np(img, self.ds.crop_hw,
                              np.random.default_rng(sid ^ 0x5EED))
-            self._maybe_admit_augmented(sid, out)
+            self.session.admit(sid, "augmented", out, out.nbytes)
         except Exception:      # background worker must never kill serving
             pass
 
@@ -167,4 +184,4 @@ class DSIPipeline:
         if self._thread:
             self._thread.join(timeout=2.0)
         self.pool.shutdown(wait=False)
-        self.svc.unregister_job(self.job_id)
+        self.session.close()

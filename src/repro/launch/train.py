@@ -22,11 +22,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import AZURE_NC96, GB, SenecaServer
 from repro.configs import registry
 from repro.configs.base import ShapeConfig, ParallelismConfig
-from repro.core.perf_model import (GB, AZURE_NC96, DatasetProfile,
-                                   JobProfile)
-from repro.core.seneca import SenecaConfig, SenecaService
 from repro.data.pipeline import DSIPipeline
 from repro.data.storage import RemoteStorage
 from repro.data.synthetic import tiny
@@ -62,19 +60,20 @@ def lm_batch_source(model, batch: int, seq: int, seed: int = 0):
     return next_batch
 
 
-def image_batch_source(model, batch: int, n_jobs: int = 1, seed: int = 0):
-    """Real Seneca pipeline: storage -> 3-form cache -> ODS -> augment."""
+def image_batch_source(model, batch: int, seed: int = 0,
+                       backend: str = "numpy"):
+    """Real Seneca pipeline: storage -> 3-form cache -> ODS -> augment.
+
+    Returns (next_batch, pipeline, server); the server is the
+    :class:`repro.api.SenecaServer` facade — open more sessions on it for
+    concurrent jobs."""
     ds = tiny(n=4096)
     storage = RemoteStorage(ds, bandwidth=None)
-    svc = SenecaService(SenecaConfig(
-        cache_bytes=int(0.2 * GB),
-        hardware=AZURE_NC96,
-        dataset=DatasetProfile(ds.name, ds.n_samples,
-                               ds.mean_encoded_bytes,
-                               decoded_bytes=ds.decoded_bytes(),
-                               augmented_bytes=ds.augmented_bytes()),
-        seed=seed))
-    pipe = DSIPipeline(0, svc, storage, batch_size=batch, n_workers=4)
+    server = SenecaServer.for_dataset(ds, cache_bytes=int(0.2 * GB),
+                                      hardware=AZURE_NC96, seed=seed,
+                                      backend=backend)
+    pipe = DSIPipeline(server.open_session(batch_size=batch), storage,
+                       n_workers=4)
     d = model.cfg.d_model
 
     def next_batch():
@@ -91,7 +90,7 @@ def image_batch_source(model, batch: int, n_jobs: int = 1, seed: int = 0):
                                       max(model.cfg.n_classes, 1),
                                       jnp.int32)}
 
-    return next_batch, pipe, svc
+    return next_batch, pipe, server
 
 
 def main() -> None:
@@ -123,8 +122,8 @@ def main() -> None:
 
     pipe = None
     if cfg.family == "encoder":
-        source, pipe, svc = image_batch_source(model, args.batch)
-        print(f"seneca partition: {svc.partition.label}")
+        source, pipe, server = image_batch_source(model, args.batch)
+        print(f"seneca partition: {server.partition.label}")
     else:
         source = lm_batch_source(model, args.batch, args.seq)
 
@@ -140,8 +139,7 @@ def main() -> None:
     print(f"loss {hist[0]['loss']:.3f} -> {hist[-1]['loss']:.3f}")
     if pipe is not None:
         print("pipeline stage seconds:", pipe.times.as_dict())
-        print("seneca stats:", svc.stats())
-    if pipe:
+        print("seneca stats:", server.stats())
         pipe.stop()
 
 

@@ -5,3 +5,71 @@ import sys
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+# ----------------------------------------------------------------------
+# hypothesis fallback: the container may not ship hypothesis (the seed's
+# property-test modules then fail at *collection*).  Install a minimal
+# deterministic stand-in covering the handful of strategies these tests
+# use, so the properties still run (with seeded random examples) when the
+# real library is absent.
+try:
+    import hypothesis  # noqa: F401
+except ImportError:
+    import random
+    import types
+
+    class _Strategy:
+        def __init__(self, sample):
+            self.sample = sample
+
+    def _integers(lo, hi):
+        return _Strategy(lambda rng: rng.randint(lo, hi))
+
+    def _floats(lo, hi):
+        return _Strategy(lambda rng: rng.uniform(lo, hi))
+
+    def _lists(elem, min_size=0, max_size=10):
+        return _Strategy(lambda rng: [
+            elem.sample(rng)
+            for _ in range(rng.randint(min_size, max_size))])
+
+    def _tuples(*elems):
+        return _Strategy(lambda rng: tuple(e.sample(rng) for e in elems))
+
+    def _sampled_from(seq):
+        seq = list(seq)
+        return _Strategy(lambda rng: rng.choice(seq))
+
+    def _given(**strategies):
+        def deco(fn):
+            def wrapper():
+                rng = random.Random(0)
+                n = getattr(wrapper, "_max_examples", 10)
+                for _ in range(n):
+                    fn(**{k: s.sample(rng)
+                          for k, s in strategies.items()})
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper._max_examples = getattr(fn, "_max_examples", 10)
+            return wrapper
+        return deco
+
+    def _settings(max_examples=10, **_ignored):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco
+
+    _hyp = types.ModuleType("hypothesis")
+    _hyp.given = _given
+    _hyp.settings = _settings
+    _st = types.ModuleType("hypothesis.strategies")
+    _st.integers = _integers
+    _st.floats = _floats
+    _st.lists = _lists
+    _st.tuples = _tuples
+    _st.sampled_from = _sampled_from
+    _hyp.strategies = _st
+    sys.modules["hypothesis"] = _hyp
+    sys.modules["hypothesis.strategies"] = _st

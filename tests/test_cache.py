@@ -45,6 +45,38 @@ def test_tiered_lookup_most_processed_first():
     assert form == "augmented"
 
 
+def test_lookup_counts_one_miss_per_failed_lookup():
+    """A key absent from every partition is exactly ONE miss — the seed
+    never counted it at all (lookup probed `key in part` before get), so
+    hit_rate() was inflated."""
+    c = TieredCache(3000, (0.34, 0.33, 0.33))
+    assert c.lookup(7) == (None, None)
+    assert c.lookup_misses == 1
+    assert c.hit_rate() == 0.0
+    c.insert(7, "encoded", b"e", 10)
+    form, _ = c.lookup(7)
+    assert form == "encoded"
+    # one hit, one miss — not one hit, zero misses
+    assert c.hit_rate() == 0.5
+    c.lookup(8)
+    c.lookup(9)
+    assert c.lookup_misses == 3
+    assert abs(c.hit_rate() - 0.25) < 1e-9
+
+
+def test_gated_insert_capacity_under_lock():
+    """insert_gated evaluates the admission policy's capacity vote under
+    the cache lock, atomically with the put."""
+    from repro.api.policies import CapacityAdmission
+    c = TieredCache(300, (1.0, 0.0, 0.0))
+    pol = CapacityAdmission()
+    assert c.insert_gated(1, "encoded", b"a", 200, pol)
+    assert not c.insert_gated(2, "encoded", b"b", 200, pol)   # would overflow
+    assert 2 not in c.parts["encoded"]
+    # zero-capacity partitions always refuse
+    assert not c.insert_gated(3, "decoded", b"c", 1, pol)
+
+
 def test_status_array_roundtrip():
     c = TieredCache(3000, (0.34, 0.33, 0.33))
     c.insert(1, "encoded", b"", 10)

@@ -1,30 +1,25 @@
-"""End-to-end mechanistic pipeline: real threads, cache, ODS, decode."""
+"""End-to-end mechanistic pipeline: real threads, cache, ODS, decode —
+driven through the repro.api session facade."""
 import numpy as np
 import pytest
 
-from repro.core.perf_model import (AZURE_NC96, GB, DatasetProfile,
-                                   JobProfile)
-from repro.core.seneca import SenecaConfig, SenecaService
+from repro.api import AZURE_NC96, SenecaServer
 from repro.data.pipeline import DSIPipeline
 from repro.data.storage import RemoteStorage
 from repro.data.synthetic import tiny
 
 
-def _service(ds, cache_frac=0.4, use_ods=True, split=None):
-    profile = DatasetProfile(ds.name, ds.n_samples, ds.mean_encoded_bytes,
-                             decoded_bytes=ds.decoded_bytes(),
-                             augmented_bytes=ds.augmented_bytes())
-    cache_bytes = int(cache_frac * ds.n_samples * ds.augmented_bytes())
-    return SenecaService(SenecaConfig(
-        cache_bytes=cache_bytes, hardware=AZURE_NC96, dataset=profile,
-        use_ods=use_ods, split=split, seed=1))
+def _server(ds, cache_frac=0.4, use_ods=True, split=None, **kw):
+    return SenecaServer.for_dataset(ds, cache_frac=cache_frac,
+                                    hardware=AZURE_NC96, use_ods=use_ods,
+                                    split=split, seed=1, **kw)
 
 
 def test_pipeline_produces_normalized_batches():
     ds = tiny(n=256)
-    svc = _service(ds)
-    pipe = DSIPipeline(0, svc, RemoteStorage(ds), batch_size=16,
-                       n_workers=2)
+    server = _server(ds)
+    pipe = DSIPipeline(server.open_session(batch_size=16),
+                       RemoteStorage(ds), n_workers=2)
     b = pipe.next_batch()
     assert b["images"].shape == (16, *ds.crop_hw, 3)
     assert b["labels"].shape == (16,)
@@ -35,38 +30,69 @@ def test_pipeline_produces_normalized_batches():
 
 def test_two_jobs_share_cache_and_keep_epoch_semantics():
     ds = tiny(n=240)
-    svc = _service(ds)
+    server = _server(ds)
     storage = RemoteStorage(ds)
-    p0 = DSIPipeline(0, svc, storage, batch_size=20, n_workers=2)
-    p1 = DSIPipeline(1, svc, storage, batch_size=20, n_workers=2)
+    sessions = [server.open_session(batch_size=20) for _ in range(2)]
+    pipes = [DSIPipeline(s, storage, n_workers=2) for s in sessions]
     seen = {0: [], 1: []}
     for _ in range(ds.n_samples // 20):
-        for jid, p in ((0, p0), (1, p1)):
-            ids, _ = svc.next_batch_ids(jid)
+        for jid, s in enumerate(sessions):
+            ids, _ = s.next_batch_ids()
             seen[jid].extend(ids.tolist())
     for jid in (0, 1):
         assert sorted(seen[jid]) == list(range(ds.n_samples)), \
             f"job {jid} must see every sample exactly once per epoch"
-    p0.stop()
-    p1.stop()
+    for p in pipes:
+        p.stop()
 
 
 def test_ods_improves_hit_rate_vs_mdp_only():
     ds = tiny(n=400)
     results = {}
     for use_ods in (False, True):
-        svc = _service(ds, cache_frac=0.3, use_ods=use_ods,
-                       split=(0.0, 0.0, 1.0))
+        server = _server(ds, cache_frac=0.3, use_ods=use_ods,
+                         split=(0.0, 0.0, 1.0))
         storage = RemoteStorage(ds)
-        pipes = [DSIPipeline(j, svc, storage, batch_size=20, n_workers=2)
-                 for j in (0, 1)]
+        pipes = [DSIPipeline(server.open_session(batch_size=20), storage,
+                             n_workers=2) for _ in range(2)]
         for _ in range(2 * ds.n_samples // 20):
             for p in pipes:
                 p.next_batch()
-        results[use_ods] = svc.ods.hit_rate()
+        results[use_ods] = server.stats()["ods_hit_rate"]
         for p in pipes:
             p.stop()
     assert results[True] > results[False] + 0.02, results
+
+
+def test_legacy_service_entry_point_still_works():
+    """The deprecated core.seneca + (job_id, service, ...) call style keeps
+    running behind the facade shims."""
+    import sys
+    ds = tiny(n=128)
+    sys.modules.pop("repro.core.seneca", None)   # force re-import warning
+    with pytest.deprecated_call():
+        from repro.core.seneca import SenecaConfig, SenecaService
+    from repro.api import DatasetProfile
+    svc = SenecaService(SenecaConfig(
+        cache_bytes=int(0.4 * ds.n_samples * ds.augmented_bytes()),
+        hardware=AZURE_NC96,
+        dataset=DatasetProfile(ds.name, ds.n_samples,
+                               ds.mean_encoded_bytes,
+                               decoded_bytes=ds.decoded_bytes(),
+                               augmented_bytes=ds.augmented_bytes()),
+        seed=1))
+    with pytest.deprecated_call():
+        pipe = DSIPipeline(0, svc, RemoteStorage(ds), batch_size=16,
+                           n_workers=2)
+    b = pipe.next_batch()
+    assert b["images"].shape[0] == 16
+    ids, forms = svc.next_batch_ids(0)         # raw job_id API still live
+    assert len(ids) == 16
+    pipe.stop()
+    with pytest.deprecated_call():             # positional batch_size form
+        pipe2 = DSIPipeline(1, svc, RemoteStorage(ds), 8, n_workers=2)
+    assert pipe2.next_batch()["images"].shape[0] == 8
+    pipe2.stop()
 
 
 def test_deterministic_samples():
