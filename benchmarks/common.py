@@ -7,6 +7,8 @@ runs paper-size populations.
 """
 from __future__ import annotations
 
+import json
+import os
 import time
 from dataclasses import replace
 from typing import Callable, List, Tuple
@@ -38,3 +40,14 @@ def timed(name: str, fn: Callable[[], str]) -> Row:
 def emit(rows: List[Row]) -> None:
     for name, us, derived in rows:
         print(f"{name},{us:.0f},{derived}")
+
+
+def write_bench_json(name: str, payload: dict, out_dir: str = ".") -> str:
+    """Write a machine-readable benchmark artifact ``BENCH_<name>.json``
+    (the contract downstream tooling / CI trend jobs consume); returns
+    the path.  ``default=str`` keeps numpy scalars and labels writable."""
+    path = os.path.join(out_dir, f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, sort_keys=True, default=str)
+        f.write("\n")
+    return path

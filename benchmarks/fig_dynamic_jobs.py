@@ -1,0 +1,117 @@
+"""Dynamic job mix: staggered session arrivals/departures, ``static`` vs
+``adaptive`` repartitioning on the *live* threaded stack.
+
+The paper's concurrent-jobs experiments (Fig. 14, §7) hold the job set
+fixed, so the construction-time MDP split stays valid; this benchmark is
+the scenario none of the fig* harnesses could run before — jobs arrive
+and leave mid-run while observed stage costs (CPU decode/augment on this
+host, token-bucket storage) diverge from the Table-3 profile.  The
+``adaptive`` server calibrates its performance model from pipeline
+telemetry and resizes the TieredCache in place; ``static`` keeps the
+construction split.
+
+Three phases over one shared server/storage per mode:
+
+  A. one session warms the cache alone;
+  B. two more sessions arrive (3 concurrent pipelines);
+  C. the two newcomers leave, the original session finishes.
+
+Emits ``BENCH_dynamic.json`` (benchmarks/common.write_bench_json) with
+per-mode aggregate hit rates and the repartition event log, plus the
+usual ``name,us,derived`` rows for run.py.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+from benchmarks.common import write_bench_json
+from repro.api import SenecaServer
+from repro.data.pipeline import DSIPipeline
+from repro.data.storage import RemoteStorage
+from repro.data.synthetic import tiny
+
+
+def _drain(pipes: List[DSIPipeline], n_batches: int) -> None:
+    """Round-robin ``n_batches`` from each pipeline (interleaved, so the
+    sessions genuinely contend for the shared cache + storage budget)."""
+    for _ in range(n_batches):
+        for pipe in pipes:
+            pipe.next_batch()
+
+
+def run_mode(mode: str, *, n_samples: int, batch: int,
+             phase_batches: Tuple[int, int, int],
+             bandwidth: float, seed: int = 0) -> Dict:
+    ds = tiny(n=n_samples)
+    server = SenecaServer.for_dataset(
+        ds, cache_frac=0.3, seed=seed, repartition=mode,
+        repartition_cooldown=0.0, telemetry_min_samples=16)
+    storage = RemoteStorage(ds, bandwidth=bandwidth)
+    initial = server.partition.label
+
+    def open_pipe() -> DSIPipeline:
+        sess = server.open_session(batch_size=batch)
+        return DSIPipeline(sess, storage, n_workers=3, seed=seed)
+
+    a, b, c = phase_batches
+    p0 = open_pipe()
+    _drain([p0], a)                       # phase A: lone job
+    p1, p2 = open_pipe(), open_pipe()
+    _drain([p0, p1, p2], b)               # phase B: arrivals -> 3 jobs
+    p1.stop()
+    p2.stop()
+    _drain([p0], c)                       # phase C: departures
+    stats = server.stats()
+    p0.stop()
+    server.close()
+
+    rp = stats["repartitions"]
+    return {
+        "mode": mode,
+        "partition_initial": initial,
+        "partition_final": rp["partition"],
+        "cache_hit_rate": stats["cache_lookup_hit_rate"],
+        "ods_hit_rate": stats["ods_hit_rate"],
+        "substitutions": stats["substitutions"],
+        "storage_fetches": storage.fetches,
+        "repartitions": {k: rp[k] for k in
+                         ("mode", "resolves", "applied", "skipped")},
+        "last_applied": rp["last_applied"],
+        "tier_counts": stats["tier_counts"],
+    }
+
+
+def run(full: bool = False) -> List[Tuple[str, str]]:
+    knobs = dict(n_samples=3_072 if full else 384, batch=16,
+                 phase_batches=(16, 16, 12) if full else (8, 8, 6),
+                 bandwidth=30e6)
+    results = {mode: run_mode(mode, **knobs)
+               for mode in ("static", "adaptive")}
+    payload = {"config": {k: str(v) for k, v in knobs.items()},
+               **results}
+    path = write_bench_json("dynamic", payload)
+
+    rows = []
+    for mode, r in results.items():
+        rows.append((
+            f"fig_dynamic/{mode}",
+            f"hit={r['cache_hit_rate']:.3f} ods={r['ods_hit_rate']:.3f} "
+            f"applied={r['repartitions']['applied']} "
+            f"split={r['partition_initial']}->{r['partition_final']}"))
+    adaptive, static = results["adaptive"], results["static"]
+    rows.append((
+        "fig_dynamic/summary",
+        f"adaptive-static hit delta="
+        f"{adaptive['cache_hit_rate'] - static['cache_hit_rate']:+.3f} "
+        f"events={adaptive['repartitions']['applied']} json={path}"))
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    args = ap.parse_args()
+    for name, derived in run(full=args.full):
+        print(f"{name},{derived}")

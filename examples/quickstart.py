@@ -38,9 +38,10 @@ def run_seneca(args) -> None:
     # -- the docs/API.md quickstart, verbatim ---------------------------
     ds = tiny(n=1024)
     server = SenecaServer.for_dataset(ds, cache_frac=0.35, seed=0,
-                                      backend=args.backend)
+                                      backend=args.backend,
+                                      repartition=args.repartition)
     print(f"[quickstart] MDP partition: {server.partition.label} "
-          f"(backend={args.backend})")
+          f"(backend={args.backend}, repartition={args.repartition})")
 
     cfg = registry.get_reduced("vit-huge")
     model = build(cfg)
@@ -77,6 +78,16 @@ def run_seneca(args) -> None:
     print(f"[quickstart] ods_hit_rate={stats['ods_hit_rate']:.3f} "
           f"substitutions={stats['substitutions']} "
           f"tier_counts={stats['tier_counts']}")
+    rp = stats["repartitions"]
+    if rp["applied"]:
+        last = rp["last_applied"]
+        print(f"[quickstart] repartitioned {rp['applied']}x "
+              f"({last['from']} -> {last['to']}, "
+              f"predicted gain {last['predicted_gain']:+.1%}); "
+              f"live partition: {rp['partition']}")
+    else:
+        print(f"[quickstart] live partition: {rp['partition']} "
+              f"(mode={rp['mode']}, no repartition applied)")
     assert np.isfinite(losses).all()
     assert stats["hits"] + stats["misses"] > 0
     print("[quickstart] OK — trained through the repro.api facade")
@@ -116,6 +127,9 @@ def main() -> None:
     ap.add_argument("--arch", default="qwen3-8b")
     ap.add_argument("--backend", default="numpy",
                     choices=("numpy", "jax"))
+    ap.add_argument("--repartition", default="static",
+                    choices=("static", "on-change", "adaptive"),
+                    help="live cache repartitioning mode (docs/API.md)")
     ap.add_argument("--steps", type=int, default=None,
                     help="training steps (default: 30, or 200 with --lm)")
     ap.add_argument("--batch", type=int, default=16)

@@ -13,6 +13,13 @@ metadata engine; ``sampler=`` / ``admission=`` / ``eviction=`` select
 policies by registered name ("ods"/"naive", "unseen-only"/"capacity",
 "refcount"/"lru"); :func:`register_policy` adds new ones.
 
+Live repartitioning: ``SenecaConfig(repartition="adaptive")`` turns on
+the telemetry-calibrated :class:`RepartitionController` — pipelines
+report stage timings into :class:`TelemetryAggregator`, the controller
+re-solves the MDP on the calibrated profile and resizes the cache split
+in place when the predicted gain clears hysteresis (docs/API.md
+"Telemetry + adaptive repartitioning").
+
 The fluid-flow simulator behind the paper-figure benchmarks is re-exported
 here too, so benchmark and example code imports one namespace only.  See
 docs/API.md for the full tour.
@@ -25,9 +32,11 @@ from repro.api.policies import (AdmissionPolicy, CapacityAdmission,
                                 OdsSampler, RefcountEviction, SamplerPolicy,
                                 UnseenOnlyAdmission, policy_names,
                                 register_policy, resolve_policy)
-from repro.api.server import (CODE_FORM, FORM_CODE, SenecaConfig,
-                              SenecaServer, SenecaService, Session,
-                              SessionClosed)
+from repro.api.server import (CODE_FORM, FORM_CODE, RepartitionController,
+                              SenecaConfig, SenecaServer, SenecaService,
+                              Session, SessionClosed)
+from repro.api.telemetry import (Ewma, TelemetryAggregator,
+                                 TelemetrySnapshot)
 # hardware / dataset profiles + the closed-form DSI model (Eqs. 1-9)
 from repro.core.perf_model import (AWS_P3, AZURE_NC96, DATASETS,
                                    EVAL_PROFILES, GB, Gbit, IMAGENET_1K,
@@ -44,6 +53,9 @@ __all__ = [
     # server / session facade
     "SenecaServer", "Session", "SessionClosed", "SenecaConfig",
     "SenecaService", "FORM_CODE", "CODE_FORM",
+    # telemetry + adaptive repartitioning
+    "RepartitionController", "TelemetryAggregator", "TelemetrySnapshot",
+    "Ewma",
     # policies
     "SamplerPolicy", "AdmissionPolicy", "EvictionPolicy",
     "OdsSampler", "NaiveSampler", "UnseenOnlyAdmission",

@@ -21,11 +21,18 @@ Construction knobs (``SenecaConfig`` fields or ``SenecaServer`` kwargs):
 runs the fused ``ods_jax.substitute_jit`` kernel), and ``sampler`` /
 ``admission`` / ``eviction`` select policies by registered name
 (see :mod:`repro.api.policies`).
+
+``repartition`` selects how the cache split tracks the workload:
+``"static"`` (construction-time MDP, the default), ``"on-change"``
+(re-solve when sessions open/close) or ``"adaptive"`` (additionally
+re-solve on telemetry-calibrated drift and resize the TieredCache live
+— see :class:`RepartitionController` and docs/API.md).
 """
 from __future__ import annotations
 
 import itertools
 import threading
+import time
 from dataclasses import dataclass, field, replace
 from typing import Dict, Optional, Tuple
 
@@ -33,15 +40,19 @@ import numpy as np
 
 from repro.api.backends import NO_REFCOUNT_EVICT, resolve_backend
 from repro.api.policies import resolve_policy
+from repro.api.telemetry import TelemetryAggregator
 from repro.cache.store import FORMS, TieredCache
 from repro.core import mdp
 from repro.core.ods import (AUGMENTED, DECODED, ENCODED, IN_STORAGE,
                             EpochSampler)
 from repro.core.perf_model import (AZURE_NC96, DatasetProfile,
-                                   HardwareProfile, JobProfile)
+                                   HardwareProfile, JobProfile, calibrate)
 
 __all__ = ["SenecaConfig", "SenecaService", "SenecaServer", "Session",
-           "SessionClosed", "FORM_CODE", "CODE_FORM"]
+           "SessionClosed", "RepartitionController", "FORM_CODE",
+           "CODE_FORM"]
+
+REPARTITION_MODES = ("static", "on-change", "adaptive")
 
 FORM_CODE = {"encoded": ENCODED, "decoded": DECODED, "augmented": AUGMENTED}
 CODE_FORM = {v: k for k, v in FORM_CODE.items()}
@@ -67,6 +78,170 @@ class SenecaConfig:
     sampler: Optional[str] = None      # None -> "ods" / "naive" per use_ods
     admission: Optional[str] = None    # None -> "unseen-only" / "capacity"
     eviction: Optional[str] = None     # None -> "refcount"
+    # live repartitioning (RepartitionController):
+    #   "static"    — solve the MDP once at construction (seed behavior)
+    #   "on-change" — re-solve when sessions open/close
+    #   "adaptive"  — "on-change" + telemetry-calibrated drift ticks
+    repartition: str = "static"
+    repartition_drift: float = 0.15    # re-solve when calibrated prediction
+    #                                    of the live split drifts this much
+    repartition_gain: float = 0.05     # apply only if predicted gain clears
+    repartition_cooldown: float = 1.0  # min seconds between adaptive ticks
+    repartition_period: float = 0.0    # >0: background tick thread period
+    telemetry_min_samples: int = 32    # per-signal floor for calibrate()
+
+
+class RepartitionController:
+    """Closes the loop between telemetry and the MDP split (§5.1/§5.3).
+
+    The static pipeline is: solve the MDP once at construction and never
+    look back.  This controller re-solves with a telemetry-**calibrated**
+    hardware profile and resizes the live :class:`TieredCache` when it is
+    predicted to pay off, with two layers of hysteresis against churn:
+
+    * **re-solve gate** — adaptive ticks only re-run the (cached-grid)
+      simplex pass when the calibrated model's prediction for the *live*
+      split has drifted more than ``repartition_drift`` from the
+      prediction recorded when that split was chosen (plus a
+      ``repartition_cooldown`` floor between ticks).  Session open/close
+      always re-solves ("on-change" + "adaptive" modes): that is the
+      paper's concurrent-jobs trigger and costs <1s.
+    * **apply gate** — a re-solved split is applied only when it differs
+      from the live one and its predicted throughput clears
+      ``repartition_gain`` over the live split's (both under the same
+      calibrated profile).
+
+    Steady telemetry therefore converges: the first qualifying re-solve
+    re-baselines the drift reference, and subsequent ticks no-op.
+    """
+
+    MAX_EVENTS = 64
+
+    def __init__(self, service: "SenecaService"):
+        self.service = service
+        cfg = service.cfg
+        self.mode = cfg.repartition
+        self._lock = threading.Lock()
+        self._solver: Optional[mdp.IncrementalSolver] = None
+        self._baseline: Optional[float] = None   # model view of live split
+        self._last_tick = float("-inf")
+        self.resolves = 0
+        self.applied = 0
+        self.skipped = 0
+        self.events: list = []
+        self._last_applied: Optional[dict] = None
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+        if self.mode == "adaptive" and cfg.repartition_period > 0:
+            self._thread = threading.Thread(
+                target=self._run, name="seneca-repartition", daemon=True)
+            self._thread.start()
+
+    # -- plumbing ------------------------------------------------------
+    @property
+    def active(self) -> bool:
+        return self.mode != "static" and not self._stop.is_set()
+
+    def _run(self) -> None:
+        period = self.service.cfg.repartition_period
+        while not self._stop.wait(period):
+            try:
+                self.tick()
+            except Exception:        # pragma: no cover - must never kill
+                pass                 # the host process from a daemon tick
+
+    def stop(self) -> None:
+        """Deactivate: no further re-solves fire (session churn during
+        server teardown must not resize a cache about to be dropped)."""
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout=2.0)
+
+    def _get_solver(self) -> mdp.IncrementalSolver:
+        if self._solver is None:
+            cfg = self.service.cfg
+            self._solver = mdp.IncrementalSolver(cfg.dataset, cfg.job,
+                                                 cfg.partition_step)
+        return self._solver
+
+    def _calibrated(self):
+        return calibrate(self.service.hardware,
+                         self.service.telemetry.snapshot(),
+                         self.service.cfg.telemetry_min_samples)
+
+    def _live_split(self):
+        p = self.service.partition
+        return (p.x_e, p.x_d, p.x_a)
+
+    # -- triggers ------------------------------------------------------
+    def on_sessions_changed(self) -> bool:
+        """Session open/close: unconditional re-solve (apply still gated)."""
+        if not self.active:
+            return False
+        with self._lock:
+            return self._resolve_locked(self._calibrated(), "sessions")
+
+    def tick(self) -> bool:
+        """Adaptive drift check; returns True when a resize was applied."""
+        if self.mode != "adaptive" or self._stop.is_set():
+            return False
+        with self._lock:
+            now = time.monotonic()
+            if now - self._last_tick < self.service.cfg.repartition_cooldown:
+                return False
+            self._last_tick = now
+            hw = self._calibrated()
+            solver = self._get_solver()
+            pred_live = solver.predict(hw, self._live_split())
+            if self._baseline is None or not np.isfinite(self._baseline):
+                # manual-split servers carry throughput=NaN; anchor the
+                # drift reference on the uncalibrated model's view
+                base = self.service.partition.throughput
+                self._baseline = base if np.isfinite(base) else \
+                    solver.predict(self.service.hardware, self._live_split())
+            drift = abs(pred_live - self._baseline) / max(self._baseline,
+                                                          1e-12)
+            if drift <= self.service.cfg.repartition_drift:
+                return False
+            return self._resolve_locked(hw, "drift", pred_live=pred_live)
+
+    # -- the re-solve + hysteresis-gated apply -------------------------
+    def _resolve_locked(self, hw, trigger: str,
+                        pred_live: Optional[float] = None) -> bool:
+        solver = self._get_solver()
+        live = self._live_split()
+        if pred_live is None:
+            pred_live = solver.predict(hw, live)
+        best = solver.solve(hw)
+        self.resolves += 1
+        gain = (best.throughput - pred_live) / max(pred_live, 1e-12)
+        new_split = (best.x_e, best.x_d, best.x_a)
+        apply = (new_split != live
+                 and gain > self.service.cfg.repartition_gain)
+        event = {"trigger": trigger, "profile": hw.name,
+                 "from": self.service.partition.label, "to": best.label,
+                 "predicted_gain": round(float(gain), 4),
+                 "applied": bool(apply)}
+        if apply:
+            event["demoted"] = self.service.apply_partition(best)
+            self.applied += 1
+            self._baseline = best.throughput
+            self._last_applied = event
+        else:
+            self.skipped += 1
+            self._baseline = pred_live
+        self.events.append(event)
+        del self.events[:-self.MAX_EVENTS]
+        return apply
+
+    def summary(self) -> Dict[str, object]:
+        with self._lock:
+            return {"mode": self.mode, "resolves": self.resolves,
+                    "applied": self.applied, "skipped": self.skipped,
+                    "partition": self.service.partition.label,
+                    "last": dict(self.events[-1]) if self.events else None,
+                    "last_applied": dict(self._last_applied)
+                    if self._last_applied else None}
 
 
 class SenecaService:
@@ -80,14 +255,21 @@ class SenecaService:
     def __init__(self, cfg: SenecaConfig, *, backend=None, sampler=None,
                  admission=None, eviction=None):
         self.cfg = cfg
+        if cfg.repartition not in REPARTITION_MODES:
+            raise ValueError(f"unknown repartition mode "
+                             f"{cfg.repartition!r}; expected one of "
+                             f"{REPARTITION_MODES}")
+        # base profile with the *configured* cache size: the static solve,
+        # and later every calibrated re-solve, all run against this
+        self.hardware = cfg.hardware
+        if self.hardware.s_cache != cfg.cache_bytes:
+            self.hardware = replace(self.hardware,
+                                    s_cache=float(cfg.cache_bytes))
         if cfg.split is not None:
             self.partition = mdp.Partition(*cfg.split, throughput=float("nan"))
         else:
-            hw = cfg.hardware
-            if hw.s_cache != cfg.cache_bytes:
-                hw = replace(hw, s_cache=float(cfg.cache_bytes))
-            self.partition = mdp.optimize(hw, cfg.dataset, cfg.job,
-                                          cfg.partition_step)
+            self.partition = mdp.optimize(self.hardware, cfg.dataset,
+                                          cfg.job, cfg.partition_step)
         self.sampler = resolve_policy(
             "sampler", sampler or cfg.sampler
             or ("ods" if cfg.use_ods else "naive"))
@@ -106,6 +288,8 @@ class SenecaService:
         self._samplers: Dict[int, EpochSampler] = {}
         self._lock = threading.Lock()
         self._refill_pending: list = []
+        self.telemetry = TelemetryAggregator()
+        self.controller = RepartitionController(self)
 
     # legacy alias: the engine's ODS metadata (numpy state or jax adapter)
     @property
@@ -119,11 +303,14 @@ class SenecaService:
             self._samplers[job_id] = EpochSampler(
                 self.cfg.dataset.n_total, batch_size,
                 self.cfg.seed + 97 * (job_id + 1))
+        # outside the metadata lock: the controller's apply path takes it
+        self.controller.on_sessions_changed()
 
     def unregister_job(self, job_id: int) -> None:
         with self._lock:
             self.backend.unregister_job(job_id)
             self._samplers.pop(job_id, None)
+        self.controller.on_sessions_changed()
 
     # ------------------------------------------------------------------
     def next_batch_ids(self, job_id: int) -> Tuple[np.ndarray, np.ndarray]:
@@ -153,9 +340,11 @@ class SenecaService:
         service lock, the capacity vote + insert run atomically under the
         cache lock (no check-then-act window between them).
         """
-        # partition capacities are immutable after construction: skip the
-        # locks entirely for tiers the MDP split zeroed out (pipeline
-        # workers admit every produced form on the hot path)
+        # fast path for tiers the current split zeroes out (pipeline
+        # workers admit every produced form on the hot path).  The
+        # unlocked capacity read is safe: under "static" repartitioning
+        # capacities never change, and a concurrent resize() at worst
+        # costs this one admission — the next call re-reads.
         if self.cache.parts[form].capacity == 0:
             return False
         with self._lock:
@@ -165,8 +354,18 @@ class SenecaService:
                                      self.admission)
         if ok:
             with self._lock:
-                self.backend.mark_cached(np.asarray([sample_id]),
-                                         FORM_CODE[form])
+                # under live repartitioning a resize may have evicted the
+                # entry between the insert and this deferred mark; marking
+                # anyway would leave phantom CACHED metadata.  Re-validate
+                # residency inside the metadata lock (same metadata->cache
+                # nesting as apply_partition's scan, so the two serialize).
+                if self.controller.active:
+                    with self.cache.lock:
+                        ok = self.cache.parts[form].peek(sample_id) \
+                            is not None
+                if ok:
+                    self.backend.mark_cached(np.asarray([sample_id]),
+                                             FORM_CODE[form])
         return ok
 
     def refill_candidates(self, k: int) -> np.ndarray:
@@ -191,6 +390,51 @@ class SenecaService:
 
     def lookup(self, sample_id: int):
         return self.cache.lookup(sample_id)
+
+    # ------------------------------------------------------------------
+    def apply_partition(self, partition: mdp.Partition) -> Dict[str, int]:
+        """Resize the live cache to ``partition`` and patch ODS metadata.
+
+        Keys evicted by shrinking partitions are *demoted*: their status
+        falls back to the most-processed form still resident (peeked
+        stats-neutrally), or to IN_STORAGE when nothing remains.  The
+        residency scan + metadata patch run under the metadata lock
+        (cache lock nested inside, the same metadata->cache order
+        ``next_batch_ids`` uses): a concurrent ``admit`` marks its
+        status under this lock *after* its insert, so the scan either
+        sees the insert or is serialized before the re-mark — no stale
+        IN_STORAGE can overwrite a live admission.
+        """
+        evicted = self.cache.resize(
+            (partition.x_e, partition.x_d, partition.x_a))
+        self.partition = partition
+        demoted: Dict[str, int] = {}
+        if evicted:
+            keys = sorted(set().union(*evicted.values()))
+            with self._lock:
+                regrouped: Dict[Optional[str], list] = {}
+                with self.cache.lock:     # one pass, one acquisition
+                    for k in keys:
+                        for form in ("augmented", "decoded", "encoded"):
+                            if self.cache.parts[form].peek(k) is not None:
+                                break
+                        else:
+                            form = None
+                        regrouped.setdefault(form, []).append(k)
+                for form, ids in regrouped.items():
+                    arr = np.asarray(ids, np.int64)
+                    if form is None:
+                        self.backend.mark_evicted(arr)
+                    else:
+                        self.backend.mark_cached(arr, FORM_CODE[form])
+                    demoted[form or "storage"] = len(ids)
+        return demoted
+
+    def maybe_repartition(self) -> bool:
+        """Adaptive-mode tick: cheap no-op unless telemetry-calibrated
+        drift warrants a re-solve AND the predicted gain clears the
+        hysteresis threshold.  Safe to call from pipeline threads."""
+        return self.controller.tick()
 
     def tier_capacity(self, form: str) -> int:
         return self.cache.parts[form].capacity
@@ -219,6 +463,8 @@ class SenecaService:
             "tier_counts": {form: int(tiers[FORM_CODE[form]])
                             for form in FORMS},
             "metadata_bytes": self.backend.metadata_bytes(),
+            "repartitions": self.controller.summary(),
+            "telemetry": self.telemetry.as_dict(),
         }
 
 
@@ -348,12 +594,20 @@ class SenecaServer:
     def partition(self):
         return self.service.partition
 
+    def maybe_repartition(self) -> bool:
+        """Explicit adaptive tick (see :class:`RepartitionController`);
+        the alternative to the ``repartition_period`` background thread."""
+        return self.service.maybe_repartition()
+
     def stats(self) -> Dict[str, float]:
         out = self.service.stats()
         out["n_sessions"] = self.n_sessions
         return out
 
     def close(self) -> None:
+        # stop the controller first: the session-close cascade must not
+        # trigger re-solves/resizes of a cache that is being torn down
+        self.service.controller.stop()
         with self._lock:
             live = list(self._sessions.values())
         for sess in live:

@@ -1,0 +1,186 @@
+"""Runtime telemetry for the DSI pipeline (the measurement half of
+adaptive repartitioning).
+
+The MDP's performance model (Seneca §5.1) is parameterized by Table-3
+hardware rates; on any real deployment the observed rates drift — CPU
+contention from concurrent jobs, storage throttling, differently sized
+samples.  :class:`TelemetryAggregator` is the shared sink every
+:class:`~repro.data.pipeline.DSIPipeline` worker reports into:
+
+* per-stage latency EWMAs (``fetch_storage`` / ``fetch_cache`` /
+  ``decode`` / ``augment`` / ``collate``), per *sample*;
+* per-transfer effective bandwidth EWMAs for the storage and cache
+  channels (bytes/s, stall time included);
+* per-form serve counts (which tier answered each lookup).
+
+:meth:`snapshot` folds these into a :class:`TelemetrySnapshot` whose
+``t_da`` / ``t_a`` / ``b_storage`` / ``b_cache`` fields line up with the
+:class:`~repro.core.perf_model.HardwareProfile` fields of the same name —
+:func:`repro.core.perf_model.calibrate` swaps them in, and the
+:class:`~repro.api.server.RepartitionController` re-runs MDP on the
+calibrated profile.
+
+Thread-safety: one lock around all mutation; every reporter (pipeline
+fetch/decode/augment workers, refill threads) shares one aggregator per
+:class:`~repro.api.server.SenecaService`.
+
+Notes on estimator semantics:
+
+* CPU rates are *node-aggregate* samples/s: per-sample latency EWMAs are
+  scaled by the registered worker concurrency (``add_concurrency`` /
+  ``remove_concurrency``, called by pipelines on start/stop), mirroring
+  how Table 3 measures t_DA with all cores busy.
+* Bandwidths are per-transfer effective rates.  Under a shared
+  token-bucket (``RemoteStorage``) each transfer already observes its
+  contended share, so the EWMA approximates the per-stream bandwidth and
+  is deliberately *not* multiplied by concurrency.
+"""
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+STAGES = ("fetch_storage", "fetch_cache", "decode", "augment", "collate")
+CHANNELS = ("storage", "cache")
+
+
+class Ewma:
+    """Exponentially weighted moving average with an observation count."""
+
+    def __init__(self, alpha: float = 0.2):
+        self.alpha = float(alpha)
+        self.value: Optional[float] = None
+        self.n = 0
+
+    def update(self, x: float) -> None:
+        x = float(x)
+        self.value = x if self.value is None \
+            else self.alpha * x + (1.0 - self.alpha) * self.value
+        self.n += 1
+
+    def __repr__(self) -> str:
+        return f"Ewma(value={self.value}, n={self.n})"
+
+
+@dataclass(frozen=True)
+class TelemetrySnapshot:
+    """Point-in-time read of the aggregator (all derived values pure).
+
+    ``t_da`` / ``t_a`` / ``b_storage`` / ``b_cache`` are ``None`` until the
+    underlying signals exist; counts let :func:`perf_model.calibrate`
+    apply a min-samples floor per field.
+    """
+    stage_latency: Dict[str, Optional[float]]   # EWMA seconds/sample
+    stage_n: Dict[str, int]
+    bandwidth: Dict[str, Optional[float]]       # EWMA bytes/s per channel
+    bandwidth_n: Dict[str, int]
+    serve_counts: Dict[str, int]                # per-form + "storage"
+    concurrency: int
+    t_da: Optional[float] = None                # samples/s, decode+augment
+    t_a: Optional[float] = None                 # samples/s, augment-only
+    b_storage: Optional[float] = None           # bytes/s
+    b_cache: Optional[float] = None             # bytes/s
+    counts: Dict[str, int] = field(default_factory=dict)  # per calibration field
+
+    @property
+    def n_serves(self) -> int:
+        return sum(self.serve_counts.values())
+
+    def hit_rates(self) -> Dict[str, float]:
+        """Fraction of lookups answered by each tier ('storage' = miss)."""
+        total = self.n_serves
+        if not total:
+            return {k: 0.0 for k in self.serve_counts}
+        return {k: v / total for k, v in self.serve_counts.items()}
+
+
+class TelemetryAggregator:
+    """Thread-safe sink for pipeline stage timings, transfer bandwidths
+    and per-form serve counts; snapshots feed ``perf_model.calibrate``."""
+
+    def __init__(self, alpha: float = 0.2):
+        self._lock = threading.Lock()
+        self._alpha = float(alpha)
+        self._stages: Dict[str, Ewma] = {s: Ewma(alpha) for s in STAGES}
+        self._bw: Dict[str, Ewma] = {c: Ewma(alpha) for c in CHANNELS}
+        self._serves: Dict[str, int] = {
+            "encoded": 0, "decoded": 0, "augmented": 0, "storage": 0}
+        self._concurrency = 0
+
+    # -- reporting (pipeline side) -------------------------------------
+    def add_concurrency(self, n: int) -> None:
+        with self._lock:
+            self._concurrency += int(n)
+
+    def remove_concurrency(self, n: int) -> None:
+        with self._lock:
+            self._concurrency = max(0, self._concurrency - int(n))
+
+    def record_stage(self, stage: str, seconds: float, n: int = 1) -> None:
+        """Record ``n`` samples taking ``seconds`` total in ``stage``."""
+        if n <= 0 or stage not in self._stages:
+            return
+        with self._lock:
+            self._stages[stage].update(seconds / n)
+
+    def record_bytes(self, channel: str, nbytes: int,
+                     seconds: float) -> None:
+        """Record one transfer: ``nbytes`` moved in ``seconds``."""
+        if channel not in self._bw or nbytes <= 0:
+            return
+        with self._lock:
+            # floor on the denominator: an in-memory hit can measure ~0s
+            self._bw[channel].update(nbytes / max(seconds, 1e-9))
+
+    def record_serve(self, form: Optional[str]) -> None:
+        """Which tier answered a lookup (None = storage fetch)."""
+        key = form if form in self._serves else "storage"
+        with self._lock:
+            self._serves[key] += 1
+
+    # -- reading (controller side) -------------------------------------
+    def snapshot(self) -> TelemetrySnapshot:
+        with self._lock:
+            lat = {s: e.value for s, e in self._stages.items()}
+            lat_n = {s: e.n for s, e in self._stages.items()}
+            bw = {c: e.value for c, e in self._bw.items()}
+            bw_n = {c: e.n for c, e in self._bw.items()}
+            serves = dict(self._serves)
+            conc = max(self._concurrency, 1)
+
+        def rate(total_latency: Optional[float]) -> Optional[float]:
+            if not total_latency or total_latency <= 0:
+                return None
+            return conc / total_latency
+
+        dec, aug = lat["decode"], lat["augment"]
+        t_da = rate((dec + aug) if dec is not None and aug is not None
+                    else None)
+        t_a = rate(aug)
+        counts = {
+            "t_da": min(lat_n["decode"], lat_n["augment"]),
+            "t_a": lat_n["augment"],
+            "b_storage": bw_n["storage"],
+            "b_cache": bw_n["cache"],
+        }
+        return TelemetrySnapshot(
+            stage_latency=lat, stage_n=lat_n, bandwidth=bw,
+            bandwidth_n=bw_n, serve_counts=serves, concurrency=conc,
+            t_da=t_da, t_a=t_a,
+            b_storage=bw["storage"], b_cache=bw["cache"], counts=counts)
+
+    def as_dict(self) -> Dict[str, object]:
+        """JSON-friendly summary for ``stats()`` surfaces."""
+        snap = self.snapshot()
+        return {
+            "stage_latency_s": {k: v for k, v in snap.stage_latency.items()
+                                if v is not None},
+            "bandwidth_bps": {k: v for k, v in snap.bandwidth.items()
+                              if v is not None},
+            "serve_counts": dict(snap.serve_counts),
+            "hit_rates": snap.hit_rates(),
+            "concurrency": snap.concurrency,
+            "t_da": snap.t_da, "t_a": snap.t_a,
+            "b_storage": snap.b_storage, "b_cache": snap.b_cache,
+        }

@@ -55,6 +55,12 @@ class CachePartition:
             self._data.move_to_end(key)
         return v
 
+    def peek(self, key: int):
+        """Stats-neutral read: no hit/miss counting, no LRU promotion.
+        For controller/refill scans that inspect residency without being
+        part of the serving path."""
+        return self._data.get(key)
+
     def put(self, key: int, value: Any, nbytes: int) -> List[int]:
         """Insert; returns evicted keys (never evicts under 'none' — the
         insert is rejected instead, MINIO-style).  Re-inserting an existing
@@ -76,6 +82,23 @@ class CachePartition:
         self._sizes[key] = nbytes
         self.stats.bytes_used += nbytes
         self.stats.inserts += 1
+        return evicted
+
+    def set_capacity(self, capacity_bytes: int) -> List[int]:
+        """Resize the partition live; returns the keys evicted to fit.
+
+        Shrinking below current usage evicts through the partition's own
+        policy order — LRU order for "lru", insertion (FIFO) order for
+        "none"/"refcount" — rather than dropping the store.  Byte
+        accounting stays exact (asserted by tests/test_repartition.py).
+        """
+        self.capacity = int(capacity_bytes)
+        evicted: List[int] = []
+        while self.stats.bytes_used > self.capacity and self._data:
+            k, _ = self._data.popitem(last=False)
+            self.stats.bytes_used -= self._sizes.pop(k)
+            self.stats.evictions += 1
+            evicted.append(k)
         return evicted
 
     def remove(self, key: int) -> bool:
@@ -148,6 +171,43 @@ class TieredCache:
     def evict(self, key: int, form: str) -> bool:
         with self.lock:
             return self.parts[form].remove(key)
+
+    def peek(self, key: int) -> Tuple[Optional[str], Any]:
+        """Stats-neutral lookup (same tier order), for controller/refill
+        scans — ``lookup`` would inflate miss counts."""
+        with self.lock:
+            for form in ("augmented", "decoded", "encoded"):
+                v = self.parts[form].peek(key)
+                if v is not None:
+                    return form, v
+            return None, None
+
+    def resize(self, split: Tuple[float, float, float]
+               ) -> Dict[str, List[int]]:
+        """Re-partition the same total capacity live under the cache lock.
+
+        Shrinking partitions evict (policy order) down to their new
+        capacity; growing ones just gain headroom.  Shrinks are applied
+        before grows so the instantaneous sum of partition capacities
+        never exceeds the total.  Returns ``{form: [evicted keys]}`` so
+        the caller can demote/patch ODS metadata.
+        """
+        x_e, x_d, x_a = split
+        if abs(x_e + x_d + x_a - 1.0) >= 1e-6:
+            raise ValueError(f"split must sum to 1: {split}")
+        targets = {"encoded": int(x_e * self.capacity),
+                   "decoded": int(x_d * self.capacity),
+                   "augmented": int(x_a * self.capacity)}
+        evicted: Dict[str, List[int]] = {}
+        with self.lock:
+            order = sorted(FORMS,
+                           key=lambda f: targets[f] - self.parts[f].capacity)
+            for form in order:            # shrinks first, then grows
+                out = self.parts[form].set_capacity(targets[form])
+                if out:
+                    evicted[form] = out
+            self.split = (float(x_e), float(x_d), float(x_a))
+        return evicted
 
     def status_array(self, n: int) -> np.ndarray:
         """uint8[N] of ODS status codes (0 storage / 1 enc / 2 dec / 3 aug)."""

@@ -42,16 +42,66 @@ def simplex_grid(step: float = 0.01) -> Tuple[np.ndarray, np.ndarray, np.ndarray
     return e / n, d / n, a / n
 
 
-def optimize(hw: HardwareProfile, ds: DatasetProfile,
-             job: Optional[JobProfile] = None,
-             step: float = 0.01) -> Partition:
-    """MDP: return the optimal cache split for (hardware, dataset, job)."""
-    job = job or JobProfile()
-    xe, xd, xa = simplex_grid(step)
+# grid construction dominates a re-solve once dsi_throughput is one
+# vectorized pass; share grids across solver instances (read-only)
+_GRIDS: dict = {}
+
+
+def _grid_cached(step: float) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    grid = _GRIDS.get(step)
+    if grid is None:
+        grid = simplex_grid(step)
+        for arr in grid:
+            arr.setflags(write=False)
+        _GRIDS[step] = grid
+    return grid
+
+
+def _solve_on_grid(hw: HardwareProfile, ds: DatasetProfile,
+                   job: JobProfile, grid) -> Partition:
+    """One vectorized model pass over ``grid`` -> best Partition (shared
+    by optimize() and IncrementalSolver so the construction-time solve
+    and the controller's re-solves can never diverge)."""
+    xe, xd, xa = grid
     out = dsi_throughput(hw, ds, job, xe, xd, xa)
     best = int(np.argmax(out.overall))
     return Partition(float(xe[best]), float(xd[best]), float(xa[best]),
                      float(out.overall[best]))
+
+
+def optimize(hw: HardwareProfile, ds: DatasetProfile,
+             job: Optional[JobProfile] = None,
+             step: float = 0.01) -> Partition:
+    """MDP: return the optimal cache split for (hardware, dataset, job)."""
+    return _solve_on_grid(hw, ds, job or JobProfile(), _grid_cached(step))
+
+
+class IncrementalSolver:
+    """Re-solvable MDP for one (dataset, job): the simplex grid is built
+    once and every ``solve(hw)`` is a single vectorized model pass, so the
+    RepartitionController can re-run MDP per calibration tick well under
+    the paper's <1 s budget.
+    """
+
+    def __init__(self, ds: DatasetProfile, job: Optional[JobProfile] = None,
+                 step: float = 0.01):
+        self.ds = ds
+        self.job = job or JobProfile()
+        self.step = step
+        self._grid = _grid_cached(step)
+        self.n_solves = 0
+
+    def solve(self, hw: HardwareProfile) -> Partition:
+        """Best split for ``hw`` (typically a calibrated profile)."""
+        self.n_solves += 1
+        return _solve_on_grid(hw, self.ds, self.job, self._grid)
+
+    def predict(self, hw: HardwareProfile,
+                split: Tuple[float, float, float]) -> float:
+        """Model-predicted throughput of one concrete split under ``hw``
+        (the drift / hysteresis comparisons in the controller)."""
+        out = dsi_throughput(hw, self.ds, self.job, *split)
+        return float(out.overall)
 
 
 def sweep(hw: HardwareProfile, ds: DatasetProfile,

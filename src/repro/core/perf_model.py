@@ -190,6 +190,42 @@ def dsi_throughput(hw: HardwareProfile, ds: DatasetProfile, job: JobProfile,
 
 
 # ---------------------------------------------------------------------------
+# Telemetry calibration
+# ---------------------------------------------------------------------------
+
+#: HardwareProfile fields a telemetry snapshot can override.
+CALIBRATABLE = ("t_da", "t_a", "b_storage", "b_cache")
+
+
+def calibrate(hw: HardwareProfile, telemetry,
+              min_samples: int = 32) -> HardwareProfile:
+    """Override ``hw``'s measured rates from observed telemetry.
+
+    ``telemetry`` is anything exposing the :data:`CALIBRATABLE` attributes
+    (samples/s for CPU rates, bytes/s for bandwidths; ``None`` = no
+    signal) plus a ``counts`` mapping of observation counts per field —
+    i.e. a :class:`repro.api.telemetry.TelemetrySnapshot`.  A field is
+    only overridden once it has ``min_samples`` observations, so a cold
+    server keeps the static Table-3 profile and calibration phases in
+    gradually.  Returns ``hw`` itself when nothing qualifies, making
+    "did calibration change anything" an identity check.
+    """
+    counts = getattr(telemetry, "counts", {}) or {}
+    overrides = {}
+    for name in CALIBRATABLE:
+        value = getattr(telemetry, name, None)
+        if value is None or not np.isfinite(value) or value <= 0:
+            continue
+        if counts.get(name, 0) < min_samples:
+            continue
+        overrides[name] = float(value)
+    if not overrides:
+        return hw
+    base = hw.name.removesuffix("+calibrated")
+    return replace(hw, name=f"{base}+calibrated", **overrides)
+
+
+# ---------------------------------------------------------------------------
 # Paper profiles (Tables 4, 5, 6)
 # ---------------------------------------------------------------------------
 

@@ -23,5 +23,8 @@ __all__ = ["SenecaConfig", "SenecaService", "SenecaServer", "Session",
            "SessionClosed", "FORM_CODE", "CODE_FORM"]
 
 warnings.warn(
-    "repro.core.seneca is deprecated; import SenecaServer / SenecaService "
-    "from repro.api instead", DeprecationWarning, stacklevel=2)
+    "repro.core.seneca is deprecated and will be REMOVED after 2026-10-01 "
+    "(two PR cycles); import SenecaServer / SenecaService from repro.api "
+    "instead. The legacy positional DSIPipeline(job_id, service, storage, "
+    "batch_size) call style is scheduled for removal on the same date.",
+    DeprecationWarning, stacklevel=2)

@@ -83,6 +83,12 @@ class DSIPipeline:
         self.bs = self.session.batch_size
         self.pool = ThreadPoolExecutor(max_workers=n_workers)
         self.times = StageTimes()
+        # telemetry feeds the adaptive repartition loop: per-stage EWMAs,
+        # transfer bandwidths and per-form serve counts, aggregated across
+        # every pipeline sharing the service
+        self.telemetry = self.svc.telemetry
+        self._n_workers = n_workers
+        self.telemetry.add_concurrency(n_workers)
         self.rng = np.random.default_rng(seed + self.session.job_id)
         self._q: "queue.Queue" = queue.Queue(maxsize=prefetch)
         self._stop = threading.Event()
@@ -91,34 +97,51 @@ class DSIPipeline:
     # ------------------------------------------------------------------
     def _produce_sample(self, sid: int, epoch_tag: int) -> np.ndarray:
         """Run one sample through the remaining pipeline stages."""
+        t_look = time.monotonic()
         form, value = self.session.lookup(sid)
+        self.telemetry.record_serve(form)
         t0 = time.monotonic()
         if form == "augmented":
             self.times.fetch += time.monotonic() - t0
+            self.telemetry.record_stage("fetch_cache", t0 - t_look)
+            self.telemetry.record_bytes("cache", value.nbytes, t0 - t_look)
             return value
         if form == "decoded":
             img = value
             self.times.fetch += time.monotonic() - t0
+            self.telemetry.record_stage("fetch_cache", t0 - t_look)
+            self.telemetry.record_bytes("cache", img.nbytes, t0 - t_look)
         elif form == "encoded":
             enc = value
             self.times.fetch += time.monotonic() - t0
+            self.telemetry.record_stage("fetch_cache", t0 - t_look)
+            self.telemetry.record_bytes("cache", len(enc), t0 - t_look)
             t1 = time.monotonic()
             img = self.ds.decode(enc, sid)
-            self.times.decode += time.monotonic() - t1
+            dt = time.monotonic() - t1
+            self.times.decode += dt
+            self.telemetry.record_stage("decode", dt)
             self.session.admit(sid, "decoded", img, img.nbytes)
         else:
             enc = self.storage.fetch(sid)
-            self.times.fetch += time.monotonic() - t0
+            dt = time.monotonic() - t0
+            self.times.fetch += dt
+            self.telemetry.record_stage("fetch_storage", dt)
+            self.telemetry.record_bytes("storage", len(enc), dt)
             self.session.admit(sid, "encoded", enc, len(enc))
             t1 = time.monotonic()
             img = self.ds.decode(enc, sid)
-            self.times.decode += time.monotonic() - t1
+            dt = time.monotonic() - t1
+            self.times.decode += dt
+            self.telemetry.record_stage("decode", dt)
             self.session.admit(sid, "decoded", img, img.nbytes)
         t2 = time.monotonic()
         aug_seed = (epoch_tag * 1_000_003 + sid) & 0x7FFFFFFF
         out = augment_np(img, self.ds.crop_hw,
                          np.random.default_rng(aug_seed))
-        self.times.augment += time.monotonic() - t2
+        dt = time.monotonic() - t2
+        self.times.augment += dt
+        self.telemetry.record_stage("augment", dt)
         self.session.admit(sid, "augmented", out, out.nbytes)
         return out
 
@@ -134,9 +157,14 @@ class DSIPipeline:
             "labels": np.asarray([self.ds.label(int(s)) for s in ids],
                                  np.int32),
         }
-        self.times.collate += time.monotonic() - t0
+        dt = time.monotonic() - t0
+        self.times.collate += dt
+        self.telemetry.record_stage("collate", dt, n=len(ids))
         self.times.batches += 1
         self._process_refills()
+        # adaptive-repartition tick: a fast no-op in "static"/"on-change"
+        # modes; in "adaptive" this is where calibrated drift is checked
+        self.svc.maybe_repartition()
         return batch
 
     def _process_refills(self, max_n: int = 32) -> None:
@@ -157,6 +185,10 @@ class DSIPipeline:
 
     def _refill_one(self, sid: int) -> None:
         try:
+            # a raced refill/admit may already have repopulated this slot;
+            # peek() is stats-neutral so the check doesn't inflate misses
+            if self.svc.cache.peek(sid)[0] == "augmented":
+                return
             enc = self.storage.fetch(sid)
             img = self.ds.decode(enc, sid)
             out = augment_np(img, self.ds.crop_hw,
@@ -180,6 +212,8 @@ class DSIPipeline:
         return self._q.get(timeout=timeout)
 
     def stop(self) -> None:
+        if not self._stop.is_set():
+            self.telemetry.remove_concurrency(self._n_workers)
         self._stop.set()
         if self._thread:
             self._thread.join(timeout=2.0)

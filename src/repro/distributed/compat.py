@@ -1,0 +1,41 @@
+"""JAX API compatibility layer.
+
+The source tree targets the modern top-level spellings (``jax.shard_map``,
+``jax.set_mesh``, both stabilized after 0.4.x); the pinned toolchain in
+this container ships jax 0.4.37 where they live under
+``jax.experimental.shard_map`` and the ``Mesh`` context manager.  Every
+mesh/shard_map call site imports from here so the same code runs on both.
+"""
+from __future__ import annotations
+
+import jax
+
+try:
+    shard_map = jax.shard_map
+except AttributeError:                       # jax < 0.4.x top-level export
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    def shard_map(f, **kw):
+        # The callers are written for the modern API where replication is
+        # marked explicitly with ``pvary``; the 0.4.x rep-checker cannot
+        # see those marks (``pvary`` below is an identity there), so turn
+        # static rep inference off and let the numeric tests be the check.
+        kw.setdefault("check_rep", False)
+        return _shard_map(f, **kw)
+
+try:
+    pvary = jax.lax.pvary
+except AttributeError:
+    def pvary(x, axis_name):
+        """Devices-vary marker only exists post-0.4.x; without the
+        varying-manual-axes type system it is a no-op."""
+        del axis_name
+        return x
+
+try:
+    set_mesh = jax.set_mesh
+except AttributeError:
+    def set_mesh(mesh):
+        """On 0.4.x the Mesh object itself is the resource-env context
+        manager that lets bare PartitionSpecs resolve inside jit."""
+        return mesh

@@ -237,6 +237,50 @@ def test_parity_numpy_vs_jax_same_stream_same_aggregates():
     assert a["hits"] == b["hits"] == 2 * n_cached
 
 
+# ----------------------------------------------------------------------
+# legacy DSIPipeline shim (scheduled for removal, see repro.core.seneca):
+# pin the positional-argument handling so dropping it in a later PR is a
+# deliberate act, not a silent break
+def test_legacy_dsipipeline_positional_batch_size():
+    from repro.data.pipeline import DSIPipeline
+    from repro.data.storage import RemoteStorage
+    from repro.data.synthetic import tiny
+
+    ds = tiny(n=64)
+    server = _server(n=64, cache_bytes=64 * 4 * ds.augmented_bytes())
+    storage = RemoteStorage(ds)
+    # old positional form: DSIPipeline(job_id, service, storage, batch_size)
+    with pytest.warns(DeprecationWarning, match="deprecated"):
+        pipe = DSIPipeline(7, server.service, storage, 8)
+    assert pipe.session.job_id == 7 and pipe.bs == 8
+    batch = pipe.next_batch()
+    assert batch["images"].shape[0] == 8
+    pipe.stop()
+    # keyword batch_size on the legacy form also still works
+    with pytest.warns(DeprecationWarning):
+        pipe2 = DSIPipeline(8, server.service, storage, batch_size=4)
+    assert pipe2.bs == 4
+    pipe2.stop()
+    server.close()
+
+
+def test_legacy_dsipipeline_bad_args_raise():
+    from repro.data.pipeline import DSIPipeline
+    from repro.data.storage import RemoteStorage
+    from repro.data.synthetic import tiny
+
+    ds = tiny(n=32)
+    server = _server(n=32)
+    # session-style call with a non-storage second arg
+    with pytest.raises(TypeError, match="RemoteStorage"):
+        DSIPipeline(server.open_session(batch_size=4), object())
+    # legacy call missing batch_size entirely
+    with pytest.warns(DeprecationWarning), \
+            pytest.raises(TypeError, match="legacy"):
+        DSIPipeline(1, server.service, RemoteStorage(ds))
+    server.close()
+
+
 @pytest.mark.parametrize("backend", BACKENDS)
 def test_backend_selectable_from_server_kwarg(backend):
     profile = DatasetProfile("synth", 64, 1000, decoded_bytes=1000,

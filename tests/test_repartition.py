@@ -1,0 +1,280 @@
+"""Live cache repartitioning: TieredCache.resize, telemetry calibration,
+and RepartitionController hysteresis."""
+import threading
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.api import SenecaConfig, SenecaServer
+from repro.api.policies import CapacityAdmission
+from repro.api.telemetry import TelemetryAggregator
+from repro.cache.store import CachePartition, TieredCache
+from repro.core import mdp
+from repro.core.perf_model import AZURE_NC96, IMAGENET_1K, calibrate
+
+
+# ----------------------------------------------------------------------
+# CachePartition.peek / set_capacity
+def test_peek_is_stats_neutral():
+    part = CachePartition(100, "lru")
+    part.put(1, "a", 10)
+    part.put(2, "b", 10)
+    before = (part.stats.hits, part.stats.misses)
+    assert part.peek(1) == "a"
+    assert part.peek(99) is None
+    assert (part.stats.hits, part.stats.misses) == before
+    # no LRU promotion either: 1 is still the eviction candidate
+    part.set_capacity(10)
+    assert 1 not in part and 2 in part
+
+
+def test_tiered_peek_stats_neutral_and_ordered():
+    c = TieredCache(3000, (0.34, 0.33, 0.33))
+    c.insert(7, "encoded", b"e", 10)
+    c.insert(7, "augmented", b"a", 10)
+    assert c.peek(7) == ("augmented", b"a")
+    assert c.peek(8) == (None, None)
+    assert c.lookup_misses == 0
+    assert c.hit_rate() == 0.0
+
+
+def test_shrink_below_usage_respects_lru_order():
+    part = CachePartition(100, "lru")
+    for k in (1, 2, 3, 4):
+        part.put(k, "v", 25)
+    part.get(1)                       # 1 becomes MRU
+    evicted = part.set_capacity(50)
+    assert evicted == [2, 3]          # LRU order, 1 survives
+    assert 1 in part and 4 in part
+    assert part.stats.bytes_used == 50
+
+
+def test_shrink_below_usage_fifo_for_no_evict_policy():
+    part = CachePartition(100, "none")
+    for k in (5, 6, 7, 8):
+        part.put(k, "v", 25)
+    evicted = part.set_capacity(30)
+    assert evicted == [5, 6, 7]       # insertion order
+    assert part.stats.bytes_used == 25 and 8 in part
+
+
+@settings(max_examples=25, deadline=None)
+@given(cap=st.integers(200, 5_000),
+       ops=st.lists(st.tuples(st.integers(0, 40), st.integers(1, 800)),
+                    min_size=1, max_size=50),
+       new_cap=st.integers(0, 2_000),
+       policy=st.sampled_from(["none", "lru", "refcount"]))
+def test_set_capacity_byte_accounting_exact(cap, ops, new_cap, policy):
+    part = CachePartition(cap, policy)
+    for key, size in ops:
+        part.put(key, b"x", size)
+    evicted = part.set_capacity(new_cap)
+    assert part.stats.bytes_used == sum(part._sizes.values())
+    assert part.stats.bytes_used <= new_cap or not part._sizes
+    assert len(set(evicted)) == len(evicted)
+    for k in evicted:
+        assert k not in part
+
+
+def test_resize_grow_then_shrink_round_trip():
+    c = TieredCache(3000, (0.4, 0.3, 0.3))
+    caps0 = {f: c.parts[f].capacity for f in c.parts}
+    c.insert(1, "encoded", b"e", 100)
+    c.insert(2, "decoded", b"d", 100)
+    assert c.resize((0.1, 0.1, 0.8)) == {}        # everything still fits
+    assert c.parts["augmented"].capacity == 2400
+    assert c.resize((0.4, 0.3, 0.3)) == {}
+    assert {f: c.parts[f].capacity for f in c.parts} == caps0
+    assert c.peek(1) == ("encoded", b"e")
+    assert c.peek(2) == ("decoded", b"d")
+    assert c.split == (0.4, 0.3, 0.3)
+
+
+def test_resize_shrink_evicts_and_reports_by_form():
+    c = TieredCache(300, (1 / 3, 1 / 3, 1 / 3))
+    for k in range(4):
+        assert c.insert(k, "decoded", b"d", 25)
+    evicted = c.resize((0.5, 0.0, 0.5))
+    assert sorted(evicted["decoded"]) == [0, 1, 2, 3]
+    assert c.parts["decoded"].capacity == 0
+    assert c.bytes_used() == 0
+    # instantaneous capacity sum never exceeded the total (shrink-first
+    # ordering): growing tiers land at their exact targets
+    assert c.parts["encoded"].capacity == 150
+    assert c.parts["augmented"].capacity == 150
+
+
+def test_resize_no_deadlock_under_concurrent_insert_gated():
+    c = TieredCache(10_000, (0.4, 0.3, 0.3))
+    policy = CapacityAdmission()
+    stop = threading.Event()
+    errors = []
+
+    def hammer(tid):
+        try:
+            k = tid * 10_000
+            while not stop.is_set():
+                k += 1
+                c.insert_gated(k % 500, "decoded", b"v", 37, policy)
+                c.lookup(k % 500)
+        except Exception as e:                    # pragma: no cover
+            errors.append(e)
+
+    threads = [threading.Thread(target=hammer, args=(i,)) for i in range(4)]
+    for t in threads:
+        t.start()
+    splits = [(0.4, 0.3, 0.3), (0.1, 0.8, 0.1), (0.8, 0.1, 0.1),
+              (0.0, 0.0, 1.0), (1 / 3, 1 / 3, 1 / 3)]
+    for _ in range(20):
+        for s in splits:
+            c.resize(s)
+    stop.set()
+    for t in threads:
+        t.join(timeout=10.0)
+        assert not t.is_alive(), "deadlock: worker never finished"
+    assert not errors
+    for form, part in c.parts.items():
+        with c.lock:
+            assert part.stats.bytes_used == sum(part._sizes.values()), form
+            assert part.stats.bytes_used <= part.capacity or not part._sizes
+
+
+# ----------------------------------------------------------------------
+# telemetry -> calibrate
+def test_snapshot_rates_and_counts():
+    tel = TelemetryAggregator()
+    tel.add_concurrency(4)
+    for _ in range(8):
+        tel.record_stage("decode", 0.02)
+        tel.record_stage("augment", 0.005)
+        tel.record_bytes("storage", 1_000_000, 0.01)
+    snap = tel.snapshot()
+    assert snap.t_a == pytest.approx(4 / 0.005)
+    assert snap.t_da == pytest.approx(4 / 0.025)
+    assert snap.b_storage == pytest.approx(1e8)
+    assert snap.counts == {"t_da": 8, "t_a": 8, "b_storage": 8, "b_cache": 0}
+    tel.record_serve("augmented")
+    tel.record_serve(None)
+    rates = tel.snapshot().hit_rates()
+    assert rates["augmented"] == 0.5 and rates["storage"] == 0.5
+
+
+def test_calibrate_respects_min_samples_and_is_identity_when_cold():
+    tel = TelemetryAggregator()
+    snap = tel.snapshot()
+    assert calibrate(AZURE_NC96, snap) is AZURE_NC96     # no signal at all
+    for _ in range(4):
+        tel.record_stage("decode", 0.01)
+        tel.record_stage("augment", 0.01)
+    assert calibrate(AZURE_NC96, tel.snapshot(),
+                     min_samples=8) is AZURE_NC96        # below the floor
+    hw = calibrate(AZURE_NC96, tel.snapshot(), min_samples=4)
+    assert hw.t_da == pytest.approx(1 / 0.02)
+    assert hw.t_a == pytest.approx(1 / 0.01)
+    assert hw.b_storage == AZURE_NC96.b_storage          # never observed
+    assert hw.name == "azure-nc96ads+calibrated"
+    # re-calibrating a calibrated profile doesn't stack name suffixes
+    assert calibrate(hw, tel.snapshot(), min_samples=4).name == hw.name
+
+
+def test_incremental_solver_matches_optimize():
+    solver = mdp.IncrementalSolver(IMAGENET_1K, step=0.02)
+    ref = mdp.optimize(AZURE_NC96, IMAGENET_1K, step=0.02)
+    got = solver.solve(AZURE_NC96)
+    assert (got.x_e, got.x_d, got.x_a) == (ref.x_e, ref.x_d, ref.x_a)
+    assert got.throughput == pytest.approx(ref.throughput)
+    assert solver.predict(AZURE_NC96, (got.x_e, got.x_d, got.x_a)) == \
+        pytest.approx(got.throughput)
+
+
+# ----------------------------------------------------------------------
+# controller hysteresis
+def _server(**kw):
+    cfg = SenecaConfig(cache_bytes=int(4e9), hardware=AZURE_NC96,
+                       dataset=IMAGENET_1K, **kw)
+    return SenecaServer(cfg)
+
+
+def _feed_slow_cpu(server, n=16):
+    tel = server.service.telemetry
+    tel.add_concurrency(4)
+    for _ in range(n):
+        tel.record_stage("decode", 0.01)
+        tel.record_stage("augment", 0.004)
+        tel.record_bytes("storage", 100_000, 0.001)
+
+
+def test_static_mode_never_repartitions():
+    server = _server()                      # repartition defaults "static"
+    split0 = server.partition
+    with server.open_session(batch_size=8):
+        pass
+    _feed_slow_cpu(server)
+    assert server.maybe_repartition() is False
+    ctl = server.service.controller
+    assert (ctl.resolves, ctl.applied) == (0, 0)
+    assert server.partition is split0
+    server.close()
+
+
+def test_adaptive_applies_once_then_no_churn():
+    server = _server(repartition="adaptive", repartition_cooldown=0.0,
+                     telemetry_min_samples=8)
+    _feed_slow_cpu(server)
+    assert server.maybe_repartition() is True
+    ctl = server.service.controller
+    applied_after_first = ctl.applied
+    resolves_after_first = ctl.resolves
+    for _ in range(6):                      # steady telemetry: all no-ops
+        assert server.maybe_repartition() is False
+    assert ctl.applied == applied_after_first
+    assert ctl.resolves == resolves_after_first
+    rp = server.stats()["repartitions"]
+    assert rp["applied"] == 1 and rp["last"]["applied"] is True
+    server.close()
+
+
+def test_on_change_resolves_on_session_churn_but_apply_is_gated():
+    server = _server(repartition="on-change")
+    ctl = server.service.controller
+    with server.open_session(batch_size=8):
+        assert ctl.resolves == 1
+    assert ctl.resolves == 2                # close re-solved too
+    # no telemetry -> identical profile -> same split -> nothing applied
+    assert ctl.applied == 0 and ctl.skipped == 2
+    # explicit ticks are an adaptive-only path
+    assert server.maybe_repartition() is False
+    assert ctl.resolves == 2
+    server.close()
+
+
+def test_apply_demotes_ods_metadata():
+    server = _server(split=(0.0, 1.0, 0.0), repartition="adaptive")
+    svc = server.service
+    ids = np.arange(4)
+    for i in ids:
+        assert svc.cache.insert(int(i), "decoded", b"d" * 8, 8)
+    svc.backend.mark_cached(ids, 2)         # DECODED
+    demoted = svc.apply_partition(
+        mdp.Partition(0.5, 0.0, 0.5, throughput=1.0))
+    assert demoted == {"storage": 4}
+    assert (svc.backend.status_of(ids) == 0).all()
+    assert server.partition.label == "50-0-50"
+    server.close()
+
+
+def test_stats_keys_are_additive():
+    server = _server()
+    stats = server.stats()
+    for key in ("partition", "predicted_throughput", "ods_hit_rate",
+                "cache_lookup_hit_rate", "tier_counts", "metadata_bytes"):
+        assert key in stats                 # pre-existing surface intact
+    assert stats["repartitions"]["mode"] == "static"
+    assert "telemetry" in stats
+    server.close()
+
+
+def test_unknown_repartition_mode_rejected():
+    with pytest.raises(ValueError, match="repartition"):
+        _server(repartition="sometimes")
