@@ -1,0 +1,135 @@
+"""Pipeline executor throughput: per-sample map vs stage-parallel vs
+stage-parallel with Pallas-batched augmentation.
+
+The paper's cache partitioning only pays off when the DSI pipeline can
+saturate the cache it was given; this benchmark measures the ingestion
+side on the *live* threaded stack.  Three configurations over identical
+datasets/storage (token-bucket bandwidth, so storage stalls are real):
+
+* ``per-sample`` — the seed executor: fetch->decode->augment serially
+  per sample inside a worker pool, a full barrier per batch;
+* ``stage-parallel`` — the queue-fed stage executor (bounded queues,
+  elastic telemetry-sized worker groups, batch-granular admission):
+  batch N+1's storage fetches overlap batch N's decode/augment, no
+  per-batch barrier;
+* ``stage-parallel+pallas`` — same executor, augment stage running the
+  fused Pallas crop/flip/normalize kernel on whole groups.
+
+Measurement: the dataset is sized so the whole run stays inside the
+cold first epoch (one regime — crossing into epoch 2 flips the workload
+to cache-hit-dominated and the numbers stop being comparable), and each
+mode reports the **median of three consecutive timed windows** to shrug
+off noisy-neighbor CPU on shared runners.
+
+Emits ``BENCH_pipeline.json`` (benchmarks/common.write_bench_json) with
+per-mode samples/s (median + windows), stage time breakdowns and queue
+occupancy gauges, plus the usual ``name,us,derived`` rows for run.py.
+``--check`` asserts the stage-parallel executor beats the per-sample
+baseline (the CI smoke gate).
+"""
+from __future__ import annotations
+
+import statistics
+import time
+from typing import Dict, List, Tuple
+
+from benchmarks.common import write_bench_json
+from repro.api import SenecaServer
+from repro.data.pipeline import DSIPipeline
+from repro.data.storage import RemoteStorage
+from repro.data.synthetic import tiny
+
+MODES: Tuple[Tuple[str, str, str], ...] = (
+    ("per-sample", "per-sample", "numpy"),
+    ("stage-parallel", "stage-parallel", "numpy"),
+    ("stage-parallel+pallas", "stage-parallel", "pallas"),
+)
+
+
+def run_mode(executor: str, augment_backend: str, *, n_samples: int,
+             batch: int, windows: int, window_batches: int, warmup: int,
+             bandwidth: float, n_workers: int, seed: int = 0) -> Dict:
+    ds = tiny(n=n_samples)
+    server = SenecaServer.for_dataset(ds, cache_frac=0.25, seed=seed,
+                                      augment_backend=augment_backend)
+    storage = RemoteStorage(ds, bandwidth=bandwidth)
+    pipe = DSIPipeline(server.open_session(batch_size=batch), storage,
+                       n_workers=n_workers, prefetch=2, executor=executor,
+                       seed=seed)
+    for _ in range(warmup):       # warm jit traces, EWMAs, worker plans
+        pipe.next_batch()
+    rates = []
+    for _ in range(windows):
+        t0 = time.monotonic()
+        for _ in range(window_batches):
+            pipe.next_batch()
+        rates.append(window_batches * batch / (time.monotonic() - t0))
+    stats = server.stats()
+    tel = stats["telemetry"]
+    result = {
+        "executor": executor,
+        "augment_backend": stats["augment_backend"],
+        "samples_per_s": statistics.median(rates),
+        "window_samples_per_s": [round(r, 1) for r in rates],
+        "stage_times_s": pipe.times.as_dict(),
+        "cache_hit_rate": stats["cache_lookup_hit_rate"],
+        "ods_hit_rate": stats["ods_hit_rate"],
+        "storage_fetches": storage.fetches,
+        "queue_occupancy": tel["queue_occupancy"],
+        "refill_errors": stats["refill_errors"],
+    }
+    pipe.stop()
+    server.close()
+    return result
+
+
+def run(full: bool = False, check: bool = False) -> List[Tuple[str, str]]:
+    knobs = dict(n_samples=8_192 if full else 2_048, batch=16,
+                 windows=3, window_batches=24 if full else 12,
+                 warmup=4, bandwidth=8e6, n_workers=4)
+    results = {label: run_mode(executor, backend, **knobs)
+               for label, executor, backend in MODES}
+
+    def sps(label):
+        return results[label]["samples_per_s"]
+
+    if check and sps("stage-parallel") <= sps("per-sample"):
+        # one retry: a noisy-neighbor burst on a shared CI runner can
+        # sink one mode's whole 3-window median; re-measure both modes
+        # back-to-back before declaring a regression.  The artifact and
+        # the rows below are built from the retried numbers, so the
+        # published JSON never contradicts a passing gate.
+        results["per-sample"] = run_mode("per-sample", "numpy", **knobs)
+        results["stage-parallel"] = run_mode("stage-parallel", "numpy",
+                                             **knobs)
+    payload = {"config": {k: str(v) for k, v in knobs.items()}, **results}
+    path = write_bench_json("pipeline", payload)
+
+    rows = []
+    base = sps("per-sample")
+    for label, r in results.items():
+        rows.append((
+            f"fig_pipeline/{label}",
+            f"sps={r['samples_per_s']:.0f} "
+            f"x{r['samples_per_s'] / base:.2f} "
+            f"windows={r['window_samples_per_s']}"))
+    sp = sps("stage-parallel")
+    rows.append(("fig_pipeline/summary",
+                 f"stage-parallel speedup x{sp / base:.2f} json={path}"))
+    if check:
+        assert sp > base, (
+            f"stage-parallel ({sp:.0f} sps) must beat the per-sample "
+            f"baseline ({base:.0f} sps)")
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--check", action="store_true",
+                    help="assert stage-parallel beats per-sample (CI)")
+    args = ap.parse_args()
+    for name, derived in run(full=args.full, check=args.check):
+        print(f"{name},{derived}")

@@ -39,9 +39,12 @@ def run_seneca(args) -> None:
     ds = tiny(n=1024)
     server = SenecaServer.for_dataset(ds, cache_frac=0.35, seed=0,
                                       backend=args.backend,
+                                      augment_backend=args.augment_backend,
                                       repartition=args.repartition)
     print(f"[quickstart] MDP partition: {server.partition.label} "
-          f"(backend={args.backend}, repartition={args.repartition})")
+          f"(backend={args.backend}, executor={args.executor}, "
+          f"augment={args.augment_backend}, "
+          f"repartition={args.repartition})")
 
     cfg = registry.get_reduced("vit-huge")
     model = build(cfg)
@@ -54,7 +57,8 @@ def run_seneca(args) -> None:
     losses = []
     t0 = time.monotonic()
     with server.open_session(batch_size=args.batch) as sess:
-        pipe = DSIPipeline(sess, RemoteStorage(ds), n_workers=3)
+        pipe = DSIPipeline(sess, RemoteStorage(ds), n_workers=3,
+                           executor=args.executor)
         for _ in range(args.steps):
             raw = pipe.next_batch()
             B = raw["images"].shape[0]
@@ -127,6 +131,14 @@ def main() -> None:
     ap.add_argument("--arch", default="qwen3-8b")
     ap.add_argument("--backend", default="numpy",
                     choices=("numpy", "jax"))
+    ap.add_argument("--executor", default="per-sample",
+                    choices=("per-sample", "stage-parallel"),
+                    help="DSI pipeline executor (stage-parallel = async "
+                         "queue-fed stages, docs/API.md)")
+    ap.add_argument("--augment-backend", default="numpy",
+                    choices=("numpy", "pallas"),
+                    help="batched augment engine for the stage-parallel "
+                         "executor (pallas = fused kernel)")
     ap.add_argument("--repartition", default="static",
                     choices=("static", "on-change", "adaptive"),
                     help="live cache repartitioning mode (docs/API.md)")

@@ -38,7 +38,8 @@ from typing import Dict, Optional, Tuple
 
 import numpy as np
 
-from repro.api.backends import NO_REFCOUNT_EVICT, resolve_backend
+from repro.api.backends import (NO_REFCOUNT_EVICT, resolve_augment_backend,
+                                resolve_backend)
 from repro.api.policies import resolve_policy
 from repro.api.telemetry import TelemetryAggregator
 from repro.cache.store import FORMS, TieredCache
@@ -75,6 +76,10 @@ class SenecaConfig:
     split: Optional[Tuple[float, float, float]] = None
     # facade knobs: ODS metadata engine + policies by registered name
     backend: str = "numpy"
+    # batched augmentation engine for the stage-parallel pipeline executor
+    # ("numpy" loop fallback | "pallas"/"jax" fused kernel); the
+    # per-sample executor keeps its inline augment_np path either way
+    augment_backend: str = "numpy"
     sampler: Optional[str] = None      # None -> "ods" / "naive" per use_ods
     admission: Optional[str] = None    # None -> "unseen-only" / "capacity"
     eviction: Optional[str] = None     # None -> "refcount"
@@ -253,7 +258,7 @@ class SenecaService:
     """
 
     def __init__(self, cfg: SenecaConfig, *, backend=None, sampler=None,
-                 admission=None, eviction=None):
+                 admission=None, eviction=None, augment_backend=None):
         self.cfg = cfg
         if cfg.repartition not in REPARTITION_MODES:
             raise ValueError(f"unknown repartition mode "
@@ -284,6 +289,8 @@ class SenecaService:
             evict_policies=self.eviction.partition_policies())
         self.backend = resolve_backend(backend or cfg.backend,
                                        cfg.dataset.n_total, seed=cfg.seed)
+        self.augment = resolve_augment_backend(
+            augment_backend or cfg.augment_backend)
         self.rng = np.random.default_rng(cfg.seed + 1)
         self._samplers: Dict[int, EpochSampler] = {}
         self._lock = threading.Lock()
@@ -366,6 +373,60 @@ class SenecaService:
                 if ok:
                     self.backend.mark_cached(np.asarray([sample_id]),
                                              FORM_CODE[form])
+        return ok
+
+    def admission_votes(self, form: str, ids) -> np.ndarray:
+        """The metadata half of admission for many ids under one lock
+        acquisition.  Lets producers skip building expensive values
+        (e.g. copying augmented rows out of a batch array) for entries
+        the policy would reject anyway; :meth:`admit_batch` re-votes, so
+        a stale True here only costs the discarded value, never a wrong
+        insert."""
+        with self._lock:
+            return np.asarray([self.admission.wants(self.backend, int(s),
+                                                    form) for s in ids])
+
+    def admit_batch(self, form: str, entries) -> np.ndarray:
+        """Batch-granular :meth:`admit`: ``entries`` is a sequence of
+        ``(sample_id, value, nbytes)``.
+
+        Same two-phase policy gating and the same per-entry semantics as
+        N ``admit`` calls, but with three lock acquisitions per batch
+        instead of three per sample: one metadata acquisition for the
+        ``wants`` votes, one cache acquisition for the capacity votes +
+        inserts (:meth:`TieredCache.insert_batch_gated`), one metadata
+        acquisition for the vectorized ``mark_cached``.  Returns one bool
+        per entry (True = resident + marked).
+        """
+        entries = list(entries)
+        ok = np.zeros(len(entries), bool)
+        if not entries or self.cache.parts[form].capacity == 0:
+            return ok
+        with self._lock:
+            wants = [self.admission.wants(self.backend, sid, form)
+                     for sid, _, _ in entries]
+        idx = [i for i, w in enumerate(wants) if w]
+        if not idx:
+            return ok
+        inserted = self.cache.insert_batch_gated(
+            form, [entries[i] for i in idx], self.admission)
+        live = [i for i, ins in zip(idx, inserted) if ins]
+        if not live:
+            return ok
+        with self._lock:
+            if self.controller.active:
+                # same residency re-validation as admit(): a concurrent
+                # resize may have evicted entries between the insert and
+                # this deferred mark (metadata->cache lock order)
+                with self.cache.lock:
+                    live = [i for i in live
+                            if self.cache.parts[form].peek(entries[i][0])
+                            is not None]
+            if live:
+                self.backend.mark_cached(
+                    np.asarray([entries[i][0] for i in live]),
+                    FORM_CODE[form])
+        ok[live] = True
         return ok
 
     def refill_candidates(self, k: int) -> np.ndarray:
@@ -451,6 +512,8 @@ class SenecaService:
             "partition": self.partition.label,
             "predicted_throughput": self.partition.throughput,
             "backend": self.backend.name,
+            "augment_backend": self.augment.name,
+            "refill_errors": self.telemetry.error_count("refill"),
             "policies": {"sampler": self.sampler.name,
                          "admission": self.admission.name,
                          "eviction": self.eviction.name},
@@ -508,6 +571,13 @@ class Session:
             return False
         return self.service.admit(sample_id, form, value, nbytes)
 
+    def admit_batch(self, form: str, entries) -> np.ndarray:
+        """Batch-granular admit (see :meth:`SenecaService.admit_batch`);
+        closed sessions drop the whole batch, mirroring :meth:`admit`."""
+        if self._closed:
+            return np.zeros(len(list(entries)), bool)
+        return self.service.admit_batch(form, entries)
+
     def lookup(self, sample_id: int):
         return self.service.lookup(sample_id)
 
@@ -539,13 +609,15 @@ class SenecaServer:
 
     def __init__(self, cfg: SenecaConfig = None, *, backend=None,
                  sampler=None, admission=None, eviction=None,
+                 augment_backend=None,
                  service: Optional[SenecaService] = None):
         if service is None:
             if cfg is None:
                 raise ValueError("SenecaServer needs a SenecaConfig "
                                  "(or an existing service=)")
             service = SenecaService(cfg, backend=backend, sampler=sampler,
-                                    admission=admission, eviction=eviction)
+                                    admission=admission, eviction=eviction,
+                                    augment_backend=augment_backend)
         self.service = service
         self._ids = itertools.count()
         self._sessions: Dict[int, Session] = {}

@@ -168,6 +168,29 @@ class TieredCache:
             part.put(key, value, nbytes)
             return key in part
 
+    def insert_batch_gated(self, form: str, entries, policy) -> List[bool]:
+        """Batch-granular admission: ``entries`` is a sequence of
+        ``(key, value, nbytes)``; the capacity vote + insert for the whole
+        batch run under ONE cache-lock acquisition (the stage-parallel
+        pipeline's per-batch admission — vs one acquisition per sample).
+
+        Per-entry semantics are identical to :meth:`insert_gated`: each
+        entry is voted with the partition state the previous entries
+        left behind — a rejected entry does NOT reject the rest, so a
+        later, smaller entry may still fit (same results as N looped
+        ``insert_gated`` calls).  Returns one bool per entry.
+        """
+        out: List[bool] = []
+        with self.lock:
+            part = self.parts[form]
+            for key, value, nbytes in entries:
+                if not policy.fits(part, nbytes):
+                    out.append(False)
+                    continue
+                part.put(key, value, nbytes)
+                out.append(key in part)
+        return out
+
     def evict(self, key: int, form: str) -> bool:
         with self.lock:
             return self.parts[form].remove(key)

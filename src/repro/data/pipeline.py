@@ -9,6 +9,28 @@ so the paper's concurrency experiments run for real on CPU::
     pipe = DSIPipeline(server.open_session(batch_size=32), storage)
     batch = pipe.next_batch()
 
+Two executors (the ``executor=`` knob):
+
+* ``"per-sample"`` (default, the seed behavior): every sample runs
+  fetch->decode->augment serially inside one worker, ``next_batch`` is a
+  synchronous barrier over the whole batch.
+* ``"stage-parallel"``: a decoupled asynchronous executor — bounded
+  queues between sampler -> fetch -> decode -> augment -> collate,
+  per-stage worker groups sized from the service telemetry's stage EWMAs
+  (:func:`plan_stage_workers`), an augment stage that batches decoded
+  samples through the service's vectorized
+  :class:`~repro.api.backends.AugmentBackend` (Pallas kernel or NumPy
+  loop), and batch-granular cache admission (one lock acquisition per
+  admitted batch via ``Session.admit_batch``).  Batches are emitted in
+  sampling order; batch N+1's storage fetches overlap batch N's
+  decode/augment, so throughput approaches the slowest *stage* instead
+  of the per-batch sum (benchmarks/fig_pipeline_throughput.py).
+
+Both executors produce identical tensors for a given (epoch, sample id):
+augmentation parameters derive from per-sample seeds, not executor
+scheduling.  Batches carry an additive ``"ids"`` key with the sample ids
+in slot order.
+
 Cache admission goes through the service's :class:`AdmissionPolicy` hooks
 (capacity is voted under the cache lock, atomically with the insert) —
 this module never touches cache partitions directly.
@@ -18,20 +40,31 @@ style still works as a deprecated shim that opens a session internally.
 """
 from __future__ import annotations
 
+import logging
 import queue
 import threading
 import time
 import warnings
 from concurrent.futures import ThreadPoolExecutor
 from dataclasses import dataclass
-from typing import Dict, Optional
+from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.api.server import SenecaService, Session
+from repro.api.server import SenecaService, Session, SessionClosed
 from repro.data.augment import augment_np
 from repro.data.storage import RemoteStorage
 from repro.data.synthetic import SyntheticDataset
+
+log = logging.getLogger(__name__)
+
+EXECUTORS = ("per-sample", "stage-parallel")
+
+
+def _aug_seed(epoch_tag: int, sid: int) -> int:
+    """The per-sample augmentation seed — shared by both executors and
+    both augment backends, so batch composition never changes content."""
+    return (epoch_tag * 1_000_003 + sid) & 0x7FFFFFFF
 
 
 @dataclass
@@ -48,12 +81,427 @@ class StageTimes:
                 "batches": self.batches}
 
 
+def plan_stage_workers(telemetry, n_workers: int) -> Tuple[int, int]:
+    """Size the (fetch, decode) worker groups from the telemetry stage
+    EWMAs.
+
+    The ``n_workers`` budget is split proportionally to the observed
+    storage-fetch vs decode latencies (clamped to >= 1 each; an even
+    split until both signals exist, with a budget floor of 2).  The
+    fetch share is then doubled: fetch workers spend most of their time
+    parked in storage waits (token bucket / network), so 2x
+    oversubscription keeps the storage channel busy through the GIL
+    pauses of the CPU stages — decode keeps the plain CPU share.  The
+    stage-parallel executor re-plans this every batch as the EWMAs move
+    (elastic groups), so a pipeline that starts cache-cold and becomes
+    decode-bound sheds fetch workers live.
+    """
+    total = max(int(n_workers), 2)
+    lat = telemetry.snapshot().stage_latency
+    fetch, decode = lat.get("fetch_storage"), lat.get("decode")
+    if not fetch or not decode:
+        base_fetch = max(total // 2, 1)
+    else:
+        base_fetch = int(round(total * fetch / (fetch + decode)))
+        base_fetch = min(max(base_fetch, 1), total - 1)
+    return 2 * base_fetch, total - base_fetch
+
+
+class _Assembly:
+    """One in-flight batch: slots fill in as samples finish their route.
+
+    ``arrived`` is touched only by the single augment-stage thread (every
+    sample's route ends there, pre-augmented cache hits included), which
+    is what makes batch completion race-free without a per-batch lock.
+    """
+
+    __slots__ = ("seq", "ids", "epoch", "out", "arrived")
+
+    def __init__(self, seq: int, ids: List[int], epoch: int):
+        self.seq = seq
+        self.ids = ids
+        self.epoch = epoch
+        self.out: List[Optional[np.ndarray]] = [None] * len(ids)
+        self.arrived = 0
+
+
+class _StageParallelExecutor:
+    """Queue-fed stage pipeline over one DSIPipeline's session/storage.
+
+    Thread layout: 1 sampler, ``n_fetch`` fetch workers, ``n_decode``
+    decode workers, 1 augment (vectorized, batch-granular admission),
+    1 collate (in-order emission, refill + repartition ticks).  Bounded
+    queues propagate consumer backpressure all the way to the sampler;
+    every put/get is stop-aware so teardown never deadlocks.
+    """
+
+    def __init__(self, pipe: "DSIPipeline", out_depth: int):
+        self.pipe = pipe
+        bs = pipe.bs
+        self._stop = threading.Event()
+        self.error: Optional[BaseException] = None
+        self._session_closed = False
+        self.fetch_q: "queue.Queue" = queue.Queue(maxsize=2 * bs)
+        self.decode_q: "queue.Queue" = queue.Queue(maxsize=2 * bs)
+        self.augment_q: "queue.Queue" = queue.Queue(maxsize=2 * bs)
+        self.collate_q: "queue.Queue" = queue.Queue(maxsize=out_depth + 1)
+        self.out_q: "queue.Queue" = queue.Queue(maxsize=max(out_depth, 1))
+        # elastic worker groups: live/target counts per resizable stage.
+        # The collate thread re-plans targets from telemetry every batch;
+        # surplus workers retire themselves, missing ones are spawned.
+        self._group_lock = threading.Lock()
+        self._live = {"fetch": 0, "decode": 0}
+        self._target = dict(zip(("fetch", "decode"), plan_stage_workers(
+            pipe.telemetry, pipe._n_workers)))
+        self._last_plan = dict(self._target)
+        self._group_loops = {"fetch": self._fetch_loop,
+                             "decode": self._decode_loop}
+        self._threads: List[threading.Thread] = []
+        for target, name in ((self._sampler_loop, "sampler"),
+                             (self._augment_loop, "augment"),
+                             (self._collate_loop, "collate")):
+            t = threading.Thread(target=target, daemon=True,
+                                 name=f"dsi-{name}")
+            self._threads.append(t)
+            t.start()
+        self._reconcile_groups()
+
+    # -- elastic worker groups -----------------------------------------
+    def worker_counts(self) -> Dict[str, int]:
+        with self._group_lock:
+            return dict(self._live)
+
+    def _resize_groups(self) -> None:
+        """Re-plan the fetch/decode group sizes from the current stage
+        EWMAs (collate thread, once per batch), debounced: a new plan is
+        applied only when two consecutive batches agree on it, so EWMA
+        jitter flapping across a rounding boundary cannot churn worker
+        threads every batch, while any persistent shift in the stage
+        balance lands within two batches."""
+        planned = dict(zip(("fetch", "decode"), plan_stage_workers(
+            self.pipe.telemetry, self.pipe._n_workers)))
+        with self._group_lock:
+            if planned == self._last_plan:
+                self._target.update(planned)
+            self._last_plan = planned
+        self._reconcile_groups()
+
+    def _reconcile_groups(self) -> None:
+        """Spawn workers up to the group targets (retiring is the worker
+        loops' own job) and drop finished threads from the join list so
+        it cannot grow without bound across retarget cycles."""
+        spawn: List[str] = []
+        with self._group_lock:
+            for group, tgt in self._target.items():
+                while self._live[group] < tgt:
+                    self._live[group] += 1
+                    spawn.append(group)
+        self._threads = [t for t in self._threads if t.is_alive()]
+        for group in spawn:
+            t = threading.Thread(target=self._group_loops[group],
+                                 daemon=True, name=f"dsi-{group}")
+            self._threads.append(t)
+            t.start()
+
+    def _surplus(self, group: str) -> bool:
+        """True when this worker should retire (its group shrank)."""
+        with self._group_lock:
+            if self._live[group] > self._target[group]:
+                self._live[group] -= 1
+                return True
+        return False
+
+    # -- stop-aware queue plumbing -------------------------------------
+    def _put(self, q: "queue.Queue", item) -> bool:
+        while not self._stop.is_set():
+            try:
+                q.put(item, timeout=0.1)
+                return True
+            except queue.Full:
+                continue
+        return False
+
+    def _get(self, q: "queue.Queue"):
+        while not self._stop.is_set():
+            try:
+                return q.get(timeout=0.1)
+            except queue.Empty:
+                continue
+        return None
+
+    def _fail(self, exc: BaseException) -> None:
+        """First failure wins: record, surface in telemetry, halt the
+        executor (an incomplete assembly can never collate, so limping
+        on would just hang the consumer)."""
+        if self.error is None:
+            self.error = exc
+        if self.pipe.telemetry.record_error("pipeline") == 1:
+            log.warning("stage-parallel executor failed; first error:",
+                        exc_info=exc)
+        self._stop.set()
+
+    # -- stages --------------------------------------------------------
+    def _sampler_loop(self) -> None:
+        seq = 0
+        pipe = self.pipe
+        while not self._stop.is_set():
+            try:
+                ids, _forms = pipe.session.next_batch_ids()
+            except SessionClosed:
+                # normal lifecycle, not a failure — but the consumer must
+                # fail fast like the per-sample executor does, not block
+                # out a full get_batch timeout on a drained queue
+                self._session_closed = True
+                self._stop.set()
+                return
+            except Exception as e:      # noqa: BLE001 - recorded, not lost
+                self._fail(e)
+                return
+            asm = _Assembly(seq, [int(x) for x in ids], pipe.session.epoch)
+            seq += 1
+            for slot in range(len(asm.ids)):
+                if not self._put(self.fetch_q, (asm, slot)):
+                    return
+
+    def _fetch_loop(self) -> None:
+        pipe = self.pipe
+        tel = pipe.telemetry
+        while not self._stop.is_set():
+            if self._surplus("fetch"):
+                return
+            item = self._get(self.fetch_q)
+            if item is None:
+                return
+            asm, slot = item
+            sid = asm.ids[slot]
+            try:
+                t_look = time.monotonic()
+                form, value = pipe.session.lookup(sid)
+                tel.record_serve(form)
+                t0 = time.monotonic()
+                if form is None:
+                    enc = pipe.storage.fetch(sid)
+                    dt = time.monotonic() - t0
+                    pipe.times.fetch += dt
+                    tel.record_stage("fetch_storage", dt)
+                    tel.record_bytes("storage", len(enc), dt)
+                    ok = self._put(self.decode_q, (asm, slot, enc, True))
+                else:
+                    pipe.times.fetch += t0 - t_look
+                    tel.record_stage("fetch_cache", t0 - t_look)
+                    nbytes = value.nbytes if hasattr(value, "nbytes") \
+                        else len(value)
+                    tel.record_bytes("cache", nbytes, t0 - t_look)
+                    if form == "augmented":
+                        ok = self._put(self.augment_q,
+                                       (asm, slot, value, None, False, True))
+                    elif form == "decoded":
+                        ok = self._put(self.augment_q,
+                                       (asm, slot, value, None, False,
+                                        False))
+                    else:                        # encoded cache hit
+                        ok = self._put(self.decode_q,
+                                       (asm, slot, value, False))
+                if not ok:
+                    return
+            except Exception as e:      # noqa: BLE001
+                self._fail(e)
+                return
+
+    def _decode_loop(self) -> None:
+        pipe = self.pipe
+        while not self._stop.is_set():
+            if self._surplus("decode"):
+                return
+            item = self._get(self.decode_q)
+            if item is None:
+                return
+            asm, slot, enc, from_storage = item
+            try:
+                t1 = time.monotonic()
+                img = pipe.ds.decode(enc, asm.ids[slot])
+                dt = time.monotonic() - t1
+                pipe.times.decode += dt
+                # unlocked _live read: an approximate worker count is
+                # fine for the calibration scale factor
+                pipe.telemetry.record_stage(
+                    "decode", dt, workers=max(self._live["decode"], 1))
+                # carry enc along only when it still needs admission, so
+                # the augment stage can batch-admit the encoded form too
+                if not self._put(self.augment_q,
+                                 (asm, slot, img,
+                                  enc if from_storage else None, True,
+                                  False)):
+                    return
+            except Exception as e:      # noqa: BLE001
+                self._fail(e)
+                return
+
+    def _augment_loop(self) -> None:
+        pipe = self.pipe
+        sess = pipe.session
+        # per-assembly buffers of samples awaiting vectorized augmentation:
+        # seq -> [(slot, img, enc_to_admit, admit_decoded)]
+        buffers: Dict[int, List] = {}
+        while not self._stop.is_set():
+            item = self._get(self.augment_q)
+            if item is None:
+                return
+            asm, slot, payload, enc, admit_dec, pre = item
+            try:
+                if pre:
+                    asm.out[slot] = payload
+                else:
+                    buffers.setdefault(asm.seq, []).append(
+                        (slot, payload, enc, admit_dec))
+                asm.arrived += 1
+                if asm.arrived < len(asm.ids):
+                    continue
+                group = buffers.pop(asm.seq, [])
+                if group:
+                    self._augment_group(sess, asm, group)
+                if not self._put(self.collate_q, asm):
+                    return
+            except Exception as e:      # noqa: BLE001
+                self._fail(e)
+                return
+
+    def _augment_group(self, sess: Session, asm: _Assembly,
+                       group: List) -> None:
+        """Vectorized augment + batch-granular admission for the samples
+        of one assembly that were not served pre-augmented."""
+        pipe = self.pipe
+        enc_entries = [(asm.ids[slot], enc, len(enc))
+                       for slot, _img, enc, _ad in group if enc is not None]
+        if enc_entries:
+            sess.admit_batch("encoded", enc_entries)
+        dec_entries = [(asm.ids[slot], img, img.nbytes)
+                       for slot, img, _enc, ad in group if ad]
+        if dec_entries:
+            sess.admit_batch("decoded", dec_entries)
+        slots = [slot for slot, _img, _enc, _ad in group]
+        imgs = np.stack([img for _slot, img, _enc, _ad in group])
+        seeds = np.asarray([_aug_seed(asm.epoch, asm.ids[s]) for s in slots],
+                           np.int64)
+        t2 = time.monotonic()
+        outs = pipe.augment.augment_batch(imgs, pipe.ds.crop_hw, seeds)
+        dt = time.monotonic() - t2
+        pipe.times.augment += dt
+        # the augment stage is one thread, not the whole worker pool:
+        # report that, or calibrate() would overestimate t_a ~n_workers x
+        pipe.telemetry.record_stage("augment", dt, n=len(slots), workers=1)
+        # np.array copies: cached rows must not pin the whole batch
+        # array.  Pre-vote the metadata half of admission so the copies
+        # are only built for entries the policy would take — under
+        # unseen-only admission a single-session pipeline's own samples
+        # are all already seen, so this skips B row copies per batch
+        if pipe.svc.tier_capacity("augmented") > 0:
+            ids = [asm.ids[s] for s in slots]
+            wanted = pipe.svc.admission_votes("augmented", ids)
+            entries = [(sid, np.array(outs[i]), outs[i].nbytes)
+                       for i, (sid, w) in enumerate(zip(ids, wanted)) if w]
+            if entries:
+                sess.admit_batch("augmented", entries)
+        for i, s in enumerate(slots):
+            asm.out[s] = outs[i]
+
+    def _collate_loop(self) -> None:
+        pipe = self.pipe
+        pending: Dict[int, _Assembly] = {}
+        next_seq = 0
+        while not self._stop.is_set():
+            asm = self._get(self.collate_q)
+            if asm is None:
+                return
+            try:
+                pending[asm.seq] = asm
+                while next_seq in pending:     # emit in sampling order
+                    asm = pending.pop(next_seq)
+                    t0 = time.monotonic()
+                    batch = {
+                        # copy=False: backends return float32 already —
+                        # don't re-copy the whole batch on the one
+                        # thread that serializes emission
+                        "images": np.stack(asm.out).astype(np.float32,
+                                                           copy=False),
+                        "labels": np.asarray(
+                            [pipe.ds.label(s) for s in asm.ids], np.int32),
+                        "ids": np.asarray(asm.ids, np.int64),
+                    }
+                    dt = time.monotonic() - t0
+                    pipe.times.collate += dt
+                    pipe.telemetry.record_stage("collate", dt,
+                                                n=len(asm.ids))
+                    pipe.times.batches += 1
+                    pipe._process_refills()
+                    pipe.svc.maybe_repartition()
+                    self._gauge_queues()
+                    self._resize_groups()
+                    if not self._put(self.out_q, batch):
+                        return
+                    next_seq += 1
+            except Exception as e:      # noqa: BLE001 - same contract as
+                self._fail(e)           # every other stage loop: no
+                return                  # silent thread death
+
+    def _gauge_queues(self) -> None:
+        tel = self.pipe.telemetry
+        for name, q in (("fetch", self.fetch_q), ("decode", self.decode_q),
+                        ("augment", self.augment_q),
+                        ("collate", self.collate_q), ("out", self.out_q)):
+            tel.record_queue(name, q.qsize(), q.maxsize)
+
+    # -- consumer side -------------------------------------------------
+    def get_batch(self,
+                  timeout: Optional[float] = 60.0
+                  ) -> Dict[str, np.ndarray]:
+        """Next collated batch.  ``timeout=None`` blocks until one is
+        ready (``next_batch`` semantics — a slow pipeline is not an
+        error); a finite timeout raises ``queue.Empty`` at the deadline
+        (``get`` semantics, matching the per-sample prefetch queue)."""
+        deadline = float("inf") if timeout is None \
+            else time.monotonic() + timeout
+        while True:
+            try:
+                return self.out_q.get(timeout=0.2)
+            except queue.Empty:
+                if self.error is not None:
+                    raise RuntimeError(
+                        "stage-parallel pipeline failed; see telemetry "
+                        "errors") from self.error
+                if self._session_closed:
+                    raise SessionClosed(
+                        "session closed while the stage-parallel "
+                        "pipeline was running; open a new one with "
+                        "SenecaServer.open_session()")
+                if self._stop.is_set():
+                    raise RuntimeError(
+                        "stage-parallel pipeline is stopped")
+                if time.monotonic() >= deadline:
+                    raise
+
+    def stop(self) -> None:
+        self._stop.set()
+        for t in list(self._threads):
+            t.join(timeout=2.0)
+        # don't leave this executor's group sizes scaling latencies that
+        # a per-sample pipeline on the same service reports afterwards
+        self.pipe.telemetry.clear_stage_workers("decode", "augment")
+
+
 class DSIPipeline:
     """Per-session pipeline over a shared Seneca service + RemoteStorage."""
 
     def __init__(self, session, storage: Optional[RemoteStorage] = None,
                  *legacy_storage, batch_size: Optional[int] = None,
-                 n_workers: int = 4, prefetch: int = 2, seed: int = 0):
+                 n_workers: int = 4, prefetch: int = 2, seed: int = 0,
+                 executor: str = "per-sample", augment_backend=None):
+        # validate before any side effect: the legacy path below
+        # registers a job on the shared service, which must not leak
+        # when construction fails
+        if executor not in EXECUTORS:
+            raise ValueError(f"unknown executor {executor!r}; expected "
+                             f"one of {EXECUTORS}")
         if isinstance(session, Session):
             self.session = session
             if not isinstance(storage, RemoteStorage):
@@ -77,6 +525,7 @@ class DSIPipeline:
             storage = legacy_storage[0]
             service.register_job(job_id, batch_size)
             self.session = Session(service, job_id, batch_size)
+        self.executor = executor
         self.svc: SenecaService = self.session.service
         self.storage = storage
         self.ds: SyntheticDataset = storage.dataset
@@ -84,15 +533,26 @@ class DSIPipeline:
         self.pool = ThreadPoolExecutor(max_workers=n_workers)
         self.times = StageTimes()
         # telemetry feeds the adaptive repartition loop: per-stage EWMAs,
-        # transfer bandwidths and per-form serve counts, aggregated across
-        # every pipeline sharing the service
+        # transfer bandwidths, per-form serve counts and (stage-parallel)
+        # queue gauges, aggregated across every pipeline on the service
         self.telemetry = self.svc.telemetry
         self._n_workers = n_workers
         self.telemetry.add_concurrency(n_workers)
         self.rng = np.random.default_rng(seed + self.session.job_id)
+        # batched augmentation engine (stage-parallel augment stage):
+        # service-level knob, overridable per pipeline
+        if augment_backend is None:
+            self.augment = self.svc.augment
+        else:
+            from repro.api.backends import resolve_augment_backend
+            self.augment = resolve_augment_backend(augment_backend)
+        self._prefetch_depth = prefetch
         self._q: "queue.Queue" = queue.Queue(maxsize=prefetch)
         self._stop = threading.Event()
         self._thread: Optional[threading.Thread] = None
+        self._prefetch_exc: Optional[BaseException] = None
+        self._executor: Optional[_StageParallelExecutor] = None
+        self._executor_lock = threading.Lock()
 
     # ------------------------------------------------------------------
     def _produce_sample(self, sid: int, epoch_tag: int) -> np.ndarray:
@@ -102,18 +562,21 @@ class DSIPipeline:
         self.telemetry.record_serve(form)
         t0 = time.monotonic()
         if form == "augmented":
-            self.times.fetch += time.monotonic() - t0
+            # hit cost is the lookup interval (t0 - t_look): StageTimes
+            # and telemetry account the same thing (the seed charged
+            # "now - t0" ~ 0 here, undercounting every hit)
+            self.times.fetch += t0 - t_look
             self.telemetry.record_stage("fetch_cache", t0 - t_look)
             self.telemetry.record_bytes("cache", value.nbytes, t0 - t_look)
             return value
         if form == "decoded":
             img = value
-            self.times.fetch += time.monotonic() - t0
+            self.times.fetch += t0 - t_look
             self.telemetry.record_stage("fetch_cache", t0 - t_look)
             self.telemetry.record_bytes("cache", img.nbytes, t0 - t_look)
         elif form == "encoded":
             enc = value
-            self.times.fetch += time.monotonic() - t0
+            self.times.fetch += t0 - t_look
             self.telemetry.record_stage("fetch_cache", t0 - t_look)
             self.telemetry.record_bytes("cache", len(enc), t0 - t_look)
             t1 = time.monotonic()
@@ -136,9 +599,8 @@ class DSIPipeline:
             self.telemetry.record_stage("decode", dt)
             self.session.admit(sid, "decoded", img, img.nbytes)
         t2 = time.monotonic()
-        aug_seed = (epoch_tag * 1_000_003 + sid) & 0x7FFFFFFF
         out = augment_np(img, self.ds.crop_hw,
-                         np.random.default_rng(aug_seed))
+                         np.random.default_rng(_aug_seed(epoch_tag, sid)))
         dt = time.monotonic() - t2
         self.times.augment += dt
         self.telemetry.record_stage("augment", dt)
@@ -147,6 +609,10 @@ class DSIPipeline:
 
     # ------------------------------------------------------------------
     def next_batch(self) -> Dict[str, np.ndarray]:
+        if self.executor == "stage-parallel":
+            # block until produced, like the per-sample path: slowness is
+            # backpressure, not failure (errors still raise immediately)
+            return self._ensure_executor().get_batch(timeout=None)
         ids, _forms = self.session.next_batch_ids()
         epoch_tag = self.session.epoch
         imgs = list(self.pool.map(
@@ -156,6 +622,7 @@ class DSIPipeline:
             "images": np.stack(imgs).astype(np.float32),
             "labels": np.asarray([self.ds.label(int(s)) for s in ids],
                                  np.int32),
+            "ids": np.asarray(ids, np.int64),
         }
         dt = time.monotonic() - t0
         self.times.collate += dt
@@ -195,21 +662,67 @@ class DSIPipeline:
                              np.random.default_rng(sid ^ 0x5EED))
             self.session.admit(sid, "augmented", out, out.nbytes)
         except Exception:      # background worker must never kill serving
-            pass
+            # ... but it must not fail silently either: count every
+            # failure (stats()["refill_errors"]) and log the first
+            if self.telemetry.record_error("refill") == 1:
+                log.warning(
+                    "background refill failed for sample %d (first "
+                    "occurrence; later failures only counted in "
+                    "stats()['refill_errors'])", sid, exc_info=True)
 
     # ------------------------------------------------------------------
+    def _ensure_executor(self) -> _StageParallelExecutor:
+        with self._executor_lock:
+            if self._executor is None:
+                self._executor = _StageParallelExecutor(
+                    self, out_depth=max(self._prefetch_depth, 1))
+            return self._executor
+
     def start_prefetch(self) -> None:
+        if self.executor == "stage-parallel":
+            # the stage executor IS the prefetcher: out_q holds up to
+            # ``prefetch`` collated batches
+            self._ensure_executor()
+            return
+
         def run():
+            batch = None
             while not self._stop.is_set():
+                if batch is None:
+                    try:
+                        batch = self.next_batch()
+                    except Exception as e:   # noqa: BLE001
+                        # record (don't silently die): get() re-raises
+                        self._prefetch_exc = e
+                        if self.telemetry.record_error("prefetch") == 1:
+                            log.warning("prefetch thread failed in "
+                                        "next_batch()", exc_info=True)
+                        return
                 try:
-                    self._q.put(self.next_batch(), timeout=0.5)
+                    self._q.put(batch, timeout=0.5)
                 except queue.Full:
+                    # consumer is slow: hold the built batch and re-offer
+                    # it (the seed rebuilt a fresh batch here, silently
+                    # dropping this one's sample ids and wasting the work)
                     continue
+                batch = None
         self._thread = threading.Thread(target=run, daemon=True)
         self._thread.start()
 
     def get(self, timeout: float = 60.0) -> Dict[str, np.ndarray]:
-        return self._q.get(timeout=timeout)
+        if self.executor == "stage-parallel":
+            return self._ensure_executor().get_batch(timeout)
+        deadline = time.monotonic() + timeout
+        while True:
+            try:
+                return self._q.get(timeout=min(0.2, max(timeout, 0.01)))
+            except queue.Empty:
+                if self._prefetch_exc is not None:
+                    raise RuntimeError(
+                        "prefetch thread died; no more batches are "
+                        "coming") from self._prefetch_exc
+                if time.monotonic() >= deadline:
+                    raise
 
     def stop(self) -> None:
         if not self._stop.is_set():
@@ -217,5 +730,7 @@ class DSIPipeline:
         self._stop.set()
         if self._thread:
             self._thread.join(timeout=2.0)
+        if self._executor is not None:
+            self._executor.stop()
         self.pool.shutdown(wait=False)
         self.session.close()

@@ -42,8 +42,16 @@ def _augment_kernel(img_ref, top_ref, left_ref, flip_ref, out_ref, *,
                                              "out_dtype", "interpret"))
 def augment(images: jax.Array, tops: jax.Array, lefts: jax.Array,
             flips: jax.Array, *, crop_h: int, crop_w: int,
-            out_dtype=jnp.bfloat16, interpret: bool = True) -> jax.Array:
-    """images (B,H,W,3) uint8 -> (B,crop_h,crop_w,3) out_dtype."""
+            out_dtype=jnp.bfloat16,
+            interpret: bool = None) -> jax.Array:
+    """images (B,H,W,3) uint8 -> (B,crop_h,crop_w,3) out_dtype.
+
+    ``interpret=None`` (default) auto-selects: compiled Mosaic on TPU,
+    interpreter everywhere else (CPU CI / tests).  The flag is static, so
+    the choice is resolved once per (shape, dtype) trace.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
     B, H, W, C = images.shape
     assert C == 3
     kernel = functools.partial(_augment_kernel, crop_h=crop_h, crop_w=crop_w)

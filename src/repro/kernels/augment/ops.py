@@ -1,21 +1,30 @@
-"""Public op: device-side fused augmentation with PRNG-driven parameters.
+"""Public ops: device-side fused augmentation.
 
 ``augment_batch(rng, images, crop)`` derives per-sample crop offsets and
 flips from a JAX key and dispatches to the Pallas kernel (interpret mode on
 CPU; compiled on TPU).
+
+``augment_batch_seeded(images, seeds, ...)`` is the live-pipeline entry
+point: the geometric parameters are derived *on host* from per-sample
+integer seeds with the exact draw sequence of
+:func:`repro.data.augment.augment_np`, so the kernel output matches the
+NumPy fallback per sample (same seed -> same crop/flip, float32 math on
+both sides) regardless of how samples are batched together.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
+from repro.data.augment import derive_batch_params
 from repro.kernels.augment.kernel import augment
 from repro.kernels.augment.ref import augment_ref
 
 
 def augment_batch(rng: jax.Array, images: jax.Array, crop_h: int,
                   crop_w: int, *, use_kernel: bool = True,
-                  interpret: bool = True,
+                  interpret: bool = None,
                   out_dtype=jnp.bfloat16) -> jax.Array:
     B, H, W, _ = images.shape
     k1, k2, k3 = jax.random.split(rng, 3)
@@ -28,3 +37,40 @@ def augment_batch(rng: jax.Array, images: jax.Array, crop_h: int,
                        interpret=interpret)
     return augment_ref(images, tops, lefts, flips, crop_h, crop_w,
                        out_dtype=out_dtype)
+
+
+def _pad_to_bucket(n: int) -> int:
+    """Next power-of-two batch bucket, so variable-size augment groups
+    (cache hits shrink them) reuse a handful of kernel traces instead of
+    retracing per distinct B."""
+    return 1 if n <= 1 else 1 << (n - 1).bit_length()
+
+
+def augment_batch_seeded(images: np.ndarray, seeds: np.ndarray,
+                         crop_h: int, crop_w: int, *,
+                         out_dtype=jnp.float32, interpret: bool = None,
+                         bucket: int = None) -> np.ndarray:
+    """(B,H,W,3) uint8 + per-sample seeds -> (B,crop_h,crop_w,3) host array.
+
+    Batches are padded up to power-of-two buckets (rows repeated, result
+    sliced back) to bound jit retraces across ragged group sizes;
+    ``bucket`` overrides the target size (callers pass ``bucket=B`` for
+    sizes they know recur, e.g. the full batch, so a 12-sample batch is
+    not padded to 16 forever).
+    """
+    images = np.ascontiguousarray(images)
+    B, H, W, _ = images.shape
+    tops, lefts, flips = derive_batch_params(
+        (H, W), (crop_h, crop_w), np.asarray(seeds))
+    Bp = max(bucket, B) if bucket else _pad_to_bucket(B)
+    if Bp != B:
+        pad = [(0, Bp - B)] + [(0, 0)] * (images.ndim - 1)
+        images = np.pad(images, pad, mode="edge")
+        tops = np.pad(tops, (0, Bp - B), mode="edge")
+        lefts = np.pad(lefts, (0, Bp - B), mode="edge")
+        flips = np.pad(flips, (0, Bp - B), mode="edge")
+    out = augment(jnp.asarray(images), jnp.asarray(tops),
+                  jnp.asarray(lefts), jnp.asarray(flips),
+                  crop_h=crop_h, crop_w=crop_w, out_dtype=out_dtype,
+                  interpret=interpret)
+    return np.asarray(out[:B])

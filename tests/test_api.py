@@ -238,6 +238,61 @@ def test_parity_numpy_vs_jax_same_stream_same_aggregates():
 
 
 # ----------------------------------------------------------------------
+# batch-granular admission (the stage-parallel executor's path): same
+# policy decisions as N per-sample admits, one lock acquisition per batch
+def test_admit_batch_matches_per_sample_admission():
+    """Same entries, same policies, same capacity: admit_batch and a loop
+    of admit() must leave identical residency, stats and ODS status."""
+    entries = [(sid, b"v", 1000) for sid in range(5)]
+    per, batch = _server(cache_bytes=3 * 1000), _server(cache_bytes=3 * 1000)
+    s1 = per.open_session(batch_size=4)
+    s2 = batch.open_session(batch_size=4)
+    loop_ok = [s1.admit(sid, "augmented", v, nb) for sid, v, nb in entries]
+    batch_ok = s2.admit_batch("augmented", entries)
+    assert loop_ok == batch_ok.tolist() == [True] * 3 + [False] * 2
+    assert per.service.cache.parts["augmented"].keys() == \
+        batch.service.cache.parts["augmented"].keys()
+    ids = np.arange(5)
+    assert np.array_equal(per.service.backend.status_of(ids),
+                          batch.service.backend.status_of(ids))
+    s1.close()
+    s2.close()
+
+
+def test_admit_batch_unseen_only_rejects_all_seen():
+    server = _server()
+    with server.open_session(batch_size=10) as sess:
+        ids, _ = sess.next_batch_ids()          # all misses -> all seen
+        entries = [(int(s), b"v", 1000) for s in ids]
+        assert not sess.admit_batch("augmented", entries).any(), \
+            "augmented admissions nobody can consume must all be rejected"
+        fresh = [(sid, b"v", 1000) for sid in range(200)
+                 if sid not in set(ids.tolist())][:10]
+        ok = sess.admit_batch("augmented", fresh)
+        assert ok.all()
+        marked = server.service.backend.status_of(
+            np.asarray([sid for sid, _, _ in fresh]))
+        assert (marked == 3).all(), "admitted batch must be ODS-marked"
+
+
+def test_admit_batch_closed_session_drops_everything():
+    server = _server()
+    sess = server.open_session(batch_size=4)
+    sess.close()
+    ok = sess.admit_batch("augmented", [(0, b"v", 1000), (1, b"v", 1000)])
+    assert ok.shape == (2,) and not ok.any()
+    assert len(server.service.cache.parts["augmented"]) == 0
+
+
+def test_admit_batch_zero_capacity_tier_fast_path():
+    server = _server(split=(1.0, 0.0, 0.0))     # no augmented tier
+    with server.open_session(batch_size=4) as sess:
+        ok = sess.admit_batch("augmented", [(0, b"v", 1000)])
+        assert not ok.any()
+        assert sess.admit_batch("encoded", [(0, b"e", 1000)]).all()
+
+
+# ----------------------------------------------------------------------
 # legacy DSIPipeline shim (scheduled for removal, see repro.core.seneca):
 # pin the positional-argument handling so dropping it in a later PR is a
 # deliberate act, not a silent break
