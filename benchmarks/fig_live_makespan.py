@@ -1,0 +1,130 @@
+"""Live multi-job makespan: shared Seneca cache vs per-job private naive.
+
+The paper's headline number (45.23% makespan reduction for a 12-job
+trace, Fig. 10) is reproduced in this repo by the fluid simulator
+(``fig10_makespan.py``).  This benchmark runs the same *shape* of
+experiment on the live threaded stack instead: a staggered-arrival trace
+of jobs, each an independent :class:`~repro.data.pipeline.DSIPipeline`
+with a rate-limited consumer emulating GPU ingest
+(:class:`~repro.workload.runner.WorkloadRunner`), against
+
+* **shared** — one :class:`~repro.api.SenecaServer` (ODS sampling, MDP
+  split, refcount eviction): all sessions share one cache, so one job's
+  augmentations serve the others (the paper's concurrency claim);
+* **private** — a per-job server with 1/N of the cache bytes, naive
+  sampling, encoded-only LRU (the PyTorch-like page-cache baseline).
+
+Both modes contend for the same token-bucket storage bandwidth.  Scaled
+to CPU-runnable size (5 jobs, tiny dataset); ratios are what matter.
+
+Emits ``BENCH_live_makespan.json``; ``--check`` asserts the shared-cache
+makespan beats the private baseline (reduction > 0) on the live stack.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+from benchmarks.common import write_bench_json
+from repro.api import JobSpec, SenecaServer, WorkloadRunner
+from repro.data.storage import RemoteStorage
+from repro.data.synthetic import tiny
+
+# GPU ingest rates (samples/s): mixed model sizes like the Fig. 10 trace
+JOB_RATES = (900, 500, 700, 900, 600)
+ARRIVAL_STEP_S = 0.3
+
+
+def _trace(epochs: int, batch: int) -> List[JobSpec]:
+    return [JobSpec(f"job{i}", arrival_s=i * ARRIVAL_STEP_S,
+                    epochs=epochs, batch_size=batch, gpu_rate=rate,
+                    n_workers=2)
+            for i, rate in enumerate(JOB_RATES)]
+
+
+def run_mode(mode: str, *, n_samples: int, epochs: int, batch: int,
+             cache_frac: float, bandwidth: float, seed: int = 0) -> Dict:
+    ds = tiny(n=n_samples)
+    total_cache = int(cache_frac * n_samples * ds.augmented_bytes())
+    storage = RemoteStorage(ds, bandwidth=bandwidth)
+    if mode == "shared":
+        server = SenecaServer.for_dataset(ds, cache_bytes=total_cache,
+                                          seed=seed)
+        runner = WorkloadRunner(server, storage, record_ids=False,
+                                seed=seed)
+    else:                         # per-job private naive (PyTorch-like)
+        server = None
+
+        def factory(spec: JobSpec) -> SenecaServer:
+            return SenecaServer.for_dataset(
+                ds, cache_bytes=total_cache // len(JOB_RATES), seed=seed,
+                use_ods=False, split=(1.0, 0.0, 0.0), eviction="lru")
+        runner = WorkloadRunner(server_factory=factory, storage=storage,
+                                record_ids=False, seed=seed)
+    res = runner.run(_trace(epochs, batch), timeout=600)
+    out = {
+        "mode": mode,
+        "makespan_s": res.makespan,
+        "wall_s": res.wall_s,
+        "total_samples": res.total_samples,
+        "storage_fetches": storage.fetches,
+        "per_job_s": {j.spec.name: round(j.duration_s, 3)
+                      for j in res.jobs},
+        "epochs_completed": {j.spec.name: j.epochs_completed
+                             for j in res.jobs},
+    }
+    if mode == "shared":
+        out["ods_hit_rate"] = res.stats["ods_hit_rate"]
+        out["substitutions"] = res.stats["substitutions"]
+        out["partition"] = res.stats["partition"]
+        server.close()
+    return out
+
+
+def run(full: bool = False) -> List[Tuple[str, str]]:
+    # bandwidth is deliberately the scarce resource (the paper's NFS
+    # bottleneck): the private baseline fetches ~2.5x the bytes, so its
+    # makespan carries a hardware floor the shared cache avoids — which
+    # keeps the --check assertion robust against CPU scheduling noise
+    # on small CI runners
+    knobs = dict(n_samples=1_536 if full else 384,
+                 epochs=3 if full else 2, batch=16,
+                 cache_frac=0.4, bandwidth=12e6)
+    results = {mode: run_mode(mode, **knobs)
+               for mode in ("shared", "private")}
+    shared, private = results["shared"], results["private"]
+    reduction = 1 - shared["makespan_s"] / private["makespan_s"]
+    payload = {"config": {k: str(v) for k, v in knobs.items()},
+               "reduction": reduction, **results}
+    path = write_bench_json("live_makespan", payload)
+
+    rows = [(f"fig_live_makespan/{m}",
+             f"makespan={r['makespan_s']:.2f}s "
+             f"fetches={r['storage_fetches']}")
+            for m, r in results.items()]
+    rows.append((
+        "fig_live_makespan/reduction",
+        f"{reduction * 100:.1f}% (live stack; paper sim: 45.23%) "
+        f"hit={shared['ods_hit_rate']:.3f} json={path}"))
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--check", action="store_true",
+                    help="assert shared-cache makespan < private baseline")
+    args = ap.parse_args()
+    out_rows = run(full=args.full)
+    for name, derived in out_rows:
+        print(f"{name},{derived}")
+    if args.check:
+        import json
+        with open("BENCH_live_makespan.json") as f:
+            bench = json.load(f)
+        red = float(bench["reduction"])
+        assert red > 0, (
+            f"shared-cache makespan did not beat the private baseline "
+            f"(reduction={red:.3f})")
+        print(f"CHECK OK: live shared-cache reduction {red:.1%} > 0")

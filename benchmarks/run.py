@@ -21,8 +21,8 @@ def main() -> None:
     from benchmarks import (fig3_cache_forms, fig4_pagecache,
                             fig8_validation, fig10_makespan, fig13_hitrate,
                             fig14_concurrency, fig15_ect, fig_dynamic_jobs,
-                            fig_pipeline_throughput, roofline_report,
-                            table6_mdp)
+                            fig_live_makespan, fig_pipeline_throughput,
+                            roofline_report, table6_mdp)
     modules = [
         ("fig3", fig3_cache_forms), ("fig4", fig4_pagecache),
         ("table6", table6_mdp), ("fig8", fig8_validation),
@@ -30,6 +30,7 @@ def main() -> None:
         ("fig14", fig14_concurrency), ("fig15", fig15_ect),
         ("dynamic", fig_dynamic_jobs),
         ("pipeline", fig_pipeline_throughput),
+        ("live", fig_live_makespan),
         ("roofline", roofline_report),
     ]
     only = set(args.only.split(",")) if args.only else None

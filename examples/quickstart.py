@@ -23,7 +23,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import jax
 import numpy as np
 
-from repro.api import SenecaServer
+from repro.api import JobSpec, SenecaServer, WorkloadRunner
 from repro.configs import registry
 from repro.configs.base import ParallelismConfig
 from repro.data.pipeline import DSIPipeline
@@ -97,6 +97,43 @@ def run_seneca(args) -> None:
     print("[quickstart] OK — trained through the repro.api facade")
 
 
+def run_multi(args) -> None:
+    """``--jobs N``: N concurrent sessions sharing one Seneca cache,
+    driven by the multi-job WorkloadRunner (docs/API.md "Multi-job
+    workloads") — each job is a DSIPipeline with a rate-limited consumer
+    emulating its GPU's ingest rate."""
+    ds = tiny(n=1024)
+    server = SenecaServer.for_dataset(ds, cache_frac=0.35, seed=0,
+                                      backend=args.backend,
+                                      augment_backend=args.augment_backend,
+                                      repartition=args.repartition)
+    print(f"[quickstart] MDP partition: {server.partition.label} "
+          f"({args.jobs} concurrent jobs, one shared cache)")
+    rates = [900, 500, 700, 1100, 600, 800][:args.jobs] or [900]
+    trace = [JobSpec(f"job{i}", arrival_s=0.4 * i, epochs=1,
+                     batch_size=args.batch, gpu_rate=rates[i % len(rates)],
+                     executor=args.executor, n_workers=2)
+             for i in range(args.jobs)]
+    runner = WorkloadRunner(server, RemoteStorage(ds, bandwidth=60e6),
+                            record_ids=False)
+    res = runner.run(trace, timeout=600)
+    for job in res.jobs:
+        print(f"[quickstart]   {job.spec.name}: arrived "
+              f"{job.spec.arrival_s:.1f}s, {job.samples} samples in "
+              f"{job.duration_s:.1f}s ({job.epochs_completed} epoch(s))")
+    stats = res.stats
+    print(f"[quickstart] makespan {res.makespan:.1f}s  "
+          f"ods_hit_rate={stats['ods_hit_rate']:.3f} "
+          f"substitutions={stats['substitutions']}")
+    server.close()
+    # each job consumes one whole-batch epoch pass (the runner's epoch
+    # accounting — exact even when --batch does not divide the dataset)
+    epoch_size = (ds.n_samples // args.batch) * args.batch
+    assert res.ok and res.total_samples == args.jobs * epoch_size
+    assert all(j.epochs_completed == 1 for j in res.jobs)
+    print(f"[quickstart] OK — {args.jobs} jobs shared one Seneca cache")
+
+
 def run_lm(args) -> None:
     from repro.distributed.ft import FTConfig, ResilientTrainer
     from repro.launch.train import lm_batch_source
@@ -142,6 +179,11 @@ def main() -> None:
     ap.add_argument("--repartition", default="static",
                     choices=("static", "on-change", "adaptive"),
                     help="live cache repartitioning mode (docs/API.md)")
+    ap.add_argument("--jobs", type=int, default=1,
+                    help="run N concurrent sessions over one shared "
+                         "cache via the WorkloadRunner (docs/API.md "
+                         "\"Multi-job workloads\") instead of the "
+                         "single-job training loop")
     ap.add_argument("--steps", type=int, default=None,
                     help="training steps (default: 30, or 200 with --lm)")
     ap.add_argument("--batch", type=int, default=16)
@@ -151,6 +193,8 @@ def main() -> None:
         args.steps = 200 if args.lm else 30
     if args.lm:
         run_lm(args)
+    elif args.jobs > 1:
+        run_multi(args)
     else:
         run_seneca(args)
 

@@ -51,6 +51,11 @@ from repro.core.perf_model import (AWS_P3, AZURE_NC96, DATASETS,
 from repro.sim.desim import (ALL_LOADERS, DALI_CPU, DALI_GPU, DSISimulator,
                              LoaderSpec, MDP_ONLY, MINIO, PYTORCH, QUIVER,
                              SENECA, SHADE, SimJob, SimResult)
+# live multi-job workload runner + pluggable clocks (docs/API.md
+# "Multi-job workloads"); VirtualClock makes concurrency deterministic
+from repro.workload import (Clock, JobResult, JobSpec, RealClock,
+                            VirtualClock, WorkloadResult, WorkloadRunner,
+                            deterministic_runner)
 
 __all__ = [
     # server / session facade
@@ -79,4 +84,7 @@ __all__ = [
     "DSISimulator", "LoaderSpec", "SimJob", "SimResult", "ALL_LOADERS",
     "PYTORCH", "DALI_CPU", "DALI_GPU", "MINIO", "QUIVER", "SHADE",
     "MDP_ONLY", "SENECA",
+    # live multi-job workloads
+    "WorkloadRunner", "JobSpec", "JobResult", "WorkloadResult",
+    "Clock", "RealClock", "VirtualClock", "deterministic_runner",
 ]

@@ -671,6 +671,27 @@ class SenecaServer:
         the alternative to the ``repartition_period`` background thread."""
         return self.service.maybe_repartition()
 
+    def run_workload(self, trace, storage, *, clock=None,
+                     timeout: Optional[float] = None,
+                     raise_on_error: bool = True, **runner_kwargs):
+        """Run a multi-job trace against this server's shared cache and
+        return the :class:`~repro.workload.runner.WorkloadResult`.
+
+        Convenience over :class:`~repro.workload.runner.WorkloadRunner`
+        (which see for ``clock=``/``record_ids=``/``seed=`` knobs and
+        the deterministic VirtualClock contract); ``timeout`` /
+        ``raise_on_error`` are forwarded to
+        :meth:`~repro.workload.runner.WorkloadRunner.run`.  Each job in
+        ``trace`` opens its own session, so arrivals/departures drive
+        the :class:`RepartitionController` exactly like hand-opened
+        ones.
+        """
+        from repro.workload.runner import WorkloadRunner
+        runner = WorkloadRunner(self, storage, clock=clock,
+                                **runner_kwargs)
+        return runner.run(trace, timeout=timeout,
+                          raise_on_error=raise_on_error)
+
     def stats(self) -> Dict[str, float]:
         out = self.service.stats()
         out["n_sessions"] = self.n_sessions

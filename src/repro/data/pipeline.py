@@ -495,7 +495,8 @@ class DSIPipeline:
     def __init__(self, session, storage: Optional[RemoteStorage] = None,
                  *legacy_storage, batch_size: Optional[int] = None,
                  n_workers: int = 4, prefetch: int = 2, seed: int = 0,
-                 executor: str = "per-sample", augment_backend=None):
+                 executor: str = "per-sample", augment_backend=None,
+                 consume_hook=None, sync_refills: bool = False):
         # validate before any side effect: the legacy path below
         # registers a job on the shared service, which must not leak
         # when construction fails
@@ -546,6 +547,15 @@ class DSIPipeline:
         else:
             from repro.api.backends import resolve_augment_backend
             self.augment = resolve_augment_backend(augment_backend)
+        # consumer-rate hook: called with every batch ``next_batch``
+        # emits, on the emitting thread, before the batch is returned.
+        # The WorkloadRunner installs a rate limiter here to emulate GPU
+        # ingest (repro/workload/runner.py); anything callable works.
+        self._consume_hook = consume_hook
+        # deterministic mode: run background refills inline on the
+        # calling thread instead of racing them on the worker pool
+        # (required for byte-identical virtual-clock workload runs)
+        self._sync_refills = sync_refills
         self._prefetch_depth = prefetch
         self._q: "queue.Queue" = queue.Queue(maxsize=prefetch)
         self._stop = threading.Event()
@@ -612,7 +622,10 @@ class DSIPipeline:
         if self.executor == "stage-parallel":
             # block until produced, like the per-sample path: slowness is
             # backpressure, not failure (errors still raise immediately)
-            return self._ensure_executor().get_batch(timeout=None)
+            batch = self._ensure_executor().get_batch(timeout=None)
+            if self._consume_hook is not None:
+                self._consume_hook(batch)
+            return batch
         ids, _forms = self.session.next_batch_ids()
         epoch_tag = self.session.epoch
         imgs = list(self.pool.map(
@@ -632,6 +645,8 @@ class DSIPipeline:
         # adaptive-repartition tick: a fast no-op in "static"/"on-change"
         # modes; in "adaptive" this is where calibrated drift is checked
         self.svc.maybe_repartition()
+        if self._consume_hook is not None:
+            self._consume_hook(batch)
         return batch
 
     def _process_refills(self, max_n: int = 32) -> None:
@@ -648,7 +663,10 @@ class DSIPipeline:
                 extra = self.svc.refill_candidates(min(spare, free_slots))
                 work = np.concatenate([work, extra]) if len(work) else extra
         for sid in work:
-            self.pool.submit(self._refill_one, int(sid))
+            if self._sync_refills:
+                self._refill_one(int(sid))
+            else:
+                self.pool.submit(self._refill_one, int(sid))
 
     def _refill_one(self, sid: int) -> None:
         try:
@@ -711,7 +729,14 @@ class DSIPipeline:
 
     def get(self, timeout: float = 60.0) -> Dict[str, np.ndarray]:
         if self.executor == "stage-parallel":
-            return self._ensure_executor().get_batch(timeout)
+            batch = self._ensure_executor().get_batch(timeout)
+            # same contract as next_batch(): the hook fires once per
+            # emitted batch.  (On the per-sample path below, batches
+            # reach the queue via the prefetch thread's next_batch(),
+            # which already fired it.)
+            if self._consume_hook is not None:
+                self._consume_hook(batch)
+            return batch
         deadline = time.monotonic() + timeout
         while True:
             try:

@@ -1,0 +1,21 @@
+"""Multi-job workload execution over the live Seneca stack.
+
+:class:`WorkloadRunner` admits a trace of :class:`JobSpec`\\ s against a
+:class:`~repro.api.server.SenecaServer` (shared cache) or a per-job
+server factory (private baseline), pacing each job's pipeline with a
+rate-limited consumer that emulates GPU ingest.  The :class:`Clock`
+abstraction makes concurrency reproducible: :class:`RealClock` is wall
+time, :class:`VirtualClock` serializes job threads deterministically so
+multi-job interleavings are byte-for-byte repeatable in tests.
+
+See docs/API.md "Multi-job workloads".
+"""
+from repro.workload.clock import Clock, RealClock, VirtualClock
+from repro.workload.runner import (JobResult, JobSpec, WorkloadResult,
+                                   WorkloadRunner, deterministic_runner)
+
+__all__ = [
+    "Clock", "RealClock", "VirtualClock",
+    "JobSpec", "JobResult", "WorkloadResult", "WorkloadRunner",
+    "deterministic_runner",
+]

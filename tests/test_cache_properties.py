@@ -1,0 +1,169 @@
+"""Property tests for TieredCache invariants (ISSUE-4 satellite).
+
+Random interleavings of ``insert_batch_gated`` / ``resize`` / ``lookup``
+/ eviction driven through the :class:`SenecaService` admission +
+demotion paths must never:
+
+* exceed any partition's byte capacity;
+* desynchronize a partition's byte accounting from its entry sizes;
+* leave ODS metadata claiming a form the cache does not hold — the
+  one-directional consistency contract: ``status[k] == f > 0`` implies
+  the cache is resident at form ``f`` for ``k`` (understating — status 0
+  while a copy is still resident — is allowed: it only costs a refetch,
+  never serves wrong data).
+
+Strategies stick to the subset the conftest hypothesis fallback shim
+implements (integers/floats/lists/tuples/sampled_from), so the
+properties run with seeded examples even when the real library is
+absent.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.api import AZURE_NC96, DatasetProfile, SenecaConfig, SenecaService
+from repro.api.server import CODE_FORM, FORM_CODE
+from repro.cache.store import FORMS, TieredCache
+
+# property sweeps are the "tier-1 stays fast" satellite's slow half:
+# deselected from tier-1 by pytest.ini, run by the CI stress job
+pytestmark = pytest.mark.slow
+
+N_KEYS = 64
+CACHE_BYTES = 8_192
+
+OPS = ("admit_encoded", "admit_decoded", "admit_augmented",
+       "admit_many", "lookup", "evict_augmented", "resize")
+
+# one op: (kind, key, nbytes, f_enc, f_rest) — the two floats become a
+# resize split; admits ignore them, resizes ignore key/nbytes
+op_strategy = st.lists(
+    st.tuples(st.sampled_from(OPS),
+              st.integers(0, N_KEYS - 1),
+              st.integers(1, 2_000),
+              st.floats(0.0, 1.0),
+              st.floats(0.0, 1.0)),
+    min_size=1, max_size=60)
+
+
+def _service() -> SenecaService:
+    profile = DatasetProfile("prop", N_KEYS, 1_000, decoded_bytes=1_500,
+                             augmented_bytes=2_000)
+    return SenecaService(SenecaConfig(
+        cache_bytes=CACHE_BYTES, hardware=AZURE_NC96, dataset=profile,
+        split=(0.4, 0.3, 0.3), seed=3))
+
+
+def _split_from(f_enc: float, f_rest: float):
+    """Map two unit floats to a valid (x_e, x_d, x_a) simplex point."""
+    x_e = round(f_enc, 3)
+    x_d = round((1.0 - x_e) * f_rest, 3)
+    x_a = 1.0 - x_e - x_d
+    return (x_e, x_d, x_a)
+
+
+def _check_invariants(svc: SenecaService) -> None:
+    cache = svc.cache
+    with cache.lock:
+        total_cap = 0
+        for form in FORMS:
+            part = cache.parts[form]
+            assert part.stats.bytes_used <= part.capacity, \
+                f"{form}: {part.stats.bytes_used} > cap {part.capacity}"
+            assert part.stats.bytes_used >= 0
+            assert part.stats.bytes_used == sum(part._sizes.values()), \
+                f"{form}: byte ledger out of sync with entry sizes"
+            assert set(part._data) == set(part._sizes), \
+                f"{form}: data/size key sets diverged"
+            total_cap += part.capacity
+        assert total_cap <= cache.capacity, \
+            "partition capacities exceed the cache total"
+        # ODS consistency: a nonzero status must name a resident form
+        status = svc.backend.status_of(np.arange(N_KEYS))
+        for key in np.flatnonzero(status):
+            form = CODE_FORM[int(status[key])]
+            assert cache.parts[form].peek(int(key)) is not None, \
+                f"status says {form} for key {key} but cache lost it"
+
+
+@settings(max_examples=40)
+@given(ops=op_strategy)
+def test_tiered_cache_invariants_under_random_interleavings(ops):
+    svc = _service()
+    for kind, key, nbytes, f_enc, f_rest in ops:
+        if kind.startswith("admit_") and kind != "admit_many":
+            form = kind[len("admit_"):]
+            svc.admit(key, form, b"x" * nbytes, nbytes)
+        elif kind == "admit_many":
+            # batch-granular admission across consecutive keys
+            entries = [((key + i) % N_KEYS, b"y" * nbytes, nbytes)
+                       for i in range(3)]
+            svc.admit_batch("augmented" if f_rest >= 0.5 else "decoded",
+                            entries)
+        elif kind == "lookup":
+            svc.lookup(key)
+        elif kind == "evict_augmented":
+            # the sampler's step-5 path: only keys the metadata sees as
+            # augmented get evicted, and the status is patched with them
+            if int(svc.backend.status_of(np.asarray([key]))[0]) \
+                    == FORM_CODE["augmented"]:
+                svc.cache.evict(key, "augmented")
+                svc.backend.mark_evicted(np.asarray([key]))
+        elif kind == "resize":
+            from repro.core import mdp
+            x_e, x_d, x_a = _split_from(f_enc, f_rest)
+            svc.apply_partition(mdp.Partition(
+                x_e, x_d, x_a, throughput=float("nan")))
+        _check_invariants(svc)
+
+
+@settings(max_examples=25)
+@given(sizes=st.lists(st.tuples(st.integers(0, N_KEYS - 1),
+                                st.integers(1, 3_000)),
+                      min_size=1, max_size=40),
+       f_enc=st.floats(0.0, 1.0), f_rest=st.floats(0.0, 1.0))
+def test_insert_batch_gated_matches_looped_insert_gated(sizes, f_enc,
+                                                        f_rest):
+    """One insert_batch_gated call must leave the partition in exactly
+    the state N looped insert_gated calls would (per-entry semantics),
+    for any split geometry."""
+    from repro.api.policies import resolve_policy
+    split = _split_from(f_enc, f_rest)
+    policy = resolve_policy("admission", "capacity")
+    entries = [(k, b"z" * nb, nb) for k, nb in sizes]
+
+    batch_cache = TieredCache(CACHE_BYTES, split)
+    got = batch_cache.insert_batch_gated("decoded", entries, policy)
+
+    loop_cache = TieredCache(CACHE_BYTES, split)
+    want = [loop_cache.insert_gated(k, "decoded", v, nb, policy)
+            for k, v, nb in entries]
+
+    assert got == want
+    bp, lp = batch_cache.parts["decoded"], loop_cache.parts["decoded"]
+    assert bp.keys() == lp.keys()
+    assert bp.stats.bytes_used == lp.stats.bytes_used <= bp.capacity
+
+
+@settings(max_examples=25)
+@given(splits=st.lists(st.tuples(st.floats(0.0, 1.0),
+                                 st.floats(0.0, 1.0)),
+                       min_size=1, max_size=12),
+       n_fill=st.integers(1, N_KEYS))
+def test_resize_sequences_keep_exact_byte_accounting(splits, n_fill):
+    """Any sequence of live resizes preserves per-partition capacity
+    bounds and exact byte ledgers, with entries demoted in ODS metadata
+    as partitions shrink."""
+    from repro.core import mdp
+    svc = _service()
+    per = max(CACHE_BYTES // (2 * max(n_fill, 1)), 64)
+    for key in range(n_fill):
+        svc.admit(key, "augmented", b"a" * per, per)
+        svc.admit(key, "encoded", b"e" * (per // 2), per // 2)
+    _check_invariants(svc)
+    for f_enc, f_rest in splits:
+        x_e, x_d, x_a = _split_from(f_enc, f_rest)
+        svc.apply_partition(mdp.Partition(x_e, x_d, x_a,
+                                          throughput=float("nan")))
+        _check_invariants(svc)

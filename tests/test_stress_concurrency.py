@@ -1,0 +1,136 @@
+"""Concurrency stress tests (ISSUE-4 satellite) — ``slow``/``stress``
+marked, excluded from tier-1 (pytest.ini) and run by the dedicated CI
+stress job under a hard timeout.
+
+The scenario the unit suite cannot afford: many sessions churning
+(opening, pumping batches, closing) while the ``repartition="adaptive"``
+background thread concurrently re-solves the MDP and resizes the live
+TieredCache.  At quiesce: no deadlock (every thread joins), no lost
+sessions (server bookkeeping returns to zero), and tier accounting is
+exact (byte ledgers match entry sizes, capacities respected, ODS
+metadata consistent with residency).
+"""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.api import JobSpec, SenecaServer, WorkloadRunner
+from repro.api.server import CODE_FORM
+from repro.cache.store import FORMS
+from repro.data.pipeline import DSIPipeline
+from repro.data.storage import RemoteStorage
+from repro.data.synthetic import tiny
+
+pytestmark = [pytest.mark.slow, pytest.mark.stress]
+
+
+def _assert_quiesced_accounting(server: SenecaServer, n: int) -> None:
+    svc = server.service
+    cache = svc.cache
+    with cache.lock:
+        total_cap = 0
+        for form in FORMS:
+            part = cache.parts[form]
+            assert part.stats.bytes_used == sum(part._sizes.values()), \
+                f"{form}: byte ledger out of sync after churn"
+            assert part.stats.bytes_used <= part.capacity, \
+                f"{form}: over capacity after live resizes"
+            assert set(part._data) == set(part._sizes)
+            total_cap += part.capacity
+        assert total_cap <= cache.capacity
+        status = svc.backend.status_of(np.arange(n))
+        for key in np.flatnonzero(status):
+            form = CODE_FORM[int(status[key])]
+            assert cache.parts[form].peek(int(key)) is not None, \
+                f"stale ODS status {form} for evicted key {key}"
+
+
+def test_session_churn_under_adaptive_background_repartitioning():
+    """8 churn threads x 6 open/pump/close cycles against one adaptive
+    server whose background tick thread re-solves and resizes live."""
+    n = 512
+    ds = tiny(n=n)
+    server = SenecaServer.for_dataset(
+        ds, cache_frac=0.35, seed=0, repartition="adaptive",
+        repartition_period=0.02, repartition_cooldown=0.0,
+        repartition_drift=0.01, repartition_gain=0.0,
+        telemetry_min_samples=8)
+    storage = RemoteStorage(ds)
+    errors = []
+    barrier = threading.Barrier(8)
+
+    def churn(tid: int) -> None:
+        try:
+            barrier.wait(timeout=30)
+            for cycle in range(6):
+                sess = server.open_session(batch_size=8)
+                pipe = DSIPipeline(sess, storage, n_workers=2,
+                                   seed=tid * 100 + cycle)
+                for _ in range(3):
+                    batch = pipe.next_batch()
+                    assert batch["images"].shape[0] == 8
+                pipe.stop()             # closes the session
+                assert sess.closed
+        except Exception as e:          # noqa: BLE001 - surfaced below
+            errors.append((tid, repr(e)))
+
+    threads = [threading.Thread(target=churn, args=(i,), daemon=True)
+               for i in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=180.0)
+    alive = [t.name for t in threads if t.is_alive()]
+    assert not alive, f"deadlocked churn threads: {alive}"
+    assert not errors, errors
+    assert server.n_sessions == 0, "lost sessions after churn"
+    assert server.service.backend.n_jobs == 1   # empty dict floor
+    server.close()                      # stops the background thread
+    _assert_quiesced_accounting(server, n)
+    # the background thread genuinely ran: re-solves were triggered by
+    # 48 session arrivals/departures plus drift ticks
+    assert server.stats()["repartitions"]["resolves"] >= 8
+
+
+def test_workload_runner_stress_many_jobs_adaptive():
+    """A 12-job staggered trace through the WorkloadRunner against an
+    adaptive server with a background tick thread: joins cleanly, counts
+    every sample, and leaves exact tier accounting."""
+    n = 256
+    ds = tiny(n=n)
+    server = SenecaServer.for_dataset(
+        ds, cache_frac=0.35, seed=1, repartition="adaptive",
+        repartition_period=0.05, repartition_cooldown=0.0,
+        telemetry_min_samples=16)
+    storage = RemoteStorage(ds, bandwidth=80e6)
+    trace = [JobSpec(f"j{i}", arrival_s=0.05 * i, epochs=1,
+                     batch_size=16, gpu_rate=2_000, n_workers=2)
+             for i in range(12)]
+    runner = WorkloadRunner(server, storage, record_ids=False)
+    res = runner.run(trace, timeout=300)
+    assert res.ok
+    assert res.total_samples == 12 * n
+    assert res.stats["n_sessions"] == 0
+    server.close()
+    _assert_quiesced_accounting(server, n)
+
+
+def test_repeated_cancel_leaves_server_consistent():
+    """Cancel storms: start a workload, cancel mid-flight, repeat on the
+    same server — sessions never leak and the cache stays consistent."""
+    n = 256
+    ds = tiny(n=n)
+    server = SenecaServer.for_dataset(ds, cache_frac=0.4, seed=2,
+                                      repartition="on-change")
+    storage = RemoteStorage(ds)
+    for round_i in range(4):
+        runner = WorkloadRunner(server, storage, record_ids=False)
+        trace = [JobSpec(f"r{round_i}-j{i}", epochs=20, batch_size=16,
+                         gpu_rate=400, n_workers=2) for i in range(3)]
+        threading.Timer(0.3, runner.cancel).start()
+        res = runner.run(trace, timeout=60, raise_on_error=False)
+        assert all(j.cancelled or j.ok for j in res.jobs)
+        assert server.n_sessions == 0, f"leaked sessions round {round_i}"
+    server.close()
+    _assert_quiesced_accounting(server, n)
