@@ -22,7 +22,7 @@ def main() -> None:
                             fig8_validation, fig10_makespan, fig13_hitrate,
                             fig14_concurrency, fig15_ect, fig_dynamic_jobs,
                             fig_live_makespan, fig_pipeline_throughput,
-                            roofline_report, table6_mdp)
+                            fig_tiered_cache, roofline_report, table6_mdp)
     modules = [
         ("fig3", fig3_cache_forms), ("fig4", fig4_pagecache),
         ("table6", table6_mdp), ("fig8", fig8_validation),
@@ -31,6 +31,7 @@ def main() -> None:
         ("dynamic", fig_dynamic_jobs),
         ("pipeline", fig_pipeline_throughput),
         ("live", fig_live_makespan),
+        ("tiered", fig_tiered_cache),
         ("roofline", roofline_report),
     ]
     only = set(args.only.split(",")) if args.only else None

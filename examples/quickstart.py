@@ -34,17 +34,43 @@ from repro.train.optimizer import AdamW, warmup_cosine
 from repro.train.step import build_train_step
 
 
+def _make_dataset(args):
+    """The synthetic dataset, optionally materialized as sharded files
+    (--dataset-dir: real file IO through the same token bucket)."""
+    ds = tiny(n=1024)
+    if args.dataset_dir:
+        from repro.data.synthetic import FileDataset
+        ds = FileDataset(ds, args.dataset_dir)
+        print(f"[quickstart] dataset: {ds.name} "
+              f"({ds.n_shards} shard file(s) in {args.dataset_dir})")
+    return ds
+
+
+def _spill_kwargs(args, ds) -> dict:
+    """--cache-spill-dir: turn every cache partition into a DRAM→disk
+    tier chain (docs/API.md \"Storage engine & cache tiers\")."""
+    if not args.cache_spill_dir:
+        return {}
+    spill = int(0.5 * ds.n_samples * ds.augmented_bytes())
+    return {"spill_dir": args.cache_spill_dir, "spill_bytes": spill}
+
+
 def run_seneca(args) -> None:
     # -- the docs/API.md quickstart, verbatim ---------------------------
-    ds = tiny(n=1024)
+    ds = _make_dataset(args)
     server = SenecaServer.for_dataset(ds, cache_frac=0.35, seed=0,
                                       backend=args.backend,
                                       augment_backend=args.augment_backend,
-                                      repartition=args.repartition)
+                                      repartition=args.repartition,
+                                      **_spill_kwargs(args, ds))
     print(f"[quickstart] MDP partition: {server.partition.label} "
           f"(backend={args.backend}, executor={args.executor}, "
           f"augment={args.augment_backend}, "
           f"repartition={args.repartition})")
+    if server.service.disk_partition is not None:
+        print(f"[quickstart] spill tier: disk split "
+              f"{server.service.disk_partition.label} in "
+              f"{args.cache_spill_dir}")
 
     cfg = registry.get_reduced("vit-huge")
     model = build(cfg)
@@ -82,6 +108,9 @@ def run_seneca(args) -> None:
     print(f"[quickstart] ods_hit_rate={stats['ods_hit_rate']:.3f} "
           f"substitutions={stats['substitutions']} "
           f"tier_counts={stats['tier_counts']}")
+    if "residency_counts" in stats:
+        print(f"[quickstart] residency={stats['residency_counts']} "
+              f"disk_bytes_used={stats['disk_bytes_used']}")
     rp = stats["repartitions"]
     if rp["applied"]:
         last = rp["last_applied"]
@@ -92,6 +121,7 @@ def run_seneca(args) -> None:
     else:
         print(f"[quickstart] live partition: {rp['partition']} "
               f"(mode={rp['mode']}, no repartition applied)")
+    server.close()      # drops spill-tier files when --cache-spill-dir
     assert np.isfinite(losses).all()
     assert stats["hits"] + stats["misses"] > 0
     print("[quickstart] OK — trained through the repro.api facade")
@@ -102,11 +132,12 @@ def run_multi(args) -> None:
     driven by the multi-job WorkloadRunner (docs/API.md "Multi-job
     workloads") — each job is a DSIPipeline with a rate-limited consumer
     emulating its GPU's ingest rate."""
-    ds = tiny(n=1024)
+    ds = _make_dataset(args)
     server = SenecaServer.for_dataset(ds, cache_frac=0.35, seed=0,
                                       backend=args.backend,
                                       augment_backend=args.augment_backend,
-                                      repartition=args.repartition)
+                                      repartition=args.repartition,
+                                      **_spill_kwargs(args, ds))
     print(f"[quickstart] MDP partition: {server.partition.label} "
           f"({args.jobs} concurrent jobs, one shared cache)")
     rates = [900, 500, 700, 1100, 600, 800][:args.jobs] or [900]
@@ -184,6 +215,16 @@ def main() -> None:
                          "cache via the WorkloadRunner (docs/API.md "
                          "\"Multi-job workloads\") instead of the "
                          "single-job training loop")
+    ap.add_argument("--cache-spill-dir", default=None,
+                    help="SSD spill directory: every cache partition "
+                         "becomes a DRAM→disk tier chain sized by the "
+                         "form×tier MDP (docs/API.md \"Storage engine "
+                         "& cache tiers\")")
+    ap.add_argument("--dataset-dir", default=None,
+                    help="materialize the synthetic dataset as "
+                         "write-once sharded files here and serve "
+                         "fetches from them (real file IO through the "
+                         "storage token bucket)")
     ap.add_argument("--steps", type=int, default=None,
                     help="training steps (default: 30, or 200 with --lm)")
     ap.add_argument("--batch", type=int, default=16)

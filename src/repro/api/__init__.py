@@ -40,13 +40,15 @@ from repro.api.server import (CODE_FORM, FORM_CODE, RepartitionController,
                               Session, SessionClosed)
 from repro.api.telemetry import (Ewma, TelemetryAggregator,
                                  TelemetrySnapshot)
-# hardware / dataset profiles + the closed-form DSI model (Eqs. 1-9)
+# hardware / dataset profiles + the closed-form DSI model (Eqs. 1-9,
+# plus the form×tier two-level variant behind the SSD spill engine)
 from repro.core.perf_model import (AWS_P3, AZURE_NC96, DATASETS,
                                    EVAL_PROFILES, GB, Gbit, IMAGENET_1K,
                                    IMAGENET_22K, IN_HOUSE, KB, MB,
                                    OPENIMAGES, VALIDATION_PROFILES,
                                    DatasetProfile, HardwareProfile,
-                                   JobProfile, dsi_throughput)
+                                   JobProfile, dsi_throughput,
+                                   dsi_throughput_tiered)
 # mechanistic simulator (Table 7 loader matrix) for the fig* benchmarks
 from repro.sim.desim import (ALL_LOADERS, DALI_CPU, DALI_GPU, DSISimulator,
                              LoaderSpec, MDP_ONLY, MINIO, PYTORCH, QUIVER,
@@ -77,6 +79,7 @@ __all__ = [
     "augment_backend_names",
     # profiles + closed-form model
     "HardwareProfile", "DatasetProfile", "JobProfile", "dsi_throughput",
+    "dsi_throughput_tiered",
     "AZURE_NC96", "AWS_P3", "IN_HOUSE", "VALIDATION_PROFILES",
     "EVAL_PROFILES", "DATASETS", "IMAGENET_1K", "IMAGENET_22K",
     "OPENIMAGES", "GB", "MB", "KB", "Gbit",

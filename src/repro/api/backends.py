@@ -61,6 +61,7 @@ class OdsBackend(Protocol):
     def status_of(self, ids: np.ndarray) -> np.ndarray: ...
     def mark_cached(self, ids: np.ndarray, form: int) -> None: ...
     def mark_evicted(self, ids: np.ndarray) -> None: ...
+    def set_residency(self, levels: Optional[np.ndarray]) -> None: ...
     def admission_value(self, sample_id: int) -> int: ...
     def storage_pool(self) -> np.ndarray: ...
 
@@ -118,6 +119,9 @@ class NumpyOdsBackend:
     def mark_evicted(self, ids):
         self.state.mark_evicted(np.asarray(ids))
 
+    def set_residency(self, levels):
+        self.state.set_residency(levels)
+
     def admission_value(self, sample_id):
         return self.state.admission_value(sample_id)
 
@@ -168,6 +172,7 @@ class JaxOdsBackend:
         self.served: Dict[int, int] = {}
         self.epoch: Dict[int, int] = {}
         self._key = jax.random.key(seed)
+        self._residency: Optional[np.ndarray] = None
         self._hits = 0
         self._misses = 0
         self._substitutions = 0
@@ -206,8 +211,15 @@ class JaxOdsBackend:
             seen=jnp.asarray(pre_seen),
             served=jnp.asarray(self.served[job_id], jnp.int32))
         self._key, sub = self._jax.random.split(self._key)
-        state, batch, evict_mask = self._ods_jax.substitute_jit(
-            state, jnp.asarray(requested), sub, thr)
+        if self._residency is not None:
+            # two-level cache: the residency-ranked kernel (DRAM-unseen
+            # candidates outrank disk-unseen ones outrank storage)
+            state, batch, evict_mask = self._ods_jax.substitute_tiered_jit(
+                state, jnp.asarray(requested), sub, thr,
+                jnp.asarray(self._residency))
+        else:
+            state, batch, evict_mask = self._ods_jax.substitute_jit(
+                state, jnp.asarray(requested), sub, thr)
         batch = np.asarray(batch)
         cached = pre_status[batch] != IN_STORAGE
         self._hits += int(cached.sum())
@@ -251,6 +263,9 @@ class JaxOdsBackend:
         ids = np.asarray(ids)
         self.status[ids] = IN_STORAGE
         self.refcount[ids] = 0
+
+    def set_residency(self, levels):
+        self._residency = levels
 
     def admission_value(self, sample_id):
         return self.n_jobs - int(sum(bits[sample_id]

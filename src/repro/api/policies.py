@@ -115,11 +115,11 @@ class NaiveSampler:
 # admission implementations
 class _CapacityGate:
     def fits(self, part: CachePartition, nbytes: int) -> bool:
-        if part.capacity < nbytes or part.capacity == 0:
-            return False
         # only "lru" partitions make room inside put(); "none" and
-        # "refcount" reject when full, so the entry must fit now
-        return part.policy == "lru" or part.free_bytes >= nbytes
+        # "refcount" reject when full, so the entry must fit now — in
+        # the DRAM tier or, when the partition has a spill chain, in
+        # the disk tier it would overflow to (CachePartition.admits)
+        return part.admits(nbytes)
 
 
 class UnseenOnlyAdmission(_CapacityGate):

@@ -46,8 +46,9 @@ from repro.cache.store import FORMS, TieredCache
 from repro.core import mdp
 from repro.core.ods import (AUGMENTED, DECODED, ENCODED, IN_STORAGE,
                             EpochSampler)
-from repro.core.perf_model import (AZURE_NC96, DatasetProfile,
-                                   HardwareProfile, JobProfile, calibrate)
+from repro.core.perf_model import (AZURE_NC96, DEFAULT_DISK_BW,
+                                   DatasetProfile, HardwareProfile,
+                                   JobProfile, calibrate)
 
 __all__ = ["SenecaConfig", "SenecaService", "SenecaServer", "Session",
            "SessionClosed", "RepartitionController", "FORM_CODE",
@@ -83,6 +84,15 @@ class SenecaConfig:
     sampler: Optional[str] = None      # None -> "ods" / "naive" per use_ods
     admission: Optional[str] = None    # None -> "unseen-only" / "capacity"
     eviction: Optional[str] = None     # None -> "refcount"
+    # SSD spill tier: a directory + byte budget turn every partition
+    # into a DRAM→disk chain (evictions demote, disk hits promote, the
+    # MDP partitions form×tier).  Default off = single-tier behavior,
+    # byte-identical to the pre-spill engine.
+    spill_dir: Optional[str] = None
+    spill_bytes: int = 0
+    # manual disk split (y_e, y_d, y_a); None -> form×tier MDP (or the
+    # DRAM split when that is manual too)
+    spill_split: Optional[Tuple[float, float, float]] = None
     # live repartitioning (RepartitionController):
     #   "static"    — solve the MDP once at construction (seed behavior)
     #   "on-change" — re-solve when sessions open/close
@@ -178,6 +188,19 @@ class RepartitionController:
         p = self.service.partition
         return (p.x_e, p.x_d, p.x_a)
 
+    def _live_disk_split(self):
+        p = self.service.disk_partition
+        return (p.x_e, p.x_d, p.x_a) if p is not None else None
+
+    def _tiered(self) -> bool:
+        return self.service.disk_partition is not None
+
+    def _predict_live(self, solver, hw) -> float:
+        if self._tiered():
+            return solver.predict_tiered(hw, self._live_split(),
+                                         self._live_disk_split())
+        return solver.predict(hw, self._live_split())
+
     # -- triggers ------------------------------------------------------
     def on_sessions_changed(self) -> bool:
         """Session open/close: unconditional re-solve (apply still gated)."""
@@ -197,13 +220,13 @@ class RepartitionController:
             self._last_tick = now
             hw = self._calibrated()
             solver = self._get_solver()
-            pred_live = solver.predict(hw, self._live_split())
+            pred_live = self._predict_live(solver, hw)
             if self._baseline is None or not np.isfinite(self._baseline):
                 # manual-split servers carry throughput=NaN; anchor the
                 # drift reference on the uncalibrated model's view
                 base = self.service.partition.throughput
                 self._baseline = base if np.isfinite(base) else \
-                    solver.predict(self.service.hardware, self._live_split())
+                    self._predict_live(solver, self.service.hardware)
             drift = abs(pred_live - self._baseline) / max(self._baseline,
                                                           1e-12)
             if drift <= self.service.cfg.repartition_drift:
@@ -216,21 +239,35 @@ class RepartitionController:
         solver = self._get_solver()
         live = self._live_split()
         if pred_live is None:
-            pred_live = solver.predict(hw, live)
-        best = solver.solve(hw)
+            pred_live = self._predict_live(solver, hw)
+        best_disk = None
+        if self._tiered():
+            # form×tier re-solve: both levels move together, and the
+            # gain gate compares combined two-level predictions
+            tiered = solver.solve_tiered(hw)
+            best, best_disk = tiered.dram, tiered.disk
+            best_thr, to_label = tiered.throughput, tiered.label
+            changed = (live != (best.x_e, best.x_d, best.x_a)
+                       or self._live_disk_split()
+                       != (best_disk.x_e, best_disk.x_d, best_disk.x_a))
+            from_label = (f"{self.service.partition.label}|"
+                          f"{self.service.disk_partition.label}")
+        else:
+            best = solver.solve(hw)
+            best_thr, to_label = best.throughput, best.label
+            changed = (best.x_e, best.x_d, best.x_a) != live
+            from_label = self.service.partition.label
         self.resolves += 1
-        gain = (best.throughput - pred_live) / max(pred_live, 1e-12)
-        new_split = (best.x_e, best.x_d, best.x_a)
-        apply = (new_split != live
-                 and gain > self.service.cfg.repartition_gain)
+        gain = (best_thr - pred_live) / max(pred_live, 1e-12)
+        apply = changed and gain > self.service.cfg.repartition_gain
         event = {"trigger": trigger, "profile": hw.name,
-                 "from": self.service.partition.label, "to": best.label,
+                 "from": from_label, "to": to_label,
                  "predicted_gain": round(float(gain), 4),
                  "applied": bool(apply)}
         if apply:
-            event["demoted"] = self.service.apply_partition(best)
+            event["demoted"] = self.service.apply_partition(best, best_disk)
             self.applied += 1
-            self._baseline = best.throughput
+            self._baseline = best_thr
             self._last_applied = event
         else:
             self.skipped += 1
@@ -270,8 +307,29 @@ class SenecaService:
         if self.hardware.s_cache != cfg.cache_bytes:
             self.hardware = replace(self.hardware,
                                     s_cache=float(cfg.cache_bytes))
+        self.has_spill = bool(cfg.spill_dir) and cfg.spill_bytes > 0
+        if self.has_spill:
+            hw_over = {"s_disk": float(cfg.spill_bytes)}
+            if self.hardware.b_disk <= 0:
+                # local-SSD read-bandwidth prior until telemetry
+                # calibrates the real rate (CALIBRATABLE includes b_disk)
+                hw_over["b_disk"] = DEFAULT_DISK_BW
+            self.hardware = replace(self.hardware, **hw_over)
+        self.disk_partition: Optional[mdp.Partition] = None
         if cfg.split is not None:
             self.partition = mdp.Partition(*cfg.split, throughput=float("nan"))
+            if self.has_spill:
+                self.disk_partition = mdp.Partition(
+                    *(cfg.spill_split or cfg.split),
+                    throughput=float("nan"))
+        elif self.has_spill:
+            tiered = mdp.optimize_tiered(self.hardware, cfg.dataset,
+                                         cfg.job, cfg.partition_step)
+            self.partition = tiered.dram
+            self.disk_partition = mdp.Partition(
+                *(cfg.spill_split or (tiered.disk.x_e, tiered.disk.x_d,
+                                      tiered.disk.x_a)),
+                throughput=tiered.throughput)
         else:
             self.partition = mdp.optimize(self.hardware, cfg.dataset,
                                           cfg.job, cfg.partition_step)
@@ -286,12 +344,18 @@ class SenecaService:
         self.cache = TieredCache(
             cfg.cache_bytes,
             (self.partition.x_e, self.partition.x_d, self.partition.x_a),
-            evict_policies=self.eviction.partition_policies())
+            evict_policies=self.eviction.partition_policies(),
+            spill_bytes=cfg.spill_bytes if self.has_spill else 0,
+            spill_dir=cfg.spill_dir if self.has_spill else None,
+            spill_split=(self.disk_partition.x_e, self.disk_partition.x_d,
+                         self.disk_partition.x_a)
+            if self.disk_partition else None)
         self.backend = resolve_backend(backend or cfg.backend,
                                        cfg.dataset.n_total, seed=cfg.seed)
         self.augment = resolve_augment_backend(
             augment_backend or cfg.augment_backend)
         self.rng = np.random.default_rng(cfg.seed + 1)
+        self._residency_version = -1     # force the first push
         self._samplers: Dict[int, EpochSampler] = {}
         self._lock = threading.Lock()
         self._refill_pending: list = []
@@ -327,6 +391,21 @@ class SenecaService:
         which tier will serve it (0 = storage fetch).
         """
         with self._lock:
+            if self.has_spill:
+                # patch metadata for any keys the chains shed since the
+                # last batch (spill overflow / promotion backfill), then
+                # give the sampler the current tier levels so it can
+                # prefer DRAM hits over disk hits over storage misses.
+                # The O(N) residency rebuild is version-gated: skipped
+                # whenever no insert/evict/resize/promotion touched the
+                # cache since the last push
+                self._reconcile_evictions_locked()
+                version = self.cache.version
+                if version != self._residency_version:
+                    self.backend.set_residency(
+                        self.cache.residency_array(
+                            self.cfg.dataset.n_total))
+                    self._residency_version = version
             requested = self._samplers[job_id].next_request()
             thr = self.eviction.threshold(self.backend)
             batch, evicted = self.sampler.sample(
@@ -351,8 +430,10 @@ class SenecaService:
         # workers admit every produced form on the hot path).  The
         # unlocked capacity read is safe: under "static" repartitioning
         # capacities never change, and a concurrent resize() at worst
-        # costs this one admission — the next call re-reads.
-        if self.cache.parts[form].capacity == 0:
+        # costs this one admission — the next call re-reads.  With a
+        # spill chain the disk level counts: a zero-DRAM form can still
+        # cache on disk.
+        if self.cache.parts[form].total_capacity == 0:
             return False
         with self._lock:
             if not self.admission.wants(self.backend, sample_id, form):
@@ -368,11 +449,12 @@ class SenecaService:
                 # nesting as apply_partition's scan, so the two serialize).
                 if self.controller.active:
                     with self.cache.lock:
-                        ok = self.cache.parts[form].peek(sample_id) \
-                            is not None
+                        ok = sample_id in self.cache.parts[form]
                 if ok:
                     self.backend.mark_cached(np.asarray([sample_id]),
                                              FORM_CODE[form])
+        if self.has_spill and self.cache.has_pending_evicted():
+            self.reconcile_evictions()
         return ok
 
     def admission_votes(self, form: str, ids) -> np.ndarray:
@@ -400,7 +482,7 @@ class SenecaService:
         """
         entries = list(entries)
         ok = np.zeros(len(entries), bool)
-        if not entries or self.cache.parts[form].capacity == 0:
+        if not entries or self.cache.parts[form].total_capacity == 0:
             return ok
         with self._lock:
             wants = [self.admission.wants(self.backend, sid, form)
@@ -420,13 +502,14 @@ class SenecaService:
                 # this deferred mark (metadata->cache lock order)
                 with self.cache.lock:
                     live = [i for i in live
-                            if self.cache.parts[form].peek(entries[i][0])
-                            is not None]
+                            if entries[i][0] in self.cache.parts[form]]
             if live:
                 self.backend.mark_cached(
                     np.asarray([entries[i][0] for i in live]),
                     FORM_CODE[form])
         ok[live] = True
+        if self.has_spill and self.cache.has_pending_evicted():
+            self.reconcile_evictions()
         return ok
 
     def refill_candidates(self, k: int) -> np.ndarray:
@@ -452,44 +535,90 @@ class SenecaService:
     def lookup(self, sample_id: int):
         return self.cache.lookup(sample_id)
 
-    # ------------------------------------------------------------------
-    def apply_partition(self, partition: mdp.Partition) -> Dict[str, int]:
-        """Resize the live cache to ``partition`` and patch ODS metadata.
+    def lookup_tiered(self, sample_id: int):
+        """(form, value, tier) — tier is "dram" | "disk" | None, so the
+        pipeline can report per-tier serve bandwidths."""
+        return self.cache.lookup_tiered(sample_id)
 
-        Keys evicted by shrinking partitions are *demoted*: their status
-        falls back to the most-processed form still resident (peeked
-        stats-neutrally), or to IN_STORAGE when nothing remains.  The
-        residency scan + metadata patch run under the metadata lock
-        (cache lock nested inside, the same metadata->cache order
-        ``next_batch_ids`` uses): a concurrent ``admit`` marks its
-        status under this lock *after* its insert, so the scan either
-        sees the insert or is serialized before the re-mark — no stale
-        IN_STORAGE can overwrite a live admission.
+    # ------------------------------------------------------------------
+    def _remark_keys_locked(self, keys) -> Dict[str, int]:
+        """Re-derive ODS status for ``keys`` from actual chain residency
+        (most-processed form still holding a copy, or IN_STORAGE).
+        Caller holds the metadata lock; the scan takes the cache lock
+        nested inside (the service's standard metadata->cache order)."""
+        remarked: Dict[str, int] = {}
+        regrouped: Dict[Optional[str], list] = {}
+        with self.cache.lock:     # one pass, one acquisition
+            for k in keys:
+                for form in ("augmented", "decoded", "encoded"):
+                    if k in self.cache.parts[form]:
+                        break
+                else:
+                    form = None
+                regrouped.setdefault(form, []).append(k)
+        for form, ids in regrouped.items():
+            arr = np.asarray(ids, np.int64)
+            if form is None:
+                self.backend.mark_evicted(arr)
+            else:
+                self.backend.mark_cached(arr, FORM_CODE[form])
+            remarked[form or "storage"] = len(ids)
+        return remarked
+
+    def _reconcile_evictions_locked(self) -> Dict[str, int]:
+        keys = self.cache.take_evicted()
+        if not keys:
+            return {}
+        return self._remark_keys_locked(sorted(set(keys)))
+
+    def reconcile_evictions(self) -> Dict[str, int]:
+        """Patch ODS metadata for keys the tier chains evicted as a side
+        effect of serving (spill overflow making room, promotions
+        backfilling DRAM).  Runs automatically per batch and per admit;
+        public for tests and direct-engine users."""
+        if not self.has_spill:
+            return {}
+        with self._lock:
+            return self._reconcile_evictions_locked()
+
+    def apply_partition(self, partition: mdp.Partition,
+                        disk_partition: Optional[mdp.Partition] = None
+                        ) -> Dict[str, int]:
+        """Resize the live cache to ``partition`` (and, with a spill
+        tier, its disk level to ``disk_partition``) and patch ODS
+        metadata.
+
+        Keys evicted by shrinking partitions are *demoted*: DRAM
+        shrink evictions spill to disk where one exists, and each
+        key's status falls back to the most-processed form still
+        resident anywhere in its chain, or to IN_STORAGE when nothing
+        remains.  The residency scan + metadata patch run under the
+        metadata lock (cache lock nested inside, the same
+        metadata->cache order ``next_batch_ids`` uses): a concurrent
+        ``admit`` marks its status under this lock *after* its insert,
+        so the scan either sees the insert or is serialized before the
+        re-mark — no stale IN_STORAGE can overwrite a live admission.
         """
+        spill_split = None
+        if disk_partition is not None and self.has_spill:
+            spill_split = (disk_partition.x_e, disk_partition.x_d,
+                           disk_partition.x_a)
+        elif self.has_spill and self.disk_partition is not None:
+            spill_split = (self.disk_partition.x_e,
+                           self.disk_partition.x_d,
+                           self.disk_partition.x_a)
         evicted = self.cache.resize(
-            (partition.x_e, partition.x_d, partition.x_a))
+            (partition.x_e, partition.x_d, partition.x_a),
+            spill_split=spill_split)
         self.partition = partition
-        demoted: Dict[str, int] = {}
-        if evicted:
-            keys = sorted(set().union(*evicted.values()))
-            with self._lock:
-                regrouped: Dict[Optional[str], list] = {}
-                with self.cache.lock:     # one pass, one acquisition
-                    for k in keys:
-                        for form in ("augmented", "decoded", "encoded"):
-                            if self.cache.parts[form].peek(k) is not None:
-                                break
-                        else:
-                            form = None
-                        regrouped.setdefault(form, []).append(k)
-                for form, ids in regrouped.items():
-                    arr = np.asarray(ids, np.int64)
-                    if form is None:
-                        self.backend.mark_evicted(arr)
-                    else:
-                        self.backend.mark_cached(arr, FORM_CODE[form])
-                    demoted[form or "storage"] = len(ids)
-        return demoted
+        if disk_partition is not None and self.has_spill:
+            self.disk_partition = disk_partition
+        keys = set().union(*evicted.values()) if evicted else set()
+        keys.update(self.cache.take_evicted())
+        if not keys:
+            return {}
+        with self._lock:
+            return self._remark_keys_locked(sorted(keys))
 
     def maybe_repartition(self) -> bool:
         """Adaptive-mode tick: cheap no-op unless telemetry-calibrated
@@ -498,17 +627,32 @@ class SenecaService:
         return self.controller.tick()
 
     def tier_capacity(self, form: str) -> int:
-        return self.cache.parts[form].capacity
+        """Whole-chain capacity for ``form`` (DRAM + spill): the gate
+        pipelines use to decide whether producing/refilling a form can
+        possibly land anywhere — must match ``admit``'s own
+        total_capacity fast path, or a disk-only form never refills."""
+        return self.cache.parts[form].total_capacity
 
     def tier_free_bytes(self, form: str) -> int:
+        """Whole-chain free bytes for ``form`` (refill top-up sizing)."""
         with self.cache.lock:
-            return self.cache.parts[form].free_bytes
+            part = self.cache.parts[form]
+            free = part.free_bytes
+            if part.spill is not None:
+                free += part.spill.free_bytes
+            return free
 
     # ------------------------------------------------------------------
+    def close(self) -> None:
+        """Tear down the engine's storage: drops every spill-tier file
+        (idempotent; serving after close() re-creates nothing)."""
+        self.cache.close()
+
     def stats(self) -> Dict[str, float]:
         tiers = np.bincount(
             self.cache.status_array(self.cfg.dataset.n_total), minlength=4)
-        return {
+        out = self._spill_stats()
+        out.update({
             "partition": self.partition.label,
             "predicted_throughput": self.partition.throughput,
             "backend": self.backend.name,
@@ -528,6 +672,24 @@ class SenecaService:
             "metadata_bytes": self.backend.metadata_bytes(),
             "repartitions": self.controller.summary(),
             "telemetry": self.telemetry.as_dict(),
+        })
+        return out
+
+    def _spill_stats(self) -> Dict[str, object]:
+        """Additive spill-tier keys (empty dict without a spill dir so
+        single-tier stats() payloads stay byte-identical)."""
+        if not self.has_spill:
+            return {}
+        res = self.cache.residency_array(self.cfg.dataset.n_total)
+        counts = np.bincount(res, minlength=3)
+        return {
+            "disk_partition": self.disk_partition.label
+            if self.disk_partition else None,
+            "disk_bytes_used": self.cache.disk_bytes_used(),
+            "residency_counts": {"storage": int(counts[0]),
+                                 "disk": int(counts[1]),
+                                 "dram": int(counts[2])},
+            "spill": self.cache.spill_stats(),
         }
 
 
@@ -580,6 +742,9 @@ class Session:
 
     def lookup(self, sample_id: int):
         return self.service.lookup(sample_id)
+
+    def lookup_tiered(self, sample_id: int):
+        return self.service.lookup_tiered(sample_id)
 
     def stats(self) -> Dict[str, float]:
         out = self.service.stats()
@@ -705,6 +870,8 @@ class SenecaServer:
             live = list(self._sessions.values())
         for sess in live:
             sess.close()
+        # last: drop the spill tier's files (no-leaked-files contract)
+        self.service.close()
 
     # ------------------------------------------------------------------
     def __enter__(self) -> "SenecaServer":

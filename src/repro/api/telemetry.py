@@ -52,7 +52,7 @@ from dataclasses import dataclass, field
 from typing import Dict, Optional
 
 STAGES = ("fetch_storage", "fetch_cache", "decode", "augment", "collate")
-CHANNELS = ("storage", "cache")
+CHANNELS = ("storage", "cache", "disk")
 
 
 class Ewma:
@@ -93,7 +93,8 @@ class TelemetrySnapshot:
     t_da: Optional[float] = None                # samples/s, decode+augment
     t_a: Optional[float] = None                 # samples/s, augment-only
     b_storage: Optional[float] = None           # bytes/s
-    b_cache: Optional[float] = None             # bytes/s
+    b_cache: Optional[float] = None             # bytes/s (DRAM hits)
+    b_disk: Optional[float] = None              # bytes/s (spill-tier hits)
     counts: Dict[str, int] = field(default_factory=dict)  # per calibration field
 
     @property
@@ -234,13 +235,15 @@ class TelemetryAggregator:
             "t_a": lat_n["augment"],
             "b_storage": bw_n["storage"],
             "b_cache": bw_n["cache"],
+            "b_disk": bw_n["disk"],
         }
         return TelemetrySnapshot(
             stage_latency=lat, stage_n=lat_n, bandwidth=bw,
             bandwidth_n=bw_n, serve_counts=serves, concurrency=conc,
             queue_depth=q_depth, queue_occupancy=q_occ, errors=errors,
             t_da=t_da, t_a=t_a,
-            b_storage=bw["storage"], b_cache=bw["cache"], counts=counts)
+            b_storage=bw["storage"], b_cache=bw["cache"],
+            b_disk=bw["disk"], counts=counts)
 
     def as_dict(self) -> Dict[str, object]:
         """JSON-friendly summary for ``stats()`` surfaces."""
@@ -258,4 +261,5 @@ class TelemetryAggregator:
             "errors": dict(snap.errors),
             "t_da": snap.t_da, "t_a": snap.t_a,
             "b_storage": snap.b_storage, "b_cache": snap.b_cache,
+            "b_disk": snap.b_disk,
         }

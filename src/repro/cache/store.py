@@ -1,158 +1,347 @@
-"""Three-form in-memory cache (the Redis analogue, DESIGN.md §2).
+"""Three-form cache with pluggable storage tiers (the Redis analogue,
+DESIGN.md §2, plus the SSD spill production systems bolt on).
 
 Byte-accounted partitions for encoded / decoded / augmented samples with
-pluggable eviction.  Thread-safe: the real data pipeline hits this store
-from fetch worker threads while the trainer consumes batches.
+pluggable eviction.  Each partition is a *tier chain*
+(:mod:`repro.cache.tiers`): a :class:`DramTier` (the original dict
+store) optionally backed by a :class:`DiskTier` spill area.  Eviction
+from DRAM demotes entries down the chain instead of dropping them, a
+disk hit promotes the entry back up, and inserts that DRAM rejects
+overflow onto disk — so a DRAM-constrained cache degrades to disk
+bandwidth instead of storage bandwidth.
+
+Thread-safe: the real data pipeline hits this store from fetch worker
+threads while the trainer consumes batches.  All chain behavior runs
+under the single cache lock; tiers themselves are lock-free.  Known
+limitation: spill-tier file IO (codec reads on disk hits, writes on
+demotion) therefore executes inside the cache lock's critical section —
+correct, but it serializes concurrent serving at disk latency while a
+transfer is in flight.  Moving spill IO out from under the lock needs
+per-entry in-flight state (promote/demote intents) and is deliberately
+left to a follow-up; benchmarks at the current scale are dominated by
+the storage token bucket, not this section.
 """
 from __future__ import annotations
 
 import threading
-from collections import OrderedDict
-from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.cache.tiers import (MISS, DiskTier, DramTier, PartitionStats,
+                               Tier)
+
+__all__ = ["FORMS", "PartitionStats", "CachePartition", "TieredCache",
+           "Tier", "DramTier", "DiskTier"]
+
 FORMS = ("encoded", "decoded", "augmented")
 
-
-@dataclass
-class PartitionStats:
-    hits: int = 0
-    misses: int = 0
-    inserts: int = 0
-    evictions: int = 0
-    bytes_used: int = 0
+#: residency levels reported by :meth:`TieredCache.residency_array`
+RESIDENCY_NONE, RESIDENCY_DISK, RESIDENCY_DRAM = 0, 1, 2
 
 
 class CachePartition:
-    """One form's partition: id -> value with byte accounting + LRU order."""
+    """One form's partition: a DRAM tier chained to an optional disk
+    spill tier, with byte accounting + LRU order per tier.
 
-    def __init__(self, capacity_bytes: int, evict_policy: str = "none"):
-        assert evict_policy in ("none", "lru", "refcount")
-        self.capacity = int(capacity_bytes)
-        self.policy = evict_policy
-        self._data: "OrderedDict[int, Any]" = OrderedDict()
-        self._sizes: Dict[int, int] = {}
-        self.stats = PartitionStats()
+    The public surface (and the DRAM-only behavior) is identical to the
+    pre-chain ``CachePartition``; ``stats``/``_data``/``_sizes`` keep
+    addressing the DRAM tier so existing accounting assertions hold
+    unchanged.  Keys evicted *out of the chain entirely* (spill
+    overflow, promotion backfill) are recorded in ``pending_evicted``
+    for the service to reconcile ODS metadata with.
+    """
 
-    def __contains__(self, key: int) -> bool:
-        return key in self._data
+    def __init__(self, capacity_bytes: int, evict_policy: str = "none",
+                 spill: Optional[DiskTier] = None):
+        self.dram = DramTier(capacity_bytes, evict_policy)
+        self.spill = spill
+        # keys no longer resident anywhere in the chain, awaiting a
+        # metadata patch (drained via TieredCache.take_evicted)
+        self.pending_evicted: List[int] = []
+        # chain traffic counters (how the spill is actually behaving)
+        self.demotions = 0
+        self.promotions = 0
 
-    def __len__(self) -> int:
-        return len(self._data)
+    # -- compat surface over the DRAM tier -----------------------------
+    @property
+    def capacity(self) -> int:
+        return self.dram.capacity
 
-    def keys(self) -> List[int]:
-        return list(self._data.keys())
+    @capacity.setter
+    def capacity(self, value: int) -> None:
+        self.dram.capacity = int(value)
 
-    def get(self, key: int):
-        v = self._data.get(key)
-        if v is None:
-            self.stats.misses += 1
-            return None
-        self.stats.hits += 1
-        if self.policy == "lru":
-            self._data.move_to_end(key)
-        return v
+    @property
+    def policy(self) -> str:
+        return self.dram.policy
 
-    def peek(self, key: int):
-        """Stats-neutral read: no hit/miss counting, no LRU promotion.
-        For controller/refill scans that inspect residency without being
-        part of the serving path."""
-        return self._data.get(key)
+    @property
+    def stats(self) -> PartitionStats:
+        return self.dram.stats
 
-    def put(self, key: int, value: Any, nbytes: int) -> List[int]:
-        """Insert; returns evicted keys (never evicts under 'none' — the
-        insert is rejected instead, MINIO-style).  Re-inserting an existing
-        key replaces it (the old entry is dropped first, so a rejected
-        oversized replacement leaves the key absent, not half-accounted)."""
-        evicted: List[int] = []
-        if key in self._data:
-            del self._data[key]
-            self.stats.bytes_used -= self._sizes.pop(key)
-        while self.stats.bytes_used + nbytes > self.capacity:
-            if self.policy == "lru" and self._data:
-                k, _ = self._data.popitem(last=False)
-                self.stats.bytes_used -= self._sizes.pop(k)
-                self.stats.evictions += 1
-                evicted.append(k)
-            else:
-                return evicted           # rejected (no-evict policy)
-        self._data[key] = value
-        self._sizes[key] = nbytes
-        self.stats.bytes_used += nbytes
-        self.stats.inserts += 1
-        return evicted
+    @property
+    def _data(self):
+        return self.dram._data
 
-    def set_capacity(self, capacity_bytes: int) -> List[int]:
-        """Resize the partition live; returns the keys evicted to fit.
-
-        Shrinking below current usage evicts through the partition's own
-        policy order — LRU order for "lru", insertion (FIFO) order for
-        "none"/"refcount" — rather than dropping the store.  Byte
-        accounting stays exact (asserted by tests/test_repartition.py).
-        """
-        self.capacity = int(capacity_bytes)
-        evicted: List[int] = []
-        while self.stats.bytes_used > self.capacity and self._data:
-            k, _ = self._data.popitem(last=False)
-            self.stats.bytes_used -= self._sizes.pop(k)
-            self.stats.evictions += 1
-            evicted.append(k)
-        return evicted
-
-    def remove(self, key: int) -> bool:
-        if key in self._data:
-            del self._data[key]
-            self.stats.bytes_used -= self._sizes.pop(key)
-            self.stats.evictions += 1
-            return True
-        return False
+    @property
+    def _sizes(self):
+        return self.dram._sizes
 
     @property
     def free_bytes(self) -> int:
-        return self.capacity - self.stats.bytes_used
+        return self.dram.free_bytes
+
+    @property
+    def total_capacity(self) -> int:
+        return self.dram.capacity + (self.spill.capacity if self.spill
+                                     else 0)
+
+    # -- chain-aggregate stats -----------------------------------------
+    @property
+    def total_hits(self) -> int:
+        return self.dram.stats.hits + (self.spill.stats.hits
+                                       if self.spill else 0)
+
+    @property
+    def total_misses(self) -> int:
+        return self.dram.stats.misses + (self.spill.stats.misses
+                                         if self.spill else 0)
+
+    # ------------------------------------------------------------------
+    def __contains__(self, key: int) -> bool:
+        return key in self.dram or (self.spill is not None
+                                    and key in self.spill)
+
+    def __len__(self) -> int:
+        return len(self.dram) + (len(self.spill) if self.spill else 0)
+
+    def keys(self) -> List[int]:
+        ks = self.dram.keys()
+        if self.spill is not None:
+            ks += self.spill.keys()
+        return ks
+
+    def tier_of(self, key: int) -> Optional[str]:
+        if key in self.dram:
+            return "dram"
+        if self.spill is not None and key in self.spill:
+            return "disk"
+        return None
+
+    # ------------------------------------------------------------------
+    def get(self, key: int, default: Any = None) -> Any:
+        return self.get_tiered(key, default)[0]
+
+    def get_tiered(self, key: int, default: Any = None
+                   ) -> Tuple[Any, Optional[str]]:
+        """Chain lookup counting exactly one hit or miss; disk hits
+        promote back to DRAM when it has (or can make) room.  Returns
+        ``(value, tier)`` with tier in ("dram", "disk", None)."""
+        v = self.dram.peek(key, MISS)
+        if v is not MISS:
+            return self.dram.get(key, default), "dram"
+        if self.spill is not None and key in self.spill:
+            v = self.spill.get(key, MISS)   # counts the disk hit
+            if v is not MISS:
+                self._promote(key, v)
+                return v, "disk"
+            return default, None            # file vanished: disk miss
+        self.dram.stats.misses += 1
+        return default, None
+
+    def peek(self, key: int, default: Any = None) -> Any:
+        """Stats-neutral read: no hit/miss counting, no LRU promotion.
+        For controller/refill scans that inspect residency without being
+        part of the serving path."""
+        v = self.dram.peek(key, MISS)
+        if v is not MISS:
+            return v
+        if self.spill is not None:
+            return self.spill.peek(key, default)
+        return default
+
+    def _promote(self, key: int, value: Any) -> None:
+        """Move a disk hit up to DRAM (LRU partitions make room by
+        demoting their coldest entries back down; no-evict partitions
+        promote only into free space — otherwise the entry stays on
+        disk and keeps serving from there)."""
+        nbytes = self.spill.size_of(key)
+        if nbytes is None or not self.dram.admits(nbytes):
+            return
+        demoted = self.dram.put(key, value, nbytes)
+        if key in self.dram:
+            self.spill.discard(key)
+            self.promotions += 1
+        self._demote(demoted)
+
+    def _demote(self, entries) -> None:
+        """Push DRAM-evicted entries down into the spill tier; entries
+        the spill cannot hold (and entries the spill evicts to make
+        room) leave the chain and are queued for metadata patching.
+        Without a spill tier nothing queues — chain-leavers are exactly
+        the caller-visible eviction lists the pre-chain code returned,
+        so no reconcile pass exists (or is needed) to drain them."""
+        if self.spill is None:
+            return
+        for k, v, nb in entries:
+            placed = False
+            if self.spill.admits(nb):
+                for ek, _ev, _enb in self.spill.put(k, v, nb):
+                    self.pending_evicted.append(ek)
+                placed = k in self.spill
+                if placed:
+                    self.demotions += 1
+            if not placed:
+                self.pending_evicted.append(k)
+
+    # ------------------------------------------------------------------
+    def admits(self, nbytes: int) -> bool:
+        """Could an insert of ``nbytes`` land anywhere in the chain?"""
+        if self.dram.admits(nbytes):
+            return True
+        return self.spill is not None and self.spill.admits(nbytes)
+
+    def put(self, key: int, value: Any, nbytes: int) -> List[int]:
+        """Insert; returns the keys evicted *out of the chain* (never
+        evicts under 'none' — the insert overflows to the spill tier
+        when one exists, or is rejected, MINIO-style).  Re-inserting an
+        existing key replaces it."""
+        demoted = self.dram.put(key, value, nbytes)
+        evicted: List[int] = []
+        if key in self.dram:
+            # single-residence invariant: a fresh DRAM copy supersedes
+            # any stale spill copy from an earlier demotion
+            if self.spill is not None:
+                self.spill.discard(key)
+        elif self.spill is not None:
+            # DRAM rejected (no-evict policy full / oversized): spill
+            # admission keeps the entry cached at disk speed
+            for ek, _ev, _enb in self.spill.put(key, value, nbytes):
+                self.pending_evicted.append(ek)
+                evicted.append(ek)
+        self._demote(demoted)
+        evicted.extend(k for k, _v, _nb in demoted
+                       if k not in self)
+        return evicted
+
+    def set_capacity(self, capacity_bytes: int) -> List[int]:
+        """Resize the DRAM level live; returns the keys evicted out of
+        the chain.  Shrinking demotes through the partition's own policy
+        order — LRU order for "lru", insertion (FIFO) order for
+        "none"/"refcount" — into the spill tier when one exists, rather
+        than dropping.  Byte accounting stays exact per tier (asserted
+        by tests/test_cache_properties.py)."""
+        demoted = self.dram.set_capacity(capacity_bytes)
+        self._demote(demoted)
+        return [k for k, _v, _nb in demoted if k not in self]
+
+    def set_spill_capacity(self, capacity_bytes: int) -> List[int]:
+        """Resize the disk level live; spill shrink evictions are
+        terminal."""
+        if self.spill is None:
+            return []
+        evicted = [k for k, _v, _nb in
+                   self.spill.set_capacity(capacity_bytes)]
+        self.pending_evicted.extend(evicted)
+        return evicted
+
+    def remove(self, key: int) -> bool:
+        """Drop ``key`` from every tier (refcount eviction consumes the
+        sample entirely — a spilled copy must not resurrect it)."""
+        dropped = self.dram.remove(key)
+        if self.spill is not None and self.spill.remove(key):
+            dropped = True
+        return dropped
+
+    def take_pending_evicted(self) -> List[int]:
+        out = self.pending_evicted
+        self.pending_evicted = []
+        return out
 
 
 class TieredCache:
-    """The Seneca cache: three partitions sized by an MDP split."""
+    """The Seneca cache: three partitions sized by an MDP split, each an
+    optional DRAM→disk tier chain sized by the form×tier MDP."""
 
     def __init__(self, capacity_bytes: int,
                  split: Tuple[float, float, float],
-                 evict_policies: Optional[Dict[str, str]] = None):
+                 evict_policies: Optional[Dict[str, str]] = None,
+                 spill_bytes: int = 0,
+                 spill_dir: Optional[str] = None,
+                 spill_split: Optional[Tuple[float, float, float]] = None):
         x_e, x_d, x_a = split
         assert abs(x_e + x_d + x_a - 1.0) < 1e-6, split
         pol = evict_policies or {"encoded": "none", "decoded": "none",
                                  "augmented": "refcount"}
         self.capacity = capacity_bytes
         self.split = split
+        self.spill_bytes = int(spill_bytes) if spill_dir else 0
+        self.spill_dir = spill_dir if self.spill_bytes > 0 else None
+        if self.spill_dir is not None:
+            self.spill_split = tuple(spill_split) if spill_split \
+                else tuple(split)
+            y_e, y_d, y_a = self.spill_split
+            assert abs(y_e + y_d + y_a - 1.0) < 1e-6, self.spill_split
+            spills = {form: DiskTier(int(y * self.spill_bytes),
+                                     self.spill_dir, form)
+                      for form, y in zip(FORMS, (y_e, y_d, y_a))}
+        else:
+            self.spill_split = None
+            spills = {form: None for form in FORMS}
         self.parts: Dict[str, CachePartition] = {
             "encoded": CachePartition(int(x_e * capacity_bytes),
-                                      pol["encoded"]),
+                                      pol["encoded"], spills["encoded"]),
             "decoded": CachePartition(int(x_d * capacity_bytes),
-                                      pol["decoded"]),
+                                      pol["decoded"], spills["decoded"]),
             "augmented": CachePartition(int(x_a * capacity_bytes),
-                                        pol["augmented"]),
+                                        pol["augmented"],
+                                        spills["augmented"]),
         }
         self.lock = threading.Lock()
         # misses counted at lookup granularity: a key absent from every
         # partition is ONE miss, not zero (the partitions are only probed
         # via __contains__) and not three
         self.lookup_misses = 0
+        # bumped on every mutation that can change residency (insert,
+        # evict, resize, disk-hit promotion) so the service can skip
+        # rebuilding the O(N) residency array when nothing moved
+        self.version = 0
+
+    @property
+    def has_spill(self) -> bool:
+        return self.spill_dir is not None
 
     def lookup(self, key: int) -> Tuple[Optional[str], Any]:
         """Most-processed form first (augmented > decoded > encoded)."""
+        form, value, _tier = self.lookup_tiered(key)
+        return form, value
+
+    def lookup_tiered(self, key: int
+                      ) -> Tuple[Optional[str], Any, Optional[str]]:
+        """Like :meth:`lookup` but also names the tier that answered
+        ("dram" | "disk" | None) so telemetry can track per-tier serve
+        bandwidths."""
         with self.lock:
             for form in ("augmented", "decoded", "encoded"):
                 part = self.parts[form]
                 if key in part:
-                    return form, part.get(key)
+                    promos = part.promotions
+                    value, tier = part.get_tiered(key, MISS)
+                    if value is not MISS:
+                        # only an actual promotion changes residency; a
+                        # disk hit that stays on disk must not defeat
+                        # the version-gated residency rebuild
+                        if part.promotions != promos:
+                            self.version += 1
+                        return form, value, tier
             self.lookup_misses += 1
-            return None, None
+            return None, None, None
 
     def insert(self, key: int, form: str, value: Any, nbytes: int) -> bool:
         """Insert; True when the key is resident afterwards."""
         with self.lock:
+            self.version += 1
             self.parts[form].put(key, value, nbytes)
             return key in self.parts[form]
 
@@ -165,6 +354,7 @@ class TieredCache:
             part = self.parts[form]
             if not policy.fits(part, nbytes):
                 return False
+            self.version += 1
             part.put(key, value, nbytes)
             return key in part
 
@@ -187,33 +377,66 @@ class TieredCache:
                 if not policy.fits(part, nbytes):
                     out.append(False)
                     continue
+                self.version += 1
                 part.put(key, value, nbytes)
                 out.append(key in part)
         return out
 
     def evict(self, key: int, form: str) -> bool:
         with self.lock:
+            self.version += 1
             return self.parts[form].remove(key)
 
     def peek(self, key: int) -> Tuple[Optional[str], Any]:
         """Stats-neutral lookup (same tier order), for controller/refill
-        scans — ``lookup`` would inflate miss counts."""
+        scans — ``lookup`` would inflate miss counts.  Loads spilled
+        payloads from disk; callers that only need the *form* should use
+        :meth:`form_of` (containment-only, no IO under the lock)."""
         with self.lock:
             for form in ("augmented", "decoded", "encoded"):
-                v = self.parts[form].peek(key)
-                if v is not None:
-                    return form, v
+                part = self.parts[form]
+                if key in part:
+                    return form, part.peek(key)
             return None, None
 
-    def resize(self, split: Tuple[float, float, float]
+    def form_of(self, key: int) -> Optional[str]:
+        """The form a lookup would serve (most-processed resident), by
+        containment only — no payload read, no stats, no promotion."""
+        with self.lock:
+            for form in ("augmented", "decoded", "encoded"):
+                if key in self.parts[form]:
+                    return form
+            return None
+
+    def take_evicted(self) -> List[int]:
+        """Drain the keys the chains evicted as a side effect (spill
+        overflow, promotion backfill) since the last drain — the service
+        patches ODS metadata with them (reconcile_evictions)."""
+        with self.lock:
+            out: List[int] = []
+            for part in self.parts.values():
+                out.extend(part.take_pending_evicted())
+            return out
+
+    def has_pending_evicted(self) -> bool:
+        with self.lock:
+            return any(part.pending_evicted
+                       for part in self.parts.values())
+
+    def resize(self, split: Tuple[float, float, float],
+               spill_split: Optional[Tuple[float, float, float]] = None
                ) -> Dict[str, List[int]]:
         """Re-partition the same total capacity live under the cache lock.
 
         Shrinking partitions evict (policy order) down to their new
         capacity; growing ones just gain headroom.  Shrinks are applied
         before grows so the instantaneous sum of partition capacities
-        never exceeds the total.  Returns ``{form: [evicted keys]}`` so
-        the caller can demote/patch ODS metadata.
+        never exceeds the total.  With a spill tier, DRAM shrink
+        evictions demote to disk, and ``spill_split`` (defaulting to
+        ``split``) resizes the disk level the same way — disk grows
+        first so demotion traffic lands in the enlarged tiers, disk
+        shrinks last.  Returns ``{form: [keys evicted out of the
+        chain]}`` so the caller can demote/patch ODS metadata.
         """
         x_e, x_d, x_a = split
         if abs(x_e + x_d + x_a - 1.0) >= 1e-6:
@@ -222,18 +445,47 @@ class TieredCache:
                    "decoded": int(x_d * self.capacity),
                    "augmented": int(x_a * self.capacity)}
         evicted: Dict[str, List[int]] = {}
+
+        def add(form: str, keys: List[int]) -> None:
+            if keys:
+                evicted.setdefault(form, []).extend(keys)
+
         with self.lock:
+            disk_targets = None
+            if self.has_spill:
+                ys = tuple(spill_split) if spill_split is not None \
+                    else (float(x_e), float(x_d), float(x_a))
+                if abs(sum(ys) - 1.0) >= 1e-6:
+                    raise ValueError(
+                        f"spill_split must sum to 1: {ys}")
+                disk_targets = {f: int(y * self.spill_bytes)
+                                for f, y in zip(FORMS, ys)}
+                # disk grows first: DRAM-shrink demotions flow into the
+                # enlarged spill tiers instead of being dropped
+                for form in FORMS:
+                    part = self.parts[form]
+                    if disk_targets[form] >= part.spill.capacity:
+                        add(form, part.set_spill_capacity(
+                            disk_targets[form]))
+                self.spill_split = tuple(float(y) for y in ys)
             order = sorted(FORMS,
                            key=lambda f: targets[f] - self.parts[f].capacity)
             for form in order:            # shrinks first, then grows
-                out = self.parts[form].set_capacity(targets[form])
-                if out:
-                    evicted[form] = out
+                add(form, self.parts[form].set_capacity(targets[form]))
+            if disk_targets is not None:  # disk shrinks last
+                for form in FORMS:
+                    part = self.parts[form]
+                    if disk_targets[form] < part.spill.capacity:
+                        add(form, part.set_spill_capacity(
+                            disk_targets[form]))
             self.split = (float(x_e), float(x_d), float(x_a))
+            self.version += 1
         return evicted
 
     def status_array(self, n: int) -> np.ndarray:
-        """uint8[N] of ODS status codes (0 storage / 1 enc / 2 dec / 3 aug)."""
+        """uint8[N] of ODS status codes (0 storage / 1 enc / 2 dec / 3
+        aug); disk-resident entries keep their form's code — residency
+        *level* is :meth:`residency_array`'s job."""
         out = np.zeros(n, np.uint8)
         with self.lock:
             for code, form in ((1, "encoded"), (2, "decoded"),
@@ -243,11 +495,63 @@ class TieredCache:
                     out[np.asarray(ks, int)] = code
         return out
 
+    def residency_array(self, n: int) -> np.ndarray:
+        """uint8[N] residency levels: 0 = storage only, 1 = disk,
+        2 = DRAM — of the form a lookup would actually serve (the
+        most-processed resident form), not the best tier over all
+        forms: a sample whose augmented copy spilled to disk serves at
+        disk latency even if its encoded copy sits in DRAM.  Feeds the
+        ODS substitution preference (DRAM hits beat disk hits beat
+        storage misses)."""
+        out = np.zeros(n, np.uint8)
+        with self.lock:
+            # lowest serving priority first; higher-priority forms
+            # overwrite, so each sample ends at its serving form's tier
+            # (within a form the tiers are disjoint — single residence)
+            for form in ("encoded", "decoded", "augmented"):
+                part = self.parts[form]
+                if part.spill is not None:
+                    ks = part.spill.keys()
+                    if ks:
+                        out[np.asarray(ks, int)] = RESIDENCY_DISK
+                ks = part.dram.keys()
+                if ks:
+                    out[np.asarray(ks, int)] = RESIDENCY_DRAM
+        return out
+
     def hit_rate(self) -> float:
-        h = sum(p.stats.hits for p in self.parts.values())
-        m = sum(p.stats.misses
+        h = sum(p.total_hits for p in self.parts.values())
+        m = sum(p.total_misses
                 for p in self.parts.values()) + self.lookup_misses
         return h / (h + m) if h + m else 0.0
 
     def bytes_used(self) -> int:
         return sum(p.stats.bytes_used for p in self.parts.values())
+
+    def disk_bytes_used(self) -> int:
+        return sum(p.spill.stats.bytes_used for p in self.parts.values()
+                   if p.spill is not None)
+
+    def spill_stats(self) -> Dict[str, Dict[str, int]]:
+        """Per-form chain traffic (JSON-friendly; empty without spill)."""
+        if not self.has_spill:
+            return {}
+        with self.lock:
+            return {form: {
+                "disk_bytes_used": part.spill.stats.bytes_used,
+                "disk_capacity": part.spill.capacity,
+                "disk_entries": len(part.spill),
+                "disk_hits": part.spill.stats.hits,
+                "demotions": part.demotions,
+                "promotions": part.promotions,
+                "io_errors": part.spill.io_errors,
+            } for form, part in self.parts.items()}
+
+    def close(self) -> None:
+        """Tear down the spill area: every entry file is unlinked and
+        the per-form directories removed (the no-leaked-files contract
+        asserted by the tiered-cache benchmark and CI)."""
+        with self.lock:
+            for part in self.parts.values():
+                if part.spill is not None:
+                    part.spill.clear()

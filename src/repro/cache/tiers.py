@@ -1,0 +1,336 @@
+"""Cache tiers: the storage engines under a form's partition.
+
+A :class:`~repro.cache.store.CachePartition` used to *be* an in-memory
+``OrderedDict``; it is now a chain of tiers sharing one protocol:
+
+* :class:`DramTier` — the original dict store, behavior-identical;
+* :class:`DiskTier` — a directory of per-entry files (one file per
+  cached sample, serialized by the form's
+  :mod:`~repro.cache.codecs` codec, ndarrays read back via
+  ``np.memmap`` zero-copy).
+
+Tiers are dumb byte-accounted stores; *chain* behavior (demote on
+eviction, promote on hit) lives in ``CachePartition``, and all locking
+stays with :class:`~repro.cache.store.TieredCache` — tier methods are
+only ever called under the cache lock.
+
+``put`` / ``set_capacity`` return the entries they evicted as
+``(key, value, nbytes)`` triples so a chain can demote them into the
+next tier; a terminal tier returns ``value=None`` (nothing consumes it).
+"""
+from __future__ import annotations
+
+import os
+from collections import OrderedDict
+from dataclasses import dataclass
+from typing import (Any, Dict, List, Optional, Protocol, Tuple,
+                    runtime_checkable)
+
+from repro.cache.codecs import codec_for
+
+#: sentinel distinguishing "absent" from a legitimately stored falsy /
+#: ``None`` payload (an empty encoded sample must count as a hit)
+MISS = object()
+
+Evicted = List[Tuple[int, Any, int]]
+
+
+@dataclass
+class PartitionStats:
+    hits: int = 0
+    misses: int = 0
+    inserts: int = 0
+    evictions: int = 0
+    bytes_used: int = 0
+
+
+@runtime_checkable
+class Tier(Protocol):
+    """One byte-accounted key/value level of a partition chain."""
+
+    capacity: int
+    policy: str
+    stats: PartitionStats
+
+    def __contains__(self, key: int) -> bool: ...
+    def __len__(self) -> int: ...
+    def keys(self) -> List[int]: ...
+    def get(self, key: int, default: Any = None) -> Any: ...
+    def peek(self, key: int, default: Any = None) -> Any: ...
+    def put(self, key: int, value: Any, nbytes: int) -> Evicted: ...
+    def set_capacity(self, capacity_bytes: int) -> Evicted: ...
+    def remove(self, key: int) -> bool: ...
+    def admits(self, nbytes: int) -> bool: ...
+    @property
+    def free_bytes(self) -> int: ...
+
+
+class DramTier:
+    """In-memory dict store with byte accounting + LRU order (the
+    original ``CachePartition`` engine, extracted verbatim)."""
+
+    def __init__(self, capacity_bytes: int, evict_policy: str = "none"):
+        assert evict_policy in ("none", "lru", "refcount")
+        self.capacity = int(capacity_bytes)
+        self.policy = evict_policy
+        self._data: "OrderedDict[int, Any]" = OrderedDict()
+        self._sizes: Dict[int, int] = {}
+        self.stats = PartitionStats()
+
+    def __contains__(self, key: int) -> bool:
+        return key in self._data
+
+    def __len__(self) -> int:
+        return len(self._data)
+
+    def keys(self) -> List[int]:
+        return list(self._data.keys())
+
+    def get(self, key: int, default: Any = None) -> Any:
+        v = self._data.get(key, MISS)
+        if v is MISS:
+            self.stats.misses += 1
+            return default
+        self.stats.hits += 1
+        if self.policy == "lru":
+            self._data.move_to_end(key)
+        return v
+
+    def peek(self, key: int, default: Any = None) -> Any:
+        """Stats-neutral read: no hit/miss counting, no LRU promotion."""
+        v = self._data.get(key, MISS)
+        return default if v is MISS else v
+
+    def admits(self, nbytes: int) -> bool:
+        """Could ``put`` accept an entry of ``nbytes`` right now?  Only
+        "lru" makes room inside put(); "none"/"refcount" reject when
+        full, so the entry must fit immediately."""
+        if self.capacity == 0 or nbytes > self.capacity:
+            return False
+        return self.policy == "lru" or self.free_bytes >= nbytes
+
+    def put(self, key: int, value: Any, nbytes: int) -> Evicted:
+        """Insert; returns evicted entries (never evicts under 'none' —
+        the insert is rejected instead, MINIO-style).  Re-inserting an
+        existing key replaces it (the old entry is dropped first, so a
+        rejected oversized replacement leaves the key absent, not
+        half-accounted)."""
+        evicted: Evicted = []
+        if key in self._data:
+            del self._data[key]
+            self.stats.bytes_used -= self._sizes.pop(key)
+        while self.stats.bytes_used + nbytes > self.capacity:
+            if self.policy == "lru" and self._data:
+                k, v = self._data.popitem(last=False)
+                nb = self._sizes.pop(k)
+                self.stats.bytes_used -= nb
+                self.stats.evictions += 1
+                evicted.append((k, v, nb))
+            else:
+                return evicted           # rejected (no-evict policy)
+        self._data[key] = value
+        self._sizes[key] = nbytes
+        self.stats.bytes_used += nbytes
+        self.stats.inserts += 1
+        return evicted
+
+    def set_capacity(self, capacity_bytes: int) -> Evicted:
+        """Resize live; returns the entries evicted to fit (policy order:
+        LRU order for "lru", insertion/FIFO order otherwise)."""
+        self.capacity = int(capacity_bytes)
+        evicted: Evicted = []
+        while self.stats.bytes_used > self.capacity and self._data:
+            k, v = self._data.popitem(last=False)
+            nb = self._sizes.pop(k)
+            self.stats.bytes_used -= nb
+            self.stats.evictions += 1
+            evicted.append((k, v, nb))
+        return evicted
+
+    def remove(self, key: int) -> bool:
+        if key in self._data:
+            del self._data[key]
+            self.stats.bytes_used -= self._sizes.pop(key)
+            self.stats.evictions += 1
+            return True
+        return False
+
+    def pop_entry(self, key: int):
+        """Stats-neutral removal returning ``(value, nbytes)`` or None —
+        the chain's demote/promote plumbing (a migration between tiers
+        is not an eviction)."""
+        if key not in self._data:
+            return None
+        v = self._data.pop(key)
+        nb = self._sizes.pop(key)
+        self.stats.bytes_used -= nb
+        return v, nb
+
+    @property
+    def free_bytes(self) -> int:
+        return self.capacity - self.stats.bytes_used
+
+
+class DiskTier:
+    """Spill tier: one file per entry under ``root/<form>/``.
+
+    Entries are serialized by the form's codec (encoded bytes pass
+    through; decoded/augmented ndarrays become raw contiguous buffers
+    read back via ``np.memmap``).  Accounting mirrors :class:`DramTier`
+    — the byte ledger tracks caller-declared entry sizes, and eviction
+    is LRU by default (a spill area wants recency, not MINIO
+    rejection).  Metadata (sizes, dtypes/shapes) stays in memory: the
+    tier is process-local scratch, not a persistent store.
+    """
+
+    def __init__(self, capacity_bytes: int, root: str, form: str,
+                 evict_policy: str = "lru"):
+        assert evict_policy in ("none", "lru")
+        self.capacity = int(capacity_bytes)
+        self.policy = evict_policy
+        self.form = form
+        self.dir = os.path.join(root, form)
+        os.makedirs(self.dir, exist_ok=True)
+        self.codec = codec_for(form)
+        # key -> (nbytes, codec meta); OrderedDict gives LRU order
+        self._index: "OrderedDict[int, Tuple[int, Any]]" = OrderedDict()
+        self.stats = PartitionStats()
+        self.io_errors = 0
+
+    # ------------------------------------------------------------------
+    def _path(self, key: int) -> str:
+        return os.path.join(self.dir, f"{key}.bin")
+
+    def __contains__(self, key: int) -> bool:
+        return key in self._index
+
+    def __len__(self) -> int:
+        return len(self._index)
+
+    def keys(self) -> List[int]:
+        return list(self._index.keys())
+
+    def admits(self, nbytes: int) -> bool:
+        if self.capacity == 0 or nbytes > self.capacity:
+            return False
+        return self.policy == "lru" or self.free_bytes >= nbytes
+
+    def get(self, key: int, default: Any = None) -> Any:
+        entry = self._index.get(key, MISS)
+        if entry is MISS:
+            self.stats.misses += 1
+            return default
+        nbytes, meta = entry
+        try:
+            value = self.codec.load(self._path(key), meta)
+        except OSError:
+            # the file vanished under us (external cleanup): drop the
+            # index entry rather than serving a phantom hit.  Counted in
+            # io_errors only — the chain's lookup counts the resulting
+            # miss at lookup granularity, so counting here would double
+            self.io_errors += 1
+            self._drop(key)
+            return default
+        self.stats.hits += 1
+        if self.policy == "lru":
+            self._index.move_to_end(key)
+        return value
+
+    def peek(self, key: int, default: Any = None) -> Any:
+        entry = self._index.get(key, MISS)
+        if entry is MISS:
+            return default
+        try:
+            return self.codec.load(self._path(key), entry[1])
+        except OSError:
+            self.io_errors += 1
+            self._drop(key)
+            return default
+
+    def put(self, key: int, value: Any, nbytes: int) -> Evicted:
+        """Insert (or demotion from the DRAM tier).  Returns the entries
+        evicted to make room with ``value=None`` — a disk eviction is
+        terminal, nothing downstream consumes the payload."""
+        evicted: Evicted = []
+        if key in self._index:
+            self._drop(key)
+        if not self.admits(nbytes):
+            return evicted
+        while self.stats.bytes_used + nbytes > self.capacity:
+            if self.policy == "lru" and self._index:
+                k = next(iter(self._index))
+                nb = self._index[k][0]
+                self._drop(k)
+                self.stats.evictions += 1
+                evicted.append((k, None, nb))
+            else:
+                return evicted
+        try:
+            _written, meta = self.codec.dump(value, self._path(key))
+        except OSError:
+            # a failed spill write is a rejected insert, not a crash on
+            # the serving path; leave no partial file behind
+            self.io_errors += 1
+            try:
+                os.unlink(self._path(key))
+            except OSError:
+                pass
+            return evicted
+        self._index[key] = (nbytes, meta)
+        self.stats.bytes_used += nbytes
+        self.stats.inserts += 1
+        return evicted
+
+    def set_capacity(self, capacity_bytes: int) -> Evicted:
+        self.capacity = int(capacity_bytes)
+        evicted: Evicted = []
+        while self.stats.bytes_used > self.capacity and self._index:
+            k = next(iter(self._index))
+            nb = self._index[k][0]
+            self._drop(k)
+            self.stats.evictions += 1
+            evicted.append((k, None, nb))
+        return evicted
+
+    def remove(self, key: int) -> bool:
+        if key in self._index:
+            self._drop(key)
+            self.stats.evictions += 1
+            return True
+        return False
+
+    def size_of(self, key: int) -> Optional[int]:
+        entry = self._index.get(key)
+        return entry[0] if entry is not None else None
+
+    def discard(self, key: int) -> bool:
+        """Stats-neutral drop (promotions and replacements are tier
+        migrations, not evictions)."""
+        if key in self._index:
+            self._drop(key)
+            return True
+        return False
+
+    def _drop(self, key: int) -> None:
+        nbytes, _meta = self._index.pop(key)
+        self.stats.bytes_used -= nbytes
+        try:
+            os.unlink(self._path(key))
+        except OSError:
+            pass
+
+    @property
+    def free_bytes(self) -> int:
+        return self.capacity - self.stats.bytes_used
+
+    # ------------------------------------------------------------------
+    def clear(self) -> None:
+        """Drop every entry and its file, then the form directory (the
+        no-leaked-files teardown contract: ``server.close()`` leaves
+        the spill dir empty)."""
+        for key in list(self._index):
+            self._drop(key)
+        try:
+            os.rmdir(self.dir)
+        except OSError:
+            pass

@@ -12,7 +12,8 @@ from typing import Optional, Tuple
 import numpy as np
 
 from repro.core.perf_model import (DatasetProfile, HardwareProfile,
-                                   JobProfile, dsi_throughput)
+                                   JobProfile, dsi_throughput,
+                                   dsi_throughput_tiered)
 
 
 @dataclass(frozen=True)
@@ -76,6 +77,72 @@ def optimize(hw: HardwareProfile, ds: DatasetProfile,
     return _solve_on_grid(hw, ds, job or JobProfile(), _grid_cached(step))
 
 
+# ---------------------------------------------------------------------------
+# Form × tier MDP (DRAM split + disk-spill split)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class TieredPartition:
+    """One split per cache level: ``dram`` partitions ``s_cache``,
+    ``disk`` partitions ``s_disk``; ``throughput`` is the combined
+    two-level model prediction (both member Partitions carry it too)."""
+    dram: Partition
+    disk: Partition
+    throughput: float
+
+    @property
+    def label(self) -> str:
+        return f"{self.dram.label}|{self.disk.label}"
+
+
+def _solve_level_on_grid(hw, ds, job, grid, fixed, level: str) -> Partition:
+    """Sweep one level's simplex with the other level fixed — a single
+    vectorized two-tier model pass."""
+    xe, xd, xa = grid
+    if level == "dram":
+        overall = dsi_throughput_tiered(hw, ds, job, (xe, xd, xa), fixed)
+    else:
+        overall = dsi_throughput_tiered(hw, ds, job, fixed, (xe, xd, xa))
+    best = int(np.argmax(overall))
+    return Partition(float(xe[best]), float(xd[best]), float(xa[best]),
+                     float(overall[best]))
+
+
+def optimize_tiered(hw: HardwareProfile, ds: DatasetProfile,
+                    job: Optional[JobProfile] = None, step: float = 0.01,
+                    sweeps: int = 2) -> TieredPartition:
+    """Form×tier MDP: coordinate descent over the two simplexes.
+
+    A joint 1%-grid over both levels is ~26M points; instead each sweep
+    fixes one level and brute-forces the other (two vectorized 5151-
+    point passes per sweep).  The objective is monotone under each
+    conditional argmax, so two sweeps reach a coordinate-wise optimum —
+    in practice the first disk pass already lands it, because the DRAM
+    level's greedy coverage is solved first and the disk level only
+    sees the leftovers.  With no disk tier configured the result
+    degenerates to :func:`optimize`'s split with an all-encoded disk
+    label placeholder.
+    """
+    job = job or JobProfile()
+    grid = _grid_cached(step)
+    dram = _solve_on_grid(hw, ds, job, grid)      # one-level warm start
+    disk = Partition(1.0, 0.0, 0.0, dram.throughput)
+    if hw.b_disk <= 0 or hw.s_disk <= 0:
+        return TieredPartition(dram, disk, dram.throughput)
+    for _ in range(max(int(sweeps), 1)):
+        disk = _solve_level_on_grid(hw, ds, job, grid,
+                                    (dram.x_e, dram.x_d, dram.x_a), "disk")
+        dram = _solve_level_on_grid(hw, ds, job, grid,
+                                    (disk.x_e, disk.x_d, disk.x_a), "dram")
+    thr = dram.throughput
+    return TieredPartition(replace_throughput(dram, thr),
+                           replace_throughput(disk, thr), thr)
+
+
+def replace_throughput(p: Partition, thr: float) -> Partition:
+    return Partition(p.x_e, p.x_d, p.x_a, thr)
+
+
 class IncrementalSolver:
     """Re-solvable MDP for one (dataset, job): the simplex grid is built
     once and every ``solve(hw)`` is a single vectorized model pass, so the
@@ -102,6 +169,20 @@ class IncrementalSolver:
         (the drift / hysteresis comparisons in the controller)."""
         out = dsi_throughput(hw, self.ds, self.job, *split)
         return float(out.overall)
+
+    def solve_tiered(self, hw: HardwareProfile) -> TieredPartition:
+        """Form×tier re-solve (shares the cached grid; two coordinate
+        sweeps, each one vectorized pass)."""
+        self.n_solves += 1
+        return optimize_tiered(hw, self.ds, self.job, self.step)
+
+    def predict_tiered(self, hw: HardwareProfile,
+                       dram_split: Tuple[float, float, float],
+                       disk_split: Tuple[float, float, float]) -> float:
+        """Two-level model prediction for one concrete (dram, disk)
+        split pair."""
+        return float(dsi_throughput_tiered(hw, self.ds, self.job,
+                                           dram_split, disk_split))
 
 
 def sweep(hw: HardwareProfile, ds: DatasetProfile,

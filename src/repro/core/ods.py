@@ -39,6 +39,10 @@ class ODSState:
     served: Dict[int, int] = field(default_factory=dict)
     rng: np.random.Generator = field(
         default_factory=lambda: np.random.default_rng(0))
+    # per-tier residency levels (0 storage / 1 disk / 2 DRAM), pushed by
+    # the service when the cache has a spill tier; None = single-tier
+    # cache, substitution stays byte-identical to the paper's
+    residency: Optional[np.ndarray] = None
     # stats
     hits: int = 0
     misses: int = 0
@@ -97,6 +101,13 @@ class ODSState:
         self.status[ids] = IN_STORAGE
         self.refcount[ids] = 0
 
+    def set_residency(self, levels: Optional[np.ndarray]) -> None:
+        """Install the cache's per-sample tier levels (uint8[N]: 0
+        storage / 1 disk / 2 DRAM).  When set, substitution prefers
+        DRAM-resident candidates over disk-resident ones — a disk hit
+        still beats a storage fetch, but not a DRAM hit."""
+        self.residency = levels
+
     # ------------------------------------------------------------------
     def sample_batch(self, job_id: int, requested: np.ndarray,
                      evict_threshold: Optional[int] = None
@@ -136,7 +147,7 @@ class ODSState:
             cand = np.flatnonzero(cand_mask)
             take = min(len(cand), len(replace_slots))
             if take:
-                picks = self.rng.choice(cand, size=take, replace=False)
+                picks = self._pick_candidates(cand, take)
                 batch[replace_slots[:take]] = picks
                 # substitutions = storage fetches avoided via cached unseen
                 self.substitutions += int(
@@ -169,6 +180,27 @@ class ODSState:
         if len(evict):
             self.mark_evicted(evict)
         return batch, evict
+
+    def _pick_candidates(self, cand: np.ndarray, take: int) -> np.ndarray:
+        """Draw ``take`` substitution picks from ``cand``.  Single-tier
+        (residency None): one uniform draw, the paper's rule and the
+        historical byte-identical path.  Two-tier: DRAM-resident
+        candidates are exhausted first (uniformly among themselves),
+        then disk-resident ones — opportunistic sampling prefers the
+        faster tier when both could fill a slot."""
+        if self.residency is None:
+            return self.rng.choice(cand, size=take, replace=False)
+        res = self.residency[cand]
+        dram = cand[res >= 2]
+        slower = cand[res < 2]
+        n_dram = min(take, len(dram))
+        picks = []
+        if n_dram:
+            picks.append(self.rng.choice(dram, size=n_dram, replace=False))
+        if take - n_dram:
+            picks.append(self.rng.choice(slower, size=take - n_dram,
+                                         replace=False))
+        return np.concatenate(picks) if picks else np.empty(0, np.int64)
 
     # ------------------------------------------------------------------
     def hit_rate(self) -> float:

@@ -34,12 +34,17 @@ def create(n: int) -> ODSJaxState:
         served=jnp.zeros((), jnp.int32))
 
 
-def substitute(state: ODSJaxState, requested: jax.Array, rng: jax.Array,
-               n_jobs: int) -> Tuple[ODSJaxState, jax.Array, jax.Array]:
-    """One ODS batch step. Returns (state', batch ids, evict mask[N]).
+def _substitute_core(state: ODSJaxState, requested: jax.Array,
+                     rng: jax.Array, n_jobs: int, residency
+                     ) -> Tuple[ODSJaxState, jax.Array, jax.Array]:
+    """One ODS batch step; the single body behind both public variants
+    (the rollover / direct-hit / fill / refcount bookkeeping must never
+    diverge between them — only candidate *scoring* differs).
 
-    Fully shape-static: selection is done by ranking all N samples by
-    (serveability, random key) and taking the top slots needed.
+    ``residency`` is ``None`` (single-tier: cached-unseen 2 > uncached-
+    unseen 1) or uint8[N] tier levels 0 storage / 1 disk / 2 DRAM
+    (two-tier: DRAM-unseen 3 > disk-unseen 2 > uncached-unseen 1) —
+    a trace-time constant, so each variant compiles once.
     """
     N = state.status.shape[0]
     B = requested.shape[0]
@@ -52,17 +57,22 @@ def substitute(state: ODSJaxState, requested: jax.Array, rng: jax.Array,
     cached = state.status != 0
     direct = cached[requested] & ~seen[requested]
 
-    # priority of every sample as a substitute: cached & unseen best,
-    # then uncached & unseen; seen and in-batch samples are excluded.
+    # priority of every sample as a substitute; seen and in-batch
+    # samples are excluded
     in_batch_direct = jnp.zeros(N, bool).at[requested].max(direct)
-    score = jnp.where(~seen & cached & ~in_batch_direct, 2, 0)
-    score = jnp.where(~seen & ~cached & ~in_batch_direct,
-                      jnp.maximum(score, 1), score)
+    free = ~seen & ~in_batch_direct
+    if residency is None:
+        score = jnp.where(free & cached, 2, 0)
+    else:
+        dram = residency >= 2
+        score = jnp.where(free & cached & dram, 3, 0)
+        score = jnp.where(free & cached & ~dram, jnp.maximum(score, 2),
+                          score)
+    score = jnp.where(free & ~cached, jnp.maximum(score, 1), score)
     noise = jax.random.uniform(rng, (N,))
-    rank = score.astype(jnp.float32) + noise          # in (0,3)
+    rank = score.astype(jnp.float32) + noise          # in (0, max_score+1)
     order = jnp.argsort(-rank)                         # best candidates first
 
-    n_replace = B - direct.sum()
     take_slot = jnp.cumsum(~direct) - 1                # per-slot index
     batch = jnp.where(direct, requested, order[jnp.clip(take_slot, 0, N - 1)])
 
@@ -78,4 +88,28 @@ def substitute(state: ODSJaxState, requested: jax.Array, rng: jax.Array,
             evict_mask)
 
 
+def substitute(state: ODSJaxState, requested: jax.Array, rng: jax.Array,
+               n_jobs: int) -> Tuple[ODSJaxState, jax.Array, jax.Array]:
+    """One ODS batch step. Returns (state', batch ids, evict mask[N]).
+
+    Fully shape-static: selection is done by ranking all N samples by
+    (serveability, random key) and taking the top slots needed.
+    """
+    return _substitute_core(state, requested, rng, n_jobs, None)
+
+
 substitute_jit = jax.jit(substitute, static_argnames=("n_jobs",))
+
+
+def substitute_tiered(state: ODSJaxState, requested: jax.Array,
+                      rng: jax.Array, n_jobs: int, residency: jax.Array
+                      ) -> Tuple[ODSJaxState, jax.Array, jax.Array]:
+    """Residency-aware ODS batch step (two-level cache twin of
+    :func:`substitute`): DRAM-resident cached-unseen samples outrank
+    disk-resident ones, which outrank unseen storage fetches — the same
+    preference order the NumPy ``_pick_candidates`` applies."""
+    return _substitute_core(state, requested, rng, n_jobs, residency)
+
+
+substitute_tiered_jit = jax.jit(substitute_tiered,
+                                static_argnames=("n_jobs",))

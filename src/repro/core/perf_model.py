@@ -31,6 +31,10 @@ MB = 1e6
 KB = 1e3
 Gbit = 1e9 / 8
 
+#: local-SSD read-bandwidth prior for spill tiers whose profile carries
+#: no measured ``b_disk`` (telemetry calibration replaces it live)
+DEFAULT_DISK_BW = 1.5 * GB
+
 
 @dataclass(frozen=True)
 class HardwareProfile:
@@ -48,6 +52,9 @@ class HardwareProfile:
     gpus_per_node: int = 4
     nvlink_intra: bool = False
     nvlink_inter: bool = False
+    # SSD spill tier (form×tier MDP): 0 disables the disk level
+    b_disk: float = 0.0       # local disk read bandwidth (B/s)
+    s_disk: float = 0.0       # disk spill capacity (bytes)
 
 
 @dataclass(frozen=True)
@@ -190,11 +197,82 @@ def dsi_throughput(hw: HardwareProfile, ds: DatasetProfile, job: JobProfile,
 
 
 # ---------------------------------------------------------------------------
+# Form × tier model (DRAM level + SSD spill level)
+# ---------------------------------------------------------------------------
+
+def _form_rates(hw: HardwareProfile, ds: DatasetProfile, job: JobProfile,
+                b_serve: float) -> Tuple[float, float, float, float]:
+    """Per-form serve rates (Eqs. 1/3/5/7) with the cache-bandwidth term
+    replaced by ``b_serve`` — the per-tier generalization: a DRAM hit is
+    served at ``b_cache``, a disk hit at ``b_disk``, everything else in
+    the equations (NIC, CPU, PCIe, GPU) is tier-independent."""
+    n = hw.n_nodes
+    S = ds.s_data
+    a_b, d_b, g_b = ds.augmented_bytes, ds.decoded_bytes, ds.gpu_bytes
+    if ds.inflation:
+        a_b = d_b = g_b = ds.inflation * S
+    c_nw, c_pcie = _comm_overheads(hw, job)
+    dsi_a = min(b_serve / a_b, n * hw.b_nic / (a_b + c_nw),
+                n * hw.b_pcie / (g_b + c_pcie), n * hw.t_gpu)
+    dsi_d = min(b_serve / d_b, n * hw.b_nic / (d_b + c_nw), n * hw.t_a,
+                n * hw.b_pcie / (g_b + c_pcie), n * hw.t_gpu)
+    dsi_e = min(b_serve / S, n * hw.b_nic / (S + c_nw), n * hw.t_da,
+                n * hw.b_pcie / (g_b + c_pcie), n * hw.t_gpu)
+    dsi_s = min(dsi_e, hw.b_storage / S)
+    return dsi_a, dsi_d, dsi_e, dsi_s
+
+
+def dsi_throughput_tiered(hw: HardwareProfile, ds: DatasetProfile,
+                          job: JobProfile, dram_split, disk_split):
+    """Overall DSI throughput with a two-level cache.
+
+    ``dram_split`` partitions ``hw.s_cache`` and ``disk_split``
+    partitions ``hw.s_disk`` across the three forms; each may be a
+    scalar triple or broadcastable arrays (the MDP solver fixes one
+    level and sweeps the other).  Coverage is greedy most-processed
+    first within each level (Eqs. 2/4/6), the disk level covering only
+    samples the DRAM level left over; per-form serve rates come from
+    :func:`_form_rates` at ``b_cache`` vs ``b_disk``.  With
+    ``b_disk * s_disk == 0`` this reduces exactly to Eq. 9.
+    """
+    x_e, x_d, x_a = (np.asarray(v, np.float64) for v in dram_split)
+    y_e, y_d, y_a = (np.asarray(v, np.float64) for v in disk_split)
+    S = ds.s_data
+    a_b, d_b = ds.augmented_bytes, ds.decoded_bytes
+    if ds.inflation:
+        a_b = d_b = ds.inflation * S
+    da1, dd1, de1, dsi_s = _form_rates(hw, ds, job, hw.b_cache)
+    s_disk = hw.s_disk if hw.b_disk > 0 else 0.0
+    if s_disk > 0:
+        da2, dd2, de2, _ = _form_rates(hw, ds, job, hw.b_disk)
+    else:
+        da2 = dd2 = de2 = 0.0
+    N = float(ds.n_total)
+    remaining = N + 0.0 * (x_a + y_a)          # broadcast shape
+    n_a1 = np.minimum(remaining, x_a * hw.s_cache / a_b)
+    remaining = remaining - n_a1
+    n_d1 = np.minimum(remaining, x_d * hw.s_cache / d_b)
+    remaining = remaining - n_d1
+    n_e1 = np.minimum(remaining, x_e * hw.s_cache / S)
+    remaining = remaining - n_e1
+    n_a2 = np.minimum(remaining, y_a * s_disk / a_b)
+    remaining = remaining - n_a2
+    n_d2 = np.minimum(remaining, y_d * s_disk / d_b)
+    remaining = remaining - n_d2
+    n_e2 = np.minimum(remaining, y_e * s_disk / S)
+    remaining = remaining - n_e2
+    overall = (n_a1 * da1 + n_d1 * dd1 + n_e1 * de1
+               + n_a2 * da2 + n_d2 * dd2 + n_e2 * de2
+               + np.maximum(remaining, 0.0) * dsi_s) / N
+    return overall
+
+
+# ---------------------------------------------------------------------------
 # Telemetry calibration
 # ---------------------------------------------------------------------------
 
 #: HardwareProfile fields a telemetry snapshot can override.
-CALIBRATABLE = ("t_da", "t_a", "b_storage", "b_cache")
+CALIBRATABLE = ("t_da", "t_a", "b_storage", "b_cache", "b_disk")
 
 
 def calibrate(hw: HardwareProfile, telemetry,

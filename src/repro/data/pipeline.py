@@ -276,7 +276,7 @@ class _StageParallelExecutor:
             sid = asm.ids[slot]
             try:
                 t_look = time.monotonic()
-                form, value = pipe.session.lookup(sid)
+                form, value, tier = pipe.session.lookup_tiered(sid)
                 tel.record_serve(form)
                 t0 = time.monotonic()
                 if form is None:
@@ -291,7 +291,9 @@ class _StageParallelExecutor:
                     tel.record_stage("fetch_cache", t0 - t_look)
                     nbytes = value.nbytes if hasattr(value, "nbytes") \
                         else len(value)
-                    tel.record_bytes("cache", nbytes, t0 - t_look)
+                    # spill-tier hits calibrate b_disk, DRAM hits b_cache
+                    tel.record_bytes("disk" if tier == "disk" else "cache",
+                                     nbytes, t0 - t_look)
                     if form == "augmented":
                         ok = self._put(self.augment_q,
                                        (asm, slot, value, None, False, True))
@@ -568,8 +570,10 @@ class DSIPipeline:
     def _produce_sample(self, sid: int, epoch_tag: int) -> np.ndarray:
         """Run one sample through the remaining pipeline stages."""
         t_look = time.monotonic()
-        form, value = self.session.lookup(sid)
+        form, value, tier = self.session.lookup_tiered(sid)
         self.telemetry.record_serve(form)
+        # spill-tier hits calibrate b_disk, DRAM hits b_cache
+        channel = "disk" if tier == "disk" else "cache"
         t0 = time.monotonic()
         if form == "augmented":
             # hit cost is the lookup interval (t0 - t_look): StageTimes
@@ -577,18 +581,18 @@ class DSIPipeline:
             # "now - t0" ~ 0 here, undercounting every hit)
             self.times.fetch += t0 - t_look
             self.telemetry.record_stage("fetch_cache", t0 - t_look)
-            self.telemetry.record_bytes("cache", value.nbytes, t0 - t_look)
+            self.telemetry.record_bytes(channel, value.nbytes, t0 - t_look)
             return value
         if form == "decoded":
             img = value
             self.times.fetch += t0 - t_look
             self.telemetry.record_stage("fetch_cache", t0 - t_look)
-            self.telemetry.record_bytes("cache", img.nbytes, t0 - t_look)
+            self.telemetry.record_bytes(channel, img.nbytes, t0 - t_look)
         elif form == "encoded":
             enc = value
             self.times.fetch += t0 - t_look
             self.telemetry.record_stage("fetch_cache", t0 - t_look)
-            self.telemetry.record_bytes("cache", len(enc), t0 - t_look)
+            self.telemetry.record_bytes(channel, len(enc), t0 - t_look)
             t1 = time.monotonic()
             img = self.ds.decode(enc, sid)
             dt = time.monotonic() - t1
@@ -670,9 +674,11 @@ class DSIPipeline:
 
     def _refill_one(self, sid: int) -> None:
         try:
-            # a raced refill/admit may already have repopulated this slot;
-            # peek() is stats-neutral so the check doesn't inflate misses
-            if self.svc.cache.peek(sid)[0] == "augmented":
+            # a raced refill/admit may already have repopulated this
+            # slot; form_of() is stats-neutral and containment-only, so
+            # the check neither inflates misses nor reads a spilled
+            # payload off disk just to learn the form
+            if self.svc.cache.form_of(sid) == "augmented":
                 return
             enc = self.storage.fetch(sid)
             img = self.ds.decode(enc, sid)

@@ -2,7 +2,15 @@
 
 A token-bucket limiter shared by all fetch threads reproduces the paper's
 NFS bottleneck; with ``bandwidth=None`` the store is rate-unlimited (unit
-tests).  Fetches return the deterministic synthetic payload.
+tests).  Fetches return the dataset's encoded payload — the PRNG-backed
+:class:`~repro.data.synthetic.SyntheticDataset` or the sharded on-disk
+:class:`~repro.data.synthetic.FileDataset` (real file IO through the
+same token bucket).
+
+Counter discipline: ``BandwidthBudget.bytes_served`` and
+``RemoteStorage.fetches`` are only ever mutated under the budget lock —
+concurrent fetch workers previously raced the bare ``+=`` and dropped
+increments, so benchmark fetch tallies undercounted under load.
 """
 from __future__ import annotations
 
@@ -10,22 +18,21 @@ import threading
 import time
 from typing import Optional
 
-from repro.data.synthetic import SyntheticDataset
-
 
 class BandwidthBudget:
     def __init__(self, bytes_per_s: Optional[float]):
         self.rate = bytes_per_s
-        self._lock = threading.Lock()
+        self.lock = threading.Lock()
         self._available_at = time.monotonic()
         self.bytes_served = 0
 
     def consume(self, nbytes: int) -> float:
         """Blocks until the transfer 'completes'; returns the stall time."""
         if self.rate is None:
-            self.bytes_served += nbytes
+            with self.lock:
+                self.bytes_served += nbytes
             return 0.0
-        with self._lock:
+        with self.lock:
             now = time.monotonic()
             start = max(now, self._available_at)
             self._available_at = start + nbytes / self.rate
@@ -37,8 +44,7 @@ class BandwidthBudget:
 
 
 class RemoteStorage:
-    def __init__(self, dataset: SyntheticDataset,
-                 bandwidth: Optional[float] = None):
+    def __init__(self, dataset, bandwidth: Optional[float] = None):
         self.dataset = dataset
         self.budget = BandwidthBudget(bandwidth)
         self.fetches = 0
@@ -46,5 +52,6 @@ class RemoteStorage:
     def fetch(self, sample_id: int) -> bytes:
         data = self.dataset.encoded(sample_id)
         self.budget.consume(len(data))
-        self.fetches += 1
+        with self.budget.lock:
+            self.fetches += 1
         return data

@@ -1,4 +1,4 @@
-"""Deterministic synthetic multimedia dataset.
+"""Deterministic synthetic multimedia dataset — in-memory and on-disk.
 
 Samples are generated from a per-id PRNG so any worker on any host can
 materialize sample ``i`` without shared state — the property real object
@@ -6,11 +6,17 @@ stores give you and the one checkpoint/restart relies on.
 
 Encoded sizes follow a lognormal around the dataset's mean (Table 6 stats),
 clipped to [0.25x, 4x] of the mean, mimicking JPEG size spread.
+
+:class:`FileDataset` materializes the same samples into write-once
+sharded files so the live pipeline exercises *real* file IO (open /
+mmap / copy) instead of PRNG calls; byte-identical payloads, same
+interface, drop-in behind :class:`~repro.data.storage.RemoteStorage`.
 """
 from __future__ import annotations
 
+import os
 from dataclasses import dataclass
-from typing import Tuple
+from typing import Dict, Tuple
 
 import numpy as np
 
@@ -63,6 +69,164 @@ class SyntheticDataset:
 
     def inflation(self, dtype_size: int = 4) -> float:
         return self.augmented_bytes(dtype_size) / self.mean_encoded_bytes
+
+
+class FileDataset:
+    """Sharded on-disk materialization of a :class:`SyntheticDataset`.
+
+    ``root`` gains write-once shard files (``shard-00000.bin`` …, each
+    up to ``shard_bytes`` of concatenated encoded payloads) plus an
+    ``index.npz`` mapping sample id -> (shard, offset, length).  A
+    second construction over the same root reuses the files (the index
+    is validated against the dataset's name/size), so benchmarks and
+    the workload runner pay materialization once per machine.
+
+    Reads go through one ``np.memmap`` per shard — ``encoded(i)``
+    copies the sample's byte range out of the mapping, which is a real
+    page-cache/disk read, unlike the PRNG-backed base dataset.  All
+    other behavior (decode, labels, per-form sizes) delegates to the
+    base dataset; payloads are byte-identical by construction, so the
+    two are interchangeable mid-experiment.
+    """
+
+    def __init__(self, base: SyntheticDataset, root: str,
+                 shard_bytes: int = 16 << 20):
+        self.base = base
+        self.root = root
+        self.shard_bytes = int(shard_bytes)
+        self._mmaps: Dict[int, np.memmap] = {}
+        os.makedirs(root, exist_ok=True)
+        self._index_path = os.path.join(root, "index.npz")
+        if os.path.exists(self._index_path):
+            idx = np.load(self._index_path, allow_pickle=False)
+            if (str(idx["name"]) != base.name
+                    or int(idx["n_samples"]) != base.n_samples
+                    or int(idx["seed"]) != base.seed):
+                raise ValueError(
+                    f"{root} holds shards for dataset "
+                    f"{idx['name']}/{idx['n_samples']}, not "
+                    f"{base.name}/{base.n_samples}; use a fresh root")
+            self.shard_of = idx["shard"]
+            self.offset_of = idx["offset"]
+            self.length_of = idx["length"]
+            self.n_shards = int(self.shard_of[-1]) + 1 \
+                if len(self.shard_of) else 0
+        else:
+            self._materialize()
+
+    def _materialize(self) -> None:
+        n = self.base.n_samples
+        shard_of = np.zeros(n, np.int32)
+        offset_of = np.zeros(n, np.int64)
+        length_of = np.zeros(n, np.int64)
+        shard, offset, f = 0, 0, None
+        try:
+            for i in range(n):
+                payload = self.base.encoded(i)
+                if f is None or (offset and
+                                 offset + len(payload) > self.shard_bytes):
+                    if f is not None:
+                        f.close()
+                    shard = shard + 1 if f is not None else 0
+                    offset = 0
+                    f = open(self._shard_path(shard), "wb")
+                shard_of[i], offset_of[i] = shard, offset
+                length_of[i] = len(payload)
+                f.write(payload)
+                offset += len(payload)
+        finally:
+            if f is not None:
+                f.close()
+        self.shard_of, self.offset_of = shard_of, offset_of
+        self.length_of = length_of
+        self.n_shards = shard + 1 if n else 0
+        np.savez(self._index_path, shard=shard_of, offset=offset_of,
+                 length=length_of, name=self.base.name,
+                 n_samples=self.base.n_samples, seed=self.base.seed)
+
+    def _shard_path(self, shard: int) -> str:
+        return os.path.join(self.root, f"shard-{shard:05d}.bin")
+
+    def _mmap(self, shard: int) -> np.memmap:
+        mm = self._mmaps.get(shard)
+        if mm is None:
+            mm = np.memmap(self._shard_path(shard), dtype=np.uint8,
+                           mode="r")
+            self._mmaps[shard] = mm
+        return mm
+
+    # -- the SyntheticDataset interface --------------------------------
+    @property
+    def name(self) -> str:
+        return f"{self.base.name}@file"
+
+    @property
+    def n_samples(self) -> int:
+        return self.base.n_samples
+
+    @property
+    def mean_encoded_bytes(self) -> int:
+        return self.base.mean_encoded_bytes
+
+    @property
+    def image_hw(self) -> Tuple[int, int]:
+        return self.base.image_hw
+
+    @property
+    def crop_hw(self) -> Tuple[int, int]:
+        return self.base.crop_hw
+
+    @property
+    def n_classes(self) -> int:
+        return self.base.n_classes
+
+    @property
+    def seed(self) -> int:
+        return self.base.seed
+
+    def encoded_size(self, sample_id: int) -> int:
+        return int(self.length_of[sample_id])
+
+    def encoded(self, sample_id: int) -> bytes:
+        mm = self._mmap(int(self.shard_of[sample_id]))
+        off = int(self.offset_of[sample_id])
+        return bytes(mm[off:off + int(self.length_of[sample_id])])
+
+    def label(self, sample_id: int) -> int:
+        return self.base.label(sample_id)
+
+    def decode(self, encoded: bytes, sample_id: int) -> np.ndarray:
+        return self.base.decode(encoded, sample_id)
+
+    def decoded_bytes(self) -> int:
+        return self.base.decoded_bytes()
+
+    def augmented_bytes(self, dtype_size: int = 4) -> int:
+        return self.base.augmented_bytes(dtype_size)
+
+    def inflation(self, dtype_size: int = 4) -> float:
+        return self.base.inflation(dtype_size)
+
+    def total_bytes(self) -> int:
+        return int(self.length_of.sum())
+
+    def close(self) -> None:
+        """Drop the shard mappings (the files stay — they are the
+        dataset).  ``remove_files()`` deletes those too."""
+        self._mmaps.clear()
+
+    def remove_files(self) -> None:
+        self.close()
+        for shard in range(self.n_shards):
+            try:
+                os.unlink(self._shard_path(shard))
+            except OSError:
+                pass
+        try:
+            os.unlink(self._index_path)
+            os.rmdir(self.root)
+        except OSError:
+            pass
 
 
 # paper-shaped datasets scaled down for CPU-runnable examples/tests

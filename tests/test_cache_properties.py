@@ -17,12 +17,17 @@ implements (integers/floats/lists/tuples/sampled_from), so the
 properties run with seeded examples even when the real library is
 absent.
 """
+import os
+import shutil
+import tempfile
+
 import numpy as np
 import pytest
 from hypothesis import given, settings
 from hypothesis import strategies as st
 
 from repro.api import AZURE_NC96, DatasetProfile, SenecaConfig, SenecaService
+from repro.api.backends import resolve_backend
 from repro.api.server import CODE_FORM, FORM_CODE
 from repro.cache.store import FORMS, TieredCache
 
@@ -47,12 +52,15 @@ op_strategy = st.lists(
     min_size=1, max_size=60)
 
 
-def _service() -> SenecaService:
+def _service(spill_dir=None, eviction=None) -> SenecaService:
     profile = DatasetProfile("prop", N_KEYS, 1_000, decoded_bytes=1_500,
                              augmented_bytes=2_000)
     return SenecaService(SenecaConfig(
         cache_bytes=CACHE_BYTES, hardware=AZURE_NC96, dataset=profile,
-        split=(0.4, 0.3, 0.3), seed=3))
+        split=(0.4, 0.3, 0.3), seed=3,
+        spill_dir=spill_dir, spill_bytes=CACHE_BYTES if spill_dir else 0,
+        spill_split=(0.4, 0.3, 0.3) if spill_dir else None,
+        eviction=eviction))
 
 
 def _split_from(f_enc: float, f_rest: float):
@@ -64,6 +72,10 @@ def _split_from(f_enc: float, f_rest: float):
 
 
 def _check_invariants(svc: SenecaService) -> None:
+    # chains shed keys as a serving side effect (spill overflow,
+    # promotion backfill); the service patches metadata at its regular
+    # reconcile points — flush them before asserting consistency
+    svc.reconcile_evictions()
     cache = svc.cache
     with cache.lock:
         total_cap = 0
@@ -77,13 +89,26 @@ def _check_invariants(svc: SenecaService) -> None:
             assert set(part._data) == set(part._sizes), \
                 f"{form}: data/size key sets diverged"
             total_cap += part.capacity
+            if part.spill is not None:
+                spill = part.spill
+                assert spill.stats.bytes_used <= spill.capacity, \
+                    f"{form}: disk {spill.stats.bytes_used} > cap"
+                assert spill.stats.bytes_used == sum(
+                    spill.size_of(k) for k in spill.keys()), \
+                    f"{form}: disk byte ledger out of sync"
+                on_disk = set(os.listdir(spill.dir)) \
+                    if os.path.isdir(spill.dir) else set()
+                assert {f"{k}.bin" for k in spill.keys()} == on_disk, \
+                    f"{form}: disk index diverged from files"
+                assert not (set(part._data) & set(spill.keys())), \
+                    f"{form}: key resident in both tiers"
         assert total_cap <= cache.capacity, \
             "partition capacities exceed the cache total"
         # ODS consistency: a nonzero status must name a resident form
         status = svc.backend.status_of(np.arange(N_KEYS))
         for key in np.flatnonzero(status):
             form = CODE_FORM[int(status[key])]
-            assert cache.parts[form].peek(int(key)) is not None, \
+            assert int(key) in cache.parts[form], \
                 f"status says {form} for key {key} but cache lost it"
 
 
@@ -144,6 +169,92 @@ def test_insert_batch_gated_matches_looped_insert_gated(sizes, f_enc,
     bp, lp = batch_cache.parts["decoded"], loop_cache.parts["decoded"]
     assert bp.keys() == lp.keys()
     assert bp.stats.bytes_used == lp.stats.bytes_used <= bp.capacity
+
+
+@settings(max_examples=25, deadline=None)
+@given(ops=op_strategy)
+def test_tier_chain_invariants_under_random_interleavings(ops):
+    """The tentpole property: with a DRAM+disk chain under every
+    partition, random admit/lookup(promote)/evict/resize(demote)
+    interleavings keep the byte ledger exact across BOTH tiers, never
+    leave a key in two tiers, never diverge the disk index from the
+    files on disk, and keep ODS status one-directionally consistent
+    with chain residency."""
+    work = tempfile.mkdtemp(prefix="prop-spill-")
+    try:
+        svc = _service(spill_dir=work)
+        for kind, key, nbytes, f_enc, f_rest in ops:
+            if kind.startswith("admit_") and kind != "admit_many":
+                form = kind[len("admit_"):]
+                svc.admit(key, form, b"x" * nbytes, nbytes)
+            elif kind == "admit_many":
+                entries = [((key + i) % N_KEYS, b"y" * nbytes, nbytes)
+                           for i in range(3)]
+                svc.admit_batch("augmented" if f_rest >= 0.5
+                                else "decoded", entries)
+            elif kind == "lookup":
+                svc.lookup(key)            # disk hits promote
+            elif kind == "evict_augmented":
+                if int(svc.backend.status_of(np.asarray([key]))[0]) \
+                        == FORM_CODE["augmented"]:
+                    svc.cache.evict(key, "augmented")
+                    svc.backend.mark_evicted(np.asarray([key]))
+            elif kind == "resize":
+                from repro.core import mdp
+                x_e, x_d, x_a = _split_from(f_enc, f_rest)
+                y = _split_from(f_rest, f_enc)
+                svc.apply_partition(
+                    mdp.Partition(x_e, x_d, x_a, throughput=float("nan")),
+                    mdp.Partition(*y, throughput=float("nan")))
+            _check_invariants(svc)
+        svc.close()
+        leftovers = [f for _dp, _dn, fs in os.walk(work) for f in fs]
+        assert not leftovers, f"close() leaked spill files: {leftovers}"
+    finally:
+        shutil.rmtree(work, ignore_errors=True)
+
+
+@settings(max_examples=10, deadline=None)
+@given(sizes=st.lists(st.integers(200, 1_200), min_size=2, max_size=10),
+       backend_pick=st.floats(0.0, 1.0))
+def test_demote_promote_round_trip_equality_all_forms(sizes, backend_pick):
+    """Entries pushed down to disk and read back (promoted or not) are
+    byte-identical for all three forms, on both ODS backends."""
+    backend = "jax" if backend_pick >= 0.5 else "numpy"
+    work = tempfile.mkdtemp(prefix="prop-rt-")
+    try:
+        svc = _service(spill_dir=work, eviction="lru")
+        svc.backend = resolve_backend(backend, N_KEYS, seed=1)
+        rng = np.random.default_rng(11)
+        originals = {}
+        for k, nb in enumerate(sizes):
+            enc = bytes(rng.integers(0, 256, nb, dtype=np.uint8))
+            dec = rng.integers(0, 256, (nb // 40 + 2, 5, 3)
+                               ).astype(np.uint8)
+            aug = rng.random((nb // 50 + 2, 4, 3)).astype(np.float32)
+            originals[k] = (enc, dec, aug)
+            svc.admit(k, "encoded", enc, len(enc))
+            svc.admit(k, "decoded", dec, dec.nbytes)
+            svc.admit(k, "augmented", aug, aug.nbytes)
+        for k, (enc, dec, aug) in originals.items():
+            with svc.cache.lock:
+                got = {form: svc.cache.parts[form].peek(k)
+                       for form in FORMS}
+            for form, want in zip(FORMS, (enc, dec, aug)):
+                if got[form] is None:
+                    continue               # evicted out of the chain
+                if form == "encoded":
+                    assert bytes(got[form]) == want, (backend, form, k)
+                else:
+                    assert np.array_equal(np.asarray(got[form]), want), \
+                        (backend, form, k)
+            # promotion path serves the same content
+            form, value = svc.cache.lookup(k)
+            if form == "encoded":
+                assert bytes(value) == originals[k][0]
+        svc.close()
+    finally:
+        shutil.rmtree(work, ignore_errors=True)
 
 
 @settings(max_examples=25)

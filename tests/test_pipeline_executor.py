@@ -75,17 +75,19 @@ def test_hit_fetch_time_accounts_lookup_interval():
     out = np.zeros((*ds.crop_hw, 3), np.float32)
     assert sess.admit(3, "augmented", out, out.nbytes)
 
-    orig = pipe.session.lookup
+    # the pipeline's serving seam is lookup_tiered (it also names the
+    # tier that answered, for per-tier bandwidth telemetry)
+    orig = pipe.session.lookup_tiered
 
     def slow_lookup(sid):
         time.sleep(0.02)
         return orig(sid)
-    pipe.session.lookup = slow_lookup
+    pipe.session.lookup_tiered = slow_lookup
     got = pipe._produce_sample(3, epoch_tag=0)
     assert got is out or np.array_equal(got, out)
     # the seed charged ~0 here (timer started after the lookup returned)
     assert pipe.times.fetch >= 0.015, pipe.times.fetch
-    pipe.session.lookup = orig
+    pipe.session.lookup_tiered = orig
     pipe.stop()
     server.close()
 

@@ -1,0 +1,426 @@
+"""Storage-engine tests: tier chains, codecs, spill, FileDataset,
+form×tier MDP, residency-aware ODS (ISSUE-5).
+
+Fast, deterministic — tier-1.  The randomized interleaving properties
+live in tests/test_cache_properties.py (slow suite).
+"""
+import os
+import threading
+
+import numpy as np
+import pytest
+
+from repro.cache.codecs import BytesCodec, NdarrayCodec, codec_for
+from repro.cache.store import CachePartition, TieredCache
+from repro.cache.tiers import DiskTier, DramTier
+from repro.core import mdp
+from repro.core.perf_model import (AZURE_NC96, DatasetProfile, GB,
+                                   JobProfile, dsi_throughput,
+                                   dsi_throughput_tiered)
+from repro.data.storage import RemoteStorage
+from repro.data.synthetic import FileDataset, tiny
+
+
+# ----------------------------------------------------------------------
+# codecs
+def test_codec_for_forms_and_round_trips(tmp_path):
+    assert isinstance(codec_for("encoded"), BytesCodec)
+    assert isinstance(codec_for("decoded"), NdarrayCodec)
+    assert isinstance(codec_for("augmented"), NdarrayCodec)
+    with pytest.raises(ValueError):
+        codec_for("nope")
+
+    path = str(tmp_path / "x.bin")
+    nb, meta = BytesCodec().dump(b"payload", path)
+    assert nb == 7 and BytesCodec().load(path, meta) == b"payload"
+
+    arr = np.arange(60, dtype=np.float32).reshape(5, 4, 3)
+    nb, meta = NdarrayCodec().dump(arr, path)
+    back = NdarrayCodec().load(path, meta)
+    assert nb == arr.nbytes and isinstance(back, np.memmap)
+    assert np.array_equal(np.asarray(back), arr)
+    # empty arrays round-trip without a memmap (memmap rejects size 0)
+    empty = np.empty((0, 3), np.uint8)
+    nb, meta = NdarrayCodec().dump(empty, path)
+    assert np.array_equal(NdarrayCodec().load(path, meta), empty)
+
+
+# ----------------------------------------------------------------------
+# sentinel: falsy / None stored values are hits, not misses
+def test_stored_falsy_values_count_as_hits():
+    part = CachePartition(1000, "lru")
+    part.put(1, b"", 10)
+    part.put(2, None, 10)
+    assert part.get(1) == b"" and part.stats.misses == 0
+    assert part.get(2) is None and part.stats.misses == 0
+    assert part.stats.hits == 2
+    assert part.get(3) is None and part.stats.misses == 1
+    # peek is sentinel-correct too
+    assert part.peek(1) == b"" and part.peek(2) is None
+
+    c = TieredCache(3000, (1.0, 0.0, 0.0))
+    c.insert(7, "encoded", b"", 10)
+    form, value = c.lookup(7)
+    assert form == "encoded" and value == b""
+    assert c.hit_rate() == 1.0
+
+
+def test_disk_tier_basics(tmp_path):
+    t = DiskTier(1000, str(tmp_path), "encoded")
+    assert t.put(1, b"a" * 400, 400) == []
+    assert t.put(2, b"b" * 400, 400) == []
+    # LRU by default: key 1 is oldest, inserting 3 evicts it
+    evicted = t.put(3, b"c" * 400, 400)
+    assert [k for k, _v, _nb in evicted] == [1]
+    assert 1 not in t and t.get(1) is None        # counted miss
+    assert t.get(2) == b"b" * 400
+    assert t.stats.bytes_used == 800 == sum(
+        t.size_of(k) for k in t.keys())
+    # files exist for residents only
+    names = sorted(os.listdir(str(tmp_path / "encoded")))
+    assert names == ["2.bin", "3.bin"]
+    t.clear()
+    assert not os.path.exists(str(tmp_path / "encoded"))
+
+
+def test_chain_overflow_and_promotion(tmp_path):
+    # "none" DRAM rejects when full -> overflow lands on disk
+    spill = DiskTier(5000, str(tmp_path), "encoded")
+    part = CachePartition(600, "none", spill)
+    assert part.put(1, b"x" * 500, 500) == []
+    part.put(2, b"y" * 500, 500)
+    assert part.tier_of(1) == "dram" and part.tier_of(2) == "disk"
+    # chain lookup: one disk hit; "none" DRAM is full so no promotion
+    value, tier = part.get_tiered(2)
+    assert value == b"y" * 500 and tier == "disk"
+    assert part.tier_of(2) == "disk"
+    # lru DRAM promotes and demotes the coldest entry down
+    spill2 = DiskTier(5000, str(tmp_path), "decoded")
+    lru = CachePartition(600, "lru", spill2)
+    a = np.full((10, 10), 1, np.uint8)
+    b = np.full((10, 10), 2, np.uint8)
+    lru.put(1, a, 500)
+    lru.put(2, b, 500)                       # demotes 1 to disk
+    assert lru.tier_of(1) == "disk" and lru.demotions == 1
+    value, tier = lru.get_tiered(1)          # promotes 1, demotes 2
+    assert tier == "disk" and np.array_equal(np.asarray(value), a)
+    assert lru.tier_of(1) == "dram" and lru.tier_of(2) == "disk"
+    assert lru.promotions == 1 and lru.demotions == 2
+    # per-tier ledgers stay exact
+    assert lru.dram.stats.bytes_used == 500
+    assert lru.spill.stats.bytes_used == 500
+    spill.clear(), spill2.clear()
+
+
+def test_remove_drops_every_tier(tmp_path):
+    spill = DiskTier(5000, str(tmp_path), "augmented")
+    part = CachePartition(100, "refcount", spill)
+    arr = np.ones((4, 4, 3), np.float32)
+    part.put(5, arr, arr.nbytes)             # oversized for DRAM -> disk
+    assert part.tier_of(5) == "disk"
+    assert part.remove(5) and 5 not in part
+    assert part.spill.stats.bytes_used == 0
+    spill.clear()
+
+
+# ----------------------------------------------------------------------
+# demote -> promote round-trip content equality, all forms, both backends
+@pytest.mark.parametrize("backend", ["numpy", "jax"])
+def test_demote_promote_round_trip_all_forms(tmp_path, backend):
+    from repro.api import SenecaServer
+    ds = tiny(n=32)
+    server = SenecaServer.for_dataset(
+        ds, cache_bytes=4_000, seed=0, backend=backend, eviction="lru",
+        split=(0.34, 0.33, 0.33),
+        spill_dir=str(tmp_path / "spill"),
+        spill_bytes=10_000_000, spill_split=(0.34, 0.33, 0.33))
+    svc = server.service
+    originals = {}
+    rng = np.random.default_rng(7)
+    for k in range(8):
+        enc = bytes(rng.integers(0, 256, 600, dtype=np.uint8))
+        dec = rng.integers(0, 256, (8, 8, 3)).astype(np.uint8)
+        aug = rng.random((6, 6, 3)).astype(np.float32)
+        originals[k] = (enc, dec, aug)
+        assert svc.admit(k, "encoded", enc, len(enc))
+        assert svc.admit(k, "decoded", dec, dec.nbytes)
+        assert svc.admit(k, "augmented", aug, aug.nbytes)
+    # the lru DRAM tiers hold ~2 entries each; earlier keys are on disk
+    demoted = sum(svc.cache.spill_stats()[f]["disk_entries"]
+                  for f in ("encoded", "decoded", "augmented"))
+    assert demoted > 0
+    for k, (enc, dec, aug) in originals.items():
+        with svc.cache.lock:
+            got_enc = svc.cache.parts["encoded"].peek(k)
+            got_dec = svc.cache.parts["decoded"].peek(k)
+            got_aug = svc.cache.parts["augmented"].peek(k)
+        assert bytes(got_enc) == enc, f"encoded round-trip, key {k}"
+        assert np.array_equal(np.asarray(got_dec), dec), \
+            f"decoded round-trip, key {k}"
+        assert np.array_equal(np.asarray(got_aug), aug), \
+            f"augmented round-trip, key {k}"
+        # metadata agrees with chain residency (most-processed form)
+        assert int(svc.backend.status_of(np.asarray([k]))[0]) == 3
+    server.close()
+    leftovers = [f for _dp, _dn, fs in os.walk(str(tmp_path / "spill"))
+                 for f in fs]
+    assert not leftovers
+
+
+def test_residency_tracks_serving_form_not_best_tier(tmp_path):
+    """A sample whose augmented copy spilled to disk serves from disk
+    even if its encoded copy is in DRAM — residency_array must report
+    the serving form's tier, and form_of must agree without IO."""
+    c = TieredCache(2_000, (0.5, 0.0, 0.5),
+                    spill_bytes=1_000_000, spill_dir=str(tmp_path),
+                    spill_split=(0.5, 0.0, 0.5))
+    arr = np.ones((40, 40), np.float32)        # 6.4KB > aug DRAM (1KB)
+    assert c.insert(3, "encoded", b"e" * 100, 100)        # DRAM
+    assert c.insert(3, "augmented", arr, arr.nbytes)      # disk
+    assert c.parts["encoded"].tier_of(3) == "dram"
+    assert c.parts["augmented"].tier_of(3) == "disk"
+    assert list(c.residency_array(4)) == [0, 0, 0, 1]
+    assert c.form_of(3) == "augmented"
+    _form, _value, tier = c.lookup_tiered(3)
+    assert tier == "disk"                      # what residency promised
+    c.close()
+
+
+def test_version_gate_skips_rebuild_on_unpromoted_disk_hits(tmp_path):
+    c = TieredCache(200, (1.0, 0.0, 0.0),
+                    spill_bytes=10_000, spill_dir=str(tmp_path),
+                    spill_split=(1.0, 0.0, 0.0))
+    c.insert(1, "encoded", b"a" * 150, 150)    # DRAM ("none" policy)
+    c.insert(2, "encoded", b"b" * 150, 150)    # overflow -> disk
+    v = c.version
+    # DRAM is full, "none" policy: the disk hit cannot promote, so
+    # repeated serves must not bump the version (the O(N) residency
+    # rebuild would otherwise run every batch in steady state)
+    for _ in range(3):
+        assert c.lookup_tiered(2)[2] == "disk"
+    assert c.version == v
+    assert c.parts["encoded"].promotions == 0
+    c.close()
+
+
+# ----------------------------------------------------------------------
+# residency-aware ODS substitution
+def test_ods_numpy_prefers_dram_resident_candidates():
+    from repro.core.ods import ODSState
+    state = ODSState.create(64, seed=1)
+    state.register_job(0)
+    state.status[:32] = 3                      # cached (augmented)
+    residency = np.zeros(64, np.uint8)
+    residency[:8] = 2                          # DRAM
+    residency[8:32] = 1                        # disk
+    state.set_residency(residency)
+    requested = np.arange(40, 48)              # all storage misses
+    batch, _ = state.sample_batch(0, requested)
+    subs = batch[np.isin(batch, np.arange(32))]
+    assert len(subs) == 8                      # all slots substituted
+    assert set(subs) == set(range(8)), \
+        "with 8 DRAM-resident candidates and 8 slots, all picks are DRAM"
+
+
+def test_ods_jax_tiered_kernel_prefers_dram():
+    jax = pytest.importorskip("jax")
+    import jax.numpy as jnp
+    from repro.core import ods_jax
+    state = ods_jax.create(64)
+    state = state._replace(
+        status=state.status.at[:32].set(3))
+    residency = jnp.zeros(64, jnp.uint8).at[:8].set(2).at[8:32].set(1)
+    _state, batch, _em = ods_jax.substitute_tiered_jit(
+        state, jnp.arange(40, 48), jax.random.key(0), 5, residency)
+    batch = np.asarray(batch)
+    assert set(batch) == set(range(8))
+
+
+# ----------------------------------------------------------------------
+# form×tier MDP
+def test_form_rates_agree_with_dsi_throughput_per_form():
+    """_form_rates is the tiered model's copy of Eqs. 1/3/5/7; it must
+    stay numerically identical to dsi_throughput's per-form rates (a
+    model fix applied to one but not the other would make solve() and
+    solve_tiered() optimize different objectives)."""
+    from repro.core.perf_model import _form_rates
+    for hw in (AZURE_NC96,):
+        for ds in (DatasetProfile("p", 500_000, 120_000.0),
+                   DatasetProfile("m", 500_000, 120_000.0,
+                                  inflation=5.12)):
+            job = JobProfile()
+            out = dsi_throughput(hw, ds, job, 0.3, 0.4, 0.3)
+            da, dd, de, dsi_s = _form_rates(hw, ds, job, hw.b_cache)
+            assert float(out.dsi_a) == pytest.approx(da)
+            assert float(out.dsi_d) == pytest.approx(dd)
+            assert float(out.dsi_e) == pytest.approx(de)
+            assert float(out.dsi_s) == pytest.approx(dsi_s)
+
+
+def test_jax_tiered_kernel_matches_base_without_residency():
+    """The shared-core refactor contract: substitute() and
+    substitute_tiered() with an all-DRAM residency rank candidates
+    identically, so the two paths can never silently diverge on the
+    bookkeeping (rollover, refcount, evict)."""
+    jax = pytest.importorskip("jax")
+    import jax.numpy as jnp
+    from repro.core import ods_jax
+    state = ods_jax.create(32)
+    state = state._replace(status=state.status.at[:12].set(3))
+    key = jax.random.key(3)
+    s1, b1, e1 = ods_jax.substitute_jit(state, jnp.arange(20, 28), key, 2)
+    s2, b2, e2 = ods_jax.substitute_tiered_jit(
+        state, jnp.arange(20, 28), key, 2,
+        jnp.full(32, 2, jnp.uint8))        # everything DRAM-resident
+    assert np.array_equal(np.asarray(b1), np.asarray(b2))
+    assert np.array_equal(np.asarray(e1), np.asarray(e2))
+    assert np.array_equal(np.asarray(s1.refcount), np.asarray(s2.refcount))
+
+
+def test_tiered_model_reduces_to_single_level():
+    from dataclasses import replace
+    hw = replace(AZURE_NC96, s_cache=40 * GB)
+    ds = DatasetProfile("t", 1_000_000, 100_000.0)
+    one = dsi_throughput(hw, ds, JobProfile(), 0.2, 0.5, 0.3).overall
+    two = dsi_throughput_tiered(hw, ds, JobProfile(), (0.2, 0.5, 0.3),
+                                (1.0, 0.0, 0.0))
+    assert float(one) == pytest.approx(float(two))
+
+
+def test_optimize_tiered_beats_dram_only_when_disk_helps():
+    from dataclasses import replace
+    hw = replace(AZURE_NC96, s_cache=40 * GB)
+    ds = DatasetProfile("t", 1_000_000, 100_000.0)
+    p0 = mdp.optimize(hw, ds)
+    tiered = mdp.optimize_tiered(
+        replace(hw, b_disk=2 * GB, s_disk=400 * GB), ds)
+    assert tiered.throughput >= p0.throughput
+    assert "|" in tiered.label
+    # no disk -> degenerate, same split and throughput as one-level
+    t0 = mdp.optimize_tiered(hw, ds)
+    assert t0.dram.label == p0.label
+    assert t0.throughput == pytest.approx(p0.throughput)
+
+
+def test_apply_partition_resizes_both_levels(tmp_path):
+    from repro.api import SenecaServer
+    ds = tiny(n=64)
+    server = SenecaServer.for_dataset(
+        ds, cache_bytes=10_000, seed=0, split=(0.5, 0.5, 0.0),
+        spill_dir=str(tmp_path), spill_bytes=20_000,
+        spill_split=(0.5, 0.5, 0.0))
+    svc = server.service
+    svc.apply_partition(mdp.Partition(0.2, 0.8, 0.0, float("nan")),
+                        mdp.Partition(0.1, 0.9, 0.0, float("nan")))
+    assert svc.cache.parts["encoded"].capacity == 2_000
+    assert svc.cache.parts["decoded"].capacity == 8_000
+    assert svc.cache.parts["encoded"].spill.capacity == 2_000
+    assert svc.cache.parts["decoded"].spill.capacity == 18_000
+    assert svc.disk_partition.label == "10-90-0"
+    server.close()
+
+
+def test_spill_resize_demotes_and_patches_metadata(tmp_path):
+    from repro.api import SenecaServer
+    ds = tiny(n=64)
+    server = SenecaServer.for_dataset(
+        ds, cache_bytes=4_000, seed=0, split=(1.0, 0.0, 0.0),
+        spill_dir=str(tmp_path), spill_bytes=4_000,
+        spill_split=(1.0, 0.0, 0.0))
+    svc = server.service
+    for k in range(4):
+        assert svc.admit(k, "encoded", bytes([k]) * 900, 900)
+    # 4 x 900B: ~4 fit in DRAM; shrink DRAM to force demotions to disk
+    svc.apply_partition(mdp.Partition(0.25, 0.5, 0.25, float("nan")))
+    part = svc.cache.parts["encoded"]
+    assert len(part.dram) + len(part.spill) <= 4
+    status = svc.backend.status_of(np.arange(4))
+    with svc.cache.lock:
+        for k in range(4):
+            if status[k] == 1:
+                assert k in part      # metadata never overstates
+    server.close()
+
+
+# ----------------------------------------------------------------------
+# FileDataset
+def test_file_dataset_matches_synthetic_and_reuses_shards(tmp_path):
+    ds = tiny(n=48)
+    root = str(tmp_path / "shards")
+    fd = FileDataset(ds, root, shard_bytes=128 * 1024)
+    assert fd.n_shards > 1
+    for i in (0, 7, 47):
+        assert fd.encoded(i) == ds.encoded(i)
+        assert fd.encoded_size(i) == ds.encoded_size(i)
+        assert fd.label(i) == ds.label(i)
+    assert np.array_equal(fd.decode(fd.encoded(3), 3),
+                          ds.decode(ds.encoded(3), 3))
+    # second construction reuses the on-disk shards
+    before = sorted(os.listdir(root))
+    fd2 = FileDataset(ds, root)
+    assert sorted(os.listdir(root)) == before
+    assert fd2.encoded(11) == ds.encoded(11)
+    # a different dataset must not silently read the wrong shards
+    with pytest.raises(ValueError):
+        FileDataset(tiny(n=16), root)
+    fd2.remove_files()
+    assert not os.path.exists(root)
+
+
+def test_file_dataset_through_remote_storage_budget(tmp_path):
+    ds = tiny(n=16)
+    fd = FileDataset(ds, str(tmp_path / "s"))
+    storage = RemoteStorage(fd, bandwidth=None)
+    assert storage.fetch(3) == ds.encoded(3)
+    assert storage.fetches == 1
+    assert storage.budget.bytes_served == len(ds.encoded(3))
+
+
+# ----------------------------------------------------------------------
+# atomic counters under multi-threaded fetch
+def test_storage_counters_are_atomic_under_threads():
+    ds = tiny(n=64)
+    storage = RemoteStorage(ds, bandwidth=None)
+    n_threads, per = 8, 50
+
+    def worker(tid):
+        for i in range(per):
+            storage.fetch((tid * per + i) % ds.n_samples)
+
+    threads = [threading.Thread(target=worker, args=(t,))
+               for t in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert storage.fetches == n_threads * per
+    expect = sum(len(ds.encoded((t * per + i) % ds.n_samples))
+                 for t in range(n_threads) for i in range(per))
+    assert storage.budget.bytes_served == expect
+
+
+# ----------------------------------------------------------------------
+# end-to-end: live pipeline over a spill-backed server, then clean close
+def test_pipeline_over_spill_server_serves_disk_hits(tmp_path):
+    from repro.api import SenecaServer
+    from repro.data.pipeline import DSIPipeline
+    ds = tiny(n=128)
+    server = SenecaServer.for_dataset(
+        ds, cache_frac=0.04, seed=0, split=(0.2, 0.8, 0.0),
+        spill_dir=str(tmp_path / "spill"),
+        spill_bytes=int(0.9 * ds.n_samples * ds.augmented_bytes()),
+        spill_split=(0.35, 0.65, 0.0))
+    storage = RemoteStorage(ds)
+    pipe = DSIPipeline(server.open_session(batch_size=16), storage,
+                       n_workers=2)
+    for _ in range(2 * (ds.n_samples // 16)):     # two epochs
+        pipe.next_batch()
+    stats = server.stats()
+    assert stats["residency_counts"]["disk"] > 0
+    assert sum(s["disk_hits"] for s in stats["spill"].values()) > 0
+    assert stats["telemetry"]["b_disk"] is not None
+    pipe.stop()
+    server.close()
+    leftovers = [f for _dp, _dn, fs in os.walk(str(tmp_path / "spill"))
+                 for f in fs]
+    assert not leftovers, leftovers
