@@ -22,7 +22,8 @@ def main() -> None:
                             fig8_validation, fig10_makespan, fig13_hitrate,
                             fig14_concurrency, fig15_ect, fig_dynamic_jobs,
                             fig_live_makespan, fig_pipeline_throughput,
-                            fig_tiered_cache, roofline_report, table6_mdp)
+                            fig_sharded, fig_tiered_cache, roofline_report,
+                            table6_mdp)
     modules = [
         ("fig3", fig3_cache_forms), ("fig4", fig4_pagecache),
         ("table6", table6_mdp), ("fig8", fig8_validation),
@@ -32,6 +33,7 @@ def main() -> None:
         ("pipeline", fig_pipeline_throughput),
         ("live", fig_live_makespan),
         ("tiered", fig_tiered_cache),
+        ("sharded", fig_sharded),
         ("roofline", roofline_report),
     ]
     only = set(args.only.split(",")) if args.only else None

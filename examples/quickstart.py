@@ -55,6 +55,21 @@ def _spill_kwargs(args, ds) -> dict:
     return {"spill_dir": args.cache_spill_dir, "spill_bytes": spill}
 
 
+def _shard_kwargs(args) -> dict:
+    """--shards N: route the cache through the sharded data plane
+    (docs/API.md \"Sharded data plane\")."""
+    if args.shards <= 1 and args.shard_transport == "sim":
+        return {}
+    return {"shards": args.shards, "shard_transport": args.shard_transport}
+
+
+def _print_shard_stats(stats) -> None:
+    for s in stats.get("shards", ()):
+        print(f"[quickstart]   shard {s['shard']}: "
+              f"hit_rate={s['hit_rate']:.3f} entries={s['entries']} "
+              f"bytes={s['bytes_used']}")
+
+
 def run_seneca(args) -> None:
     # -- the docs/API.md quickstart, verbatim ---------------------------
     ds = _make_dataset(args)
@@ -62,11 +77,12 @@ def run_seneca(args) -> None:
                                       backend=args.backend,
                                       augment_backend=args.augment_backend,
                                       repartition=args.repartition,
-                                      **_spill_kwargs(args, ds))
+                                      **_spill_kwargs(args, ds),
+                                      **_shard_kwargs(args))
     print(f"[quickstart] MDP partition: {server.partition.label} "
           f"(backend={args.backend}, executor={args.executor}, "
           f"augment={args.augment_backend}, "
-          f"repartition={args.repartition})")
+          f"repartition={args.repartition}, shards={args.shards})")
     if server.service.disk_partition is not None:
         print(f"[quickstart] spill tier: disk split "
               f"{server.service.disk_partition.label} in "
@@ -111,6 +127,7 @@ def run_seneca(args) -> None:
     if "residency_counts" in stats:
         print(f"[quickstart] residency={stats['residency_counts']} "
               f"disk_bytes_used={stats['disk_bytes_used']}")
+    _print_shard_stats(stats)
     rp = stats["repartitions"]
     if rp["applied"]:
         last = rp["last_applied"]
@@ -137,9 +154,11 @@ def run_multi(args) -> None:
                                       backend=args.backend,
                                       augment_backend=args.augment_backend,
                                       repartition=args.repartition,
-                                      **_spill_kwargs(args, ds))
+                                      **_spill_kwargs(args, ds),
+                                      **_shard_kwargs(args))
     print(f"[quickstart] MDP partition: {server.partition.label} "
-          f"({args.jobs} concurrent jobs, one shared cache)")
+          f"({args.jobs} concurrent jobs, one shared cache, "
+          f"{args.shards} shard(s))")
     rates = [900, 500, 700, 1100, 600, 800][:args.jobs] or [900]
     trace = [JobSpec(f"job{i}", arrival_s=0.4 * i, epochs=1,
                      batch_size=args.batch, gpu_rate=rates[i % len(rates)],
@@ -156,6 +175,7 @@ def run_multi(args) -> None:
     print(f"[quickstart] makespan {res.makespan:.1f}s  "
           f"ods_hit_rate={stats['ods_hit_rate']:.3f} "
           f"substitutions={stats['substitutions']}")
+    _print_shard_stats(stats)
     server.close()
     # each job consumes one whole-batch epoch pass (the runner's epoch
     # accounting — exact even when --batch does not divide the dataset)
@@ -215,6 +235,15 @@ def main() -> None:
                          "cache via the WorkloadRunner (docs/API.md "
                          "\"Multi-job workloads\") instead of the "
                          "single-job training loop")
+    ap.add_argument("--shards", type=int, default=1,
+                    help="split the cache across N consistent-hash "
+                         "shards (docs/API.md \"Sharded data plane\"); "
+                         "prints per-shard hit rates at the end")
+    ap.add_argument("--shard-transport", default="sim",
+                    choices=("sim", "process"),
+                    help="sharded data-plane transport: in-process "
+                         "deterministic shards, or one OS process per "
+                         "shard")
     ap.add_argument("--cache-spill-dir", default=None,
                     help="SSD spill directory: every cache partition "
                          "becomes a DRAM→disk tier chain sized by the "

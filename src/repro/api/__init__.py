@@ -58,6 +58,11 @@ from repro.sim.desim import (ALL_LOADERS, DALI_CPU, DALI_GPU, DSISimulator,
 from repro.workload import (Clock, JobResult, JobSpec, RealClock,
                             VirtualClock, WorkloadResult, WorkloadRunner,
                             deterministic_runner)
+# sharded data plane (docs/API.md "Sharded data plane"): consistent-hash
+# router + per-shard caches behind sim/process transports, selected via
+# SenecaConfig(shards=N, shard_transport=...)
+from repro.service import (CacheShard, ShardConfig, ShardedCache,
+                           ShardRouter)
 
 __all__ = [
     # server / session facade
@@ -90,4 +95,6 @@ __all__ = [
     # live multi-job workloads
     "WorkloadRunner", "JobSpec", "JobResult", "WorkloadResult",
     "Clock", "RealClock", "VirtualClock", "deterministic_runner",
+    # sharded data plane
+    "ShardRouter", "ShardedCache", "CacheShard", "ShardConfig",
 ]

@@ -33,7 +33,7 @@ __all__ = [
     "SamplerPolicy", "AdmissionPolicy", "EvictionPolicy",
     "OdsSampler", "NaiveSampler",
     "UnseenOnlyAdmission", "CapacityAdmission",
-    "RefcountEviction", "LruEviction",
+    "RefcountEviction", "LruEviction", "CostAwareEviction",
     "register_policy", "resolve_policy", "policy_names",
 ]
 
@@ -171,13 +171,61 @@ class LruEviction:
         return None
 
 
+class CostAwareEviction:
+    """Recompute-cost-aware eviction (GDSF, greedy-dual-size-frequency).
+
+    Each DRAM tier under this policy scores entries by
+    ``inflation + recompute_cost / nbytes`` and evicts the minimum —
+    cheap-to-rebuild bytes (an encoded sample is one storage fetch) make
+    way for expensive ones (an augmented tensor embodies fetch + decode +
+    augment).  The per-form costs are the telemetry-measured stage
+    chains (the paper's t_a / t_da terms): the service pushes fresh
+    snapshots through :meth:`refresh` as training warms up, so the
+    policy tracks the live pipeline instead of a static size heuristic.
+    """
+
+    name = "cost"
+
+    #: pre-telemetry defaults: relative stage weights, not wall seconds
+    #: (only the ratio between forms matters before the first refresh)
+    DEFAULT_COSTS = {"encoded": 1.0, "decoded": 3.0, "augmented": 4.0}
+
+    def partition_policies(self):
+        return {"encoded": "cost", "decoded": "cost", "augmented": "cost"}
+
+    def threshold(self, backend):
+        return None
+
+    def refresh(self, cache, snapshot) -> Dict[str, float]:
+        """Recompute per-form costs from a telemetry snapshot and push
+        them into the cache's "cost" tiers.  A form's cost is the
+        latency chain a miss at that form re-pays: fetch for encoded,
+        fetch+decode for decoded, fetch+decode+augment for augmented.
+        Stages telemetry has not seen yet keep their default weight."""
+        lat = snapshot.stage_latency
+        # unseen stages read as None from the EWMA map, not 0.0
+        fetch = lat.get("fetch_storage") or 0.0
+        dec = lat.get("decode") or 0.0
+        aug = lat.get("augment") or 0.0
+        costs = dict(self.DEFAULT_COSTS)
+        if fetch > 0:
+            costs["encoded"] = fetch
+            if dec > 0:
+                costs["decoded"] = fetch + dec
+                if aug > 0:
+                    costs["augmented"] = fetch + dec + aug
+        cache.set_form_costs(costs)
+        return costs
+
+
 # ----------------------------------------------------------------------
 # registry
 _REGISTRY: Dict[str, Dict[str, type]] = {
     "sampler": {"ods": OdsSampler, "naive": NaiveSampler},
     "admission": {"unseen-only": UnseenOnlyAdmission,
                   "capacity": CapacityAdmission},
-    "eviction": {"refcount": RefcountEviction, "lru": LruEviction},
+    "eviction": {"refcount": RefcountEviction, "lru": LruEviction,
+                 "cost": CostAwareEviction},
 }
 
 _PROTOCOLS = {"sampler": SamplerPolicy, "admission": AdmissionPolicy,

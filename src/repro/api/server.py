@@ -104,6 +104,14 @@ class SenecaConfig:
     repartition_cooldown: float = 1.0  # min seconds between adaptive ticks
     repartition_period: float = 0.0    # >0: background tick thread period
     telemetry_min_samples: int = 32    # per-signal floor for calibrate()
+    # sharded data plane (src/repro/service/): >1 splits the cache
+    # across N shards behind a consistent-hash router.  "sim" keeps the
+    # shards in-process (deterministic, VirtualClock-safe); "process"
+    # gives each shard its own OS process (payloads move zero-copy via
+    # codec files + np.memmap).  shards=1 + "sim" keeps the classic
+    # single TieredCache — byte-identical to the pre-shard engine.
+    shards: int = 1
+    shard_transport: str = "sim"
 
 
 class RepartitionController:
@@ -301,6 +309,8 @@ class SenecaService:
             raise ValueError(f"unknown repartition mode "
                              f"{cfg.repartition!r}; expected one of "
                              f"{REPARTITION_MODES}")
+        if cfg.shards < 1:
+            raise ValueError(f"shards must be >= 1, got {cfg.shards}")
         # base profile with the *configured* cache size: the static solve,
         # and later every calibrated re-solve, all run against this
         self.hardware = cfg.hardware
@@ -341,26 +351,55 @@ class SenecaService:
             or ("unseen-only" if cfg.use_ods else "capacity"))
         self.eviction = resolve_policy(
             "eviction", eviction or cfg.eviction or "refcount")
-        self.cache = TieredCache(
-            cfg.cache_bytes,
-            (self.partition.x_e, self.partition.x_d, self.partition.x_a),
-            evict_policies=self.eviction.partition_policies(),
-            spill_bytes=cfg.spill_bytes if self.has_spill else 0,
-            spill_dir=cfg.spill_dir if self.has_spill else None,
-            spill_split=(self.disk_partition.x_e, self.disk_partition.x_d,
-                         self.disk_partition.x_a)
-            if self.disk_partition else None)
-        self.backend = resolve_backend(backend or cfg.backend,
-                                       cfg.dataset.n_total, seed=cfg.seed)
-        self.augment = resolve_augment_backend(
-            augment_backend or cfg.augment_backend)
-        self.rng = np.random.default_rng(cfg.seed + 1)
-        self._residency_version = -1     # force the first push
-        self._samplers: Dict[int, EpochSampler] = {}
-        self._lock = threading.Lock()
-        self._refill_pending: list = []
-        self.telemetry = TelemetryAggregator()
-        self.controller = RepartitionController(self)
+        split_t = (self.partition.x_e, self.partition.x_d,
+                   self.partition.x_a)
+        spill_t = ((self.disk_partition.x_e, self.disk_partition.x_d,
+                    self.disk_partition.x_a)
+                   if self.disk_partition else None)
+        if cfg.shards > 1 or cfg.shard_transport != "sim":
+            # lazy import: repro.service must stay importable without
+            # repro.api (its shard module imports telemetry lazily for
+            # the same reason) — a top-level import here would cycle
+            from repro.service.client import ShardedCache
+            self.cache = ShardedCache(
+                cfg.cache_bytes, split_t,
+                evict_policies=self.eviction.partition_policies(),
+                spill_bytes=cfg.spill_bytes if self.has_spill else 0,
+                spill_dir=cfg.spill_dir if self.has_spill else None,
+                spill_split=spill_t,
+                shards=cfg.shards, transport=cfg.shard_transport,
+                seed=cfg.seed, admission=self.admission,
+                hardware=self.hardware, dataset_profile=cfg.dataset,
+                job=cfg.job, partition_step=cfg.partition_step,
+                # a pinned split stays pinned on every shard; an MDP
+                # split re-solves per shard over the 1/N view
+                solve_per_shard=cfg.split is None)
+        else:
+            self.cache = TieredCache(
+                cfg.cache_bytes, split_t,
+                evict_policies=self.eviction.partition_policies(),
+                spill_bytes=cfg.spill_bytes if self.has_spill else 0,
+                spill_dir=cfg.spill_dir if self.has_spill else None,
+                spill_split=spill_t)
+        try:
+            self.backend = resolve_backend(backend or cfg.backend,
+                                           cfg.dataset.n_total,
+                                           seed=cfg.seed)
+            self.augment = resolve_augment_backend(
+                augment_backend or cfg.augment_backend)
+            self.rng = np.random.default_rng(cfg.seed + 1)
+            self._residency_version = -1     # force the first push
+            self._samplers: Dict[int, EpochSampler] = {}
+            self._lock = threading.Lock()
+            self._refill_pending: list = []
+            self._batch_counter = itertools.count()
+            self.telemetry = TelemetryAggregator()
+            self.controller = RepartitionController(self)
+        except BaseException:
+            # close-after-failed-start: a half-built service must not
+            # leak spill files or shard processes
+            self.cache.close()
+            raise
 
     # legacy alias: the engine's ODS metadata (numpy state or jax adapter)
     @property
@@ -390,6 +429,12 @@ class SenecaService:
         Returns (ids, forms): forms is the uint8 status of each id, i.e.
         which tier will serve it (0 = storage fetch).
         """
+        # cost-aware eviction feedback: periodically push the latest
+        # telemetry-measured per-form recompute costs into the cache's
+        # "cost" tiers (no-op for policies without a refresh hook)
+        refresh = getattr(self.eviction, "refresh", None)
+        if refresh is not None and next(self._batch_counter) % 32 == 0:
+            refresh(self.cache, self.telemetry.snapshot())
         with self._lock:
             if self.has_spill:
                 # patch metadata for any keys the chains shed since the
@@ -433,7 +478,7 @@ class SenecaService:
         # costs this one admission — the next call re-reads.  With a
         # spill chain the disk level counts: a zero-DRAM form can still
         # cache on disk.
-        if self.cache.parts[form].total_capacity == 0:
+        if self.cache.total_capacity(form) == 0:
             return False
         with self._lock:
             if not self.admission.wants(self.backend, sample_id, form):
@@ -448,8 +493,7 @@ class SenecaService:
                 # residency inside the metadata lock (same metadata->cache
                 # nesting as apply_partition's scan, so the two serialize).
                 if self.controller.active:
-                    with self.cache.lock:
-                        ok = sample_id in self.cache.parts[form]
+                    ok = self.cache.contains(form, sample_id)
                 if ok:
                     self.backend.mark_cached(np.asarray([sample_id]),
                                              FORM_CODE[form])
@@ -482,7 +526,7 @@ class SenecaService:
         """
         entries = list(entries)
         ok = np.zeros(len(entries), bool)
-        if not entries or self.cache.parts[form].total_capacity == 0:
+        if not entries or self.cache.total_capacity(form) == 0:
             return ok
         with self._lock:
             wants = [self.admission.wants(self.backend, sid, form)
@@ -500,9 +544,9 @@ class SenecaService:
                 # same residency re-validation as admit(): a concurrent
                 # resize may have evicted entries between the insert and
                 # this deferred mark (metadata->cache lock order)
-                with self.cache.lock:
-                    live = [i for i in live
-                            if entries[i][0] in self.cache.parts[form]]
+                resident = self.cache.contains_many(
+                    form, [entries[i][0] for i in live])
+                live = [i for i, r in zip(live, resident) if r]
             if live:
                 self.backend.mark_cached(
                     np.asarray([entries[i][0] for i in live]),
@@ -548,14 +592,8 @@ class SenecaService:
         nested inside (the service's standard metadata->cache order)."""
         remarked: Dict[str, int] = {}
         regrouped: Dict[Optional[str], list] = {}
-        with self.cache.lock:     # one pass, one acquisition
-            for k in keys:
-                for form in ("augmented", "decoded", "encoded"):
-                    if k in self.cache.parts[form]:
-                        break
-                else:
-                    form = None
-                regrouped.setdefault(form, []).append(k)
+        for k, form in zip(keys, self.cache.serving_forms(keys)):
+            regrouped.setdefault(form, []).append(k)
         for form, ids in regrouped.items():
             arr = np.asarray(ids, np.int64)
             if form is None:
@@ -631,16 +669,11 @@ class SenecaService:
         pipelines use to decide whether producing/refilling a form can
         possibly land anywhere — must match ``admit``'s own
         total_capacity fast path, or a disk-only form never refills."""
-        return self.cache.parts[form].total_capacity
+        return self.cache.total_capacity(form)
 
     def tier_free_bytes(self, form: str) -> int:
         """Whole-chain free bytes for ``form`` (refill top-up sizing)."""
-        with self.cache.lock:
-            part = self.cache.parts[form]
-            free = part.free_bytes
-            if part.spill is not None:
-                free += part.spill.free_bytes
-            return free
+        return self.cache.chain_free_bytes(form)
 
     # ------------------------------------------------------------------
     def close(self) -> None:
@@ -673,6 +706,9 @@ class SenecaService:
             "repartitions": self.controller.summary(),
             "telemetry": self.telemetry.as_dict(),
         })
+        shard_stats = getattr(self.cache, "shard_stats", None)
+        if shard_stats is not None:
+            out["shards"] = shard_stats()
         return out
 
     def _spill_stats(self) -> Dict[str, object]:
@@ -787,6 +823,7 @@ class SenecaServer:
         self._ids = itertools.count()
         self._sessions: Dict[int, Session] = {}
         self._lock = threading.Lock()
+        self._closed = False
 
     # ------------------------------------------------------------------
     @classmethod
@@ -863,15 +900,21 @@ class SenecaServer:
         return out
 
     def close(self) -> None:
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True
         # stop the controller first: the session-close cascade must not
         # trigger re-solves/resizes of a cache that is being torn down
         self.service.controller.stop()
         with self._lock:
             live = list(self._sessions.values())
-        for sess in live:
-            sess.close()
-        # last: drop the spill tier's files (no-leaked-files contract)
-        self.service.close()
+        try:
+            for sess in live:
+                sess.close()
+        finally:
+            # last: drop the spill tier's files (no-leaked-files contract)
+            self.service.close()
 
     # ------------------------------------------------------------------
     def __enter__(self) -> "SenecaServer":

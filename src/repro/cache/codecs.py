@@ -16,6 +16,8 @@ to survive a restart.
 """
 from __future__ import annotations
 
+import os
+from dataclasses import dataclass
 from typing import Any, Protocol, Tuple, runtime_checkable
 
 import numpy as np
@@ -93,3 +95,44 @@ def codec_for(form: str) -> Codec:
 
 def register_codec(form: str, factory: type) -> None:
     _CODECS[form] = factory
+
+
+# ---------------------------------------------------------------------------
+# Cross-process payload currency (the sharded data plane's zero-copy path).
+#
+# A shard process never pickles an ndarray payload over its control pipe:
+# it dumps the entry with the form's codec into a shared exchange
+# directory and sends this small :class:`PayloadRef` instead.  The peer
+# maps the file (``np.memmap`` for ndarrays) and unlinks it — on Linux
+# the mapping keeps the pages live, so the bytes move through the page
+# cache, not the pipe.
+
+@dataclass(frozen=True)
+class PayloadRef:
+    """A cache payload parked in a file: ``(form, path, nbytes, meta)``
+    where ``meta`` is the form codec's load metadata."""
+
+    form: str
+    path: str
+    nbytes: int
+    meta: Any = None
+
+
+def ship_payload(form: str, value: Any, path: str) -> PayloadRef:
+    """Serialize ``value`` with ``form``'s codec into ``path`` and
+    return the ref the receiving process redeems."""
+    nbytes, meta = codec_for(form).dump(value, path)
+    return PayloadRef(form, path, nbytes, meta)
+
+
+def receive_payload(ref: PayloadRef, unlink: bool = True) -> Any:
+    """Redeem a :class:`PayloadRef`: load (memmap) the value, then
+    unlink the exchange file so nothing accumulates — safe because the
+    mapping pins the pages until the array is dropped."""
+    value = codec_for(ref.form).load(ref.path, ref.meta)
+    if unlink:
+        try:
+            os.unlink(ref.path)
+        except OSError:
+            pass
+    return value

@@ -299,6 +299,7 @@ class TieredCache:
                                         spills["augmented"]),
         }
         self.lock = threading.Lock()
+        self._closed = False
         # misses counted at lookup granularity: a key absent from every
         # partition is ONE miss, not zero (the partitions are only probed
         # via __contains__) and not three
@@ -407,6 +408,59 @@ class TieredCache:
                 if key in self.parts[form]:
                     return form
             return None
+
+    # -- containment / capacity queries --------------------------------
+    # The service layer's window onto the cache.  These (not `parts` /
+    # `lock` pokes) are the contract a drop-in cache implementation —
+    # e.g. the sharded service client — must satisfy.
+
+    def contains(self, form: str, key: int) -> bool:
+        """Is ``key`` resident (any tier) in ``form``'s partition?"""
+        with self.lock:
+            return key in self.parts[form]
+
+    def contains_many(self, form: str, keys) -> List[bool]:
+        """Batch :meth:`contains` under one lock acquisition."""
+        with self.lock:
+            part = self.parts[form]
+            return [k in part for k in keys]
+
+    def serving_forms(self, keys) -> List[Optional[str]]:
+        """Batch :meth:`form_of` under one lock acquisition: per key,
+        the most-processed resident form (or None)."""
+        out: List[Optional[str]] = []
+        with self.lock:
+            for k in keys:
+                for form in ("augmented", "decoded", "encoded"):
+                    if k in self.parts[form]:
+                        out.append(form)
+                        break
+                else:
+                    out.append(None)
+        return out
+
+    def total_capacity(self, form: str) -> int:
+        """DRAM + spill capacity of ``form``'s tier chain (bytes)."""
+        return self.parts[form].total_capacity
+
+    def chain_free_bytes(self, form: str) -> int:
+        """Free bytes across ``form``'s whole tier chain."""
+        with self.lock:
+            part = self.parts[form]
+            free = part.free_bytes
+            if part.spill is not None:
+                free += part.spill.free_bytes
+            return free
+
+    def set_form_costs(self, costs: Dict[str, float]) -> None:
+        """Push telemetry-measured recompute costs (seconds per entry)
+        into each form's "cost"-policy DRAM tier; no-op for other
+        policies (the GDSF eviction satellite's feedback path)."""
+        with self.lock:
+            for form, cost in costs.items():
+                dram = self.parts[form].dram
+                if dram.policy == "cost" and cost and cost > 0:
+                    dram.set_cost(float(cost))
 
     def take_evicted(self) -> List[int]:
         """Drain the keys the chains evicted as a side effect (spill
@@ -550,8 +604,23 @@ class TieredCache:
     def close(self) -> None:
         """Tear down the spill area: every entry file is unlinked and
         the per-form directories removed (the no-leaked-files contract
-        asserted by the tiered-cache benchmark and CI)."""
+        asserted by the tiered-cache benchmark and CI).
+
+        Idempotent and exception-safe: shard teardown reaches here from
+        several paths (transport close, failed server construction,
+        ``with`` exits), so a second call is a no-op and an OSError
+        from one form's cleanup doesn't abort the others."""
         with self.lock:
+            if self._closed:
+                return
+            failed = False
             for part in self.parts.values():
                 if part.spill is not None:
-                    part.spill.clear()
+                    try:
+                        part.spill.clear()
+                    except OSError:
+                        part.spill.io_errors += 1
+                        failed = True
+            # only latch closed once every spill dir actually emptied,
+            # so a transient IO failure can be retried by a later close
+            self._closed = not failed

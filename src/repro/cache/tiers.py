@@ -20,6 +20,7 @@ next tier; a terminal tier returns ``value=None`` (nothing consumes it).
 """
 from __future__ import annotations
 
+import heapq
 import os
 from collections import OrderedDict
 from dataclasses import dataclass
@@ -69,13 +70,67 @@ class DramTier:
     """In-memory dict store with byte accounting + LRU order (the
     original ``CachePartition`` engine, extracted verbatim)."""
 
+    #: policies that make room inside put() by evicting; the others
+    #: ("none"/"refcount") reject inserts that do not fit immediately
+    MAKES_ROOM = ("lru", "cost")
+
     def __init__(self, capacity_bytes: int, evict_policy: str = "none"):
-        assert evict_policy in ("none", "lru", "refcount")
+        assert evict_policy in ("none", "lru", "refcount", "cost")
         self.capacity = int(capacity_bytes)
         self.policy = evict_policy
         self._data: "OrderedDict[int, Any]" = OrderedDict()
         self._sizes: Dict[int, int] = {}
         self.stats = PartitionStats()
+        # "cost" (GDSF, greedy-dual-size-frequency): every entry carries
+        # priority L + recompute_cost/nbytes; eviction pops the minimum
+        # and raises the inflation floor L to the victim's priority, so
+        # long-untouched entries age out while expensive-to-recompute
+        # ones persist.  The heap is lazily invalidated: _pri holds the
+        # live priority, stale heap items are skipped on pop.
+        self._pri: Dict[int, float] = {}
+        self._heap: List[Tuple[float, int]] = []
+        self._inflation = 0.0
+        #: seconds to rebuild one entry of this form from storage (the
+        #: telemetry-measured t_da/t_a chain), pushed by
+        #: TieredCache.set_form_costs; 1.0 until telemetry warms up
+        self.recompute_cost = 1.0
+
+    # -- "cost" (GDSF) bookkeeping -------------------------------------
+    def set_cost(self, seconds: float) -> None:
+        """Update the recompute cost feeding future priorities (existing
+        entries re-score on their next touch)."""
+        self.recompute_cost = max(float(seconds), 1e-9)
+
+    def _touch(self, key: int, nbytes: int) -> None:
+        pri = self._inflation + self.recompute_cost / max(nbytes, 1)
+        self._pri[key] = pri
+        heapq.heappush(self._heap, (pri, key))
+
+    def _evict_min_cost(self) -> Tuple[int, Any, int]:
+        """Pop the minimum-priority live entry (skipping stale heap
+        items) and raise the inflation floor to its priority."""
+        while self._heap:
+            pri, k = heapq.heappop(self._heap)
+            if k in self._data and self._pri.get(k) == pri:
+                self._pri.pop(k, None)
+                self._inflation = pri
+                v = self._data.pop(k)
+                nb = self._sizes.pop(k)
+                return k, v, nb
+        # heap drained with live entries left (shouldn't happen; the
+        # heap holds at least one item per live key) — FIFO fallback
+        k, v = self._data.popitem(last=False)
+        self._pri.pop(k, None)
+        return k, v, self._sizes.pop(k)
+
+    def _evict_victim(self) -> Tuple[int, Any, int]:
+        """Remove and return one entry in policy order: min GDSF
+        priority for "cost", LRU order for "lru" (move_to_end keeps the
+        OrderedDict sorted by recency), insertion/FIFO otherwise."""
+        if self.policy == "cost":
+            return self._evict_min_cost()
+        k, v = self._data.popitem(last=False)
+        return k, v, self._sizes.pop(k)
 
     def __contains__(self, key: int) -> bool:
         return key in self._data
@@ -94,6 +149,8 @@ class DramTier:
         self.stats.hits += 1
         if self.policy == "lru":
             self._data.move_to_end(key)
+        elif self.policy == "cost":
+            self._touch(key, self._sizes[key])
         return v
 
     def peek(self, key: int, default: Any = None) -> Any:
@@ -103,11 +160,11 @@ class DramTier:
 
     def admits(self, nbytes: int) -> bool:
         """Could ``put`` accept an entry of ``nbytes`` right now?  Only
-        "lru" makes room inside put(); "none"/"refcount" reject when
-        full, so the entry must fit immediately."""
+        "lru"/"cost" make room inside put(); "none"/"refcount" reject
+        when full, so the entry must fit immediately."""
         if self.capacity == 0 or nbytes > self.capacity:
             return False
-        return self.policy == "lru" or self.free_bytes >= nbytes
+        return self.policy in self.MAKES_ROOM or self.free_bytes >= nbytes
 
     def put(self, key: int, value: Any, nbytes: int) -> Evicted:
         """Insert; returns evicted entries (never evicts under 'none' —
@@ -119,10 +176,10 @@ class DramTier:
         if key in self._data:
             del self._data[key]
             self.stats.bytes_used -= self._sizes.pop(key)
+            self._pri.pop(key, None)
         while self.stats.bytes_used + nbytes > self.capacity:
-            if self.policy == "lru" and self._data:
-                k, v = self._data.popitem(last=False)
-                nb = self._sizes.pop(k)
+            if self.policy in self.MAKES_ROOM and self._data:
+                k, v, nb = self._evict_victim()
                 self.stats.bytes_used -= nb
                 self.stats.evictions += 1
                 evicted.append((k, v, nb))
@@ -132,16 +189,18 @@ class DramTier:
         self._sizes[key] = nbytes
         self.stats.bytes_used += nbytes
         self.stats.inserts += 1
+        if self.policy == "cost":
+            self._touch(key, nbytes)
         return evicted
 
     def set_capacity(self, capacity_bytes: int) -> Evicted:
         """Resize live; returns the entries evicted to fit (policy order:
-        LRU order for "lru", insertion/FIFO order otherwise)."""
+        LRU order for "lru", min GDSF priority for "cost",
+        insertion/FIFO order otherwise)."""
         self.capacity = int(capacity_bytes)
         evicted: Evicted = []
         while self.stats.bytes_used > self.capacity and self._data:
-            k, v = self._data.popitem(last=False)
-            nb = self._sizes.pop(k)
+            k, v, nb = self._evict_victim()
             self.stats.bytes_used -= nb
             self.stats.evictions += 1
             evicted.append((k, v, nb))
@@ -151,6 +210,7 @@ class DramTier:
         if key in self._data:
             del self._data[key]
             self.stats.bytes_used -= self._sizes.pop(key)
+            self._pri.pop(key, None)
             self.stats.evictions += 1
             return True
         return False
@@ -163,6 +223,7 @@ class DramTier:
             return None
         v = self._data.pop(key)
         nb = self._sizes.pop(key)
+        self._pri.pop(key, None)
         self.stats.bytes_used -= nb
         return v, nb
 

@@ -6,7 +6,7 @@ pass, well under the paper's "<1s" budget.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, replace
 from typing import Optional, Tuple
 
 import numpy as np
@@ -141,6 +141,40 @@ def optimize_tiered(hw: HardwareProfile, ds: DatasetProfile,
 
 def replace_throughput(p: Partition, thr: float) -> Partition:
     return Partition(p.x_e, p.x_d, p.x_a, thr)
+
+
+# ---------------------------------------------------------------------------
+# Per-shard solves (the sharded data plane, src/repro/service/)
+# ---------------------------------------------------------------------------
+
+def shard_view(hw: HardwareProfile, ds: DatasetProfile, n_shards: int
+               ) -> Tuple[HardwareProfile, DatasetProfile]:
+    """One shard's view of (hardware, dataset) for a shard-local solve.
+
+    The consistent-hash ring divides both the capacity (each shard owns
+    1/N of the cache and spill budget) and the key space (each shard
+    owns ~1/N of the samples), so capacity fields and the population
+    scale down together — the coverage ratios the model's miss-rate
+    terms consume are preserved.  Bandwidth/rate fields stay whole:
+    each request still sees the full channel.
+    """
+    n = max(int(n_shards), 1)
+    if n == 1:
+        return hw, ds
+    return (replace(hw, s_cache=hw.s_cache / n, s_disk=hw.s_disk / n),
+            replace(ds, n_total=max(int(np.ceil(ds.n_total / n)), 1)))
+
+
+def optimize_shard(hw: HardwareProfile, ds: DatasetProfile,
+                   job: Optional[JobProfile] = None, n_shards: int = 1,
+                   step: float = 0.01, tiered: bool = False):
+    """Form(×tier) MDP for one shard of an N-way sharded cache: the
+    global solve re-run on the shard's 1/N view.  Returns a
+    :class:`Partition` (or :class:`TieredPartition` with ``tiered``)."""
+    shw, sds = shard_view(hw, ds, n_shards)
+    if tiered:
+        return optimize_tiered(shw, sds, job, step)
+    return optimize(shw, sds, job, step)
 
 
 class IncrementalSolver:

@@ -208,6 +208,28 @@ class ODSState:
         return self.hits / total if total else 0.0
 
 
+def merge_residency(parts) -> np.ndarray:
+    """Merge per-shard residency (or status) arrays into the global
+    view the ODS substitution sampler consumes.
+
+    Shards own disjoint key ranges (the consistent-hash ring maps every
+    sample to exactly one shard), so each sample is nonzero in at most
+    one shard's array and an elementwise maximum is an exact merge —
+    while also being safe under transient double-residency (a key mid-
+    migration reports its best tier).
+    """
+    arrays = [np.asarray(p) for p in parts]
+    if not arrays:
+        raise ValueError("merge_residency needs at least one shard array")
+    out = arrays[0].copy()
+    for a in arrays[1:]:
+        if a.shape != out.shape:
+            raise ValueError(
+                f"shard array shapes differ: {a.shape} vs {out.shape}")
+        np.maximum(out, a, out=out)
+    return out
+
+
 class EpochSampler:
     """Per-job pseudo-random epoch permutation, consumed batch by batch."""
 

@@ -71,6 +71,29 @@ class SyntheticDataset:
         return self.augmented_bytes(dtype_size) / self.mean_encoded_bytes
 
 
+@dataclass(frozen=True)
+class DecodeHeavyDataset(SyntheticDataset):
+    """A :class:`SyntheticDataset` whose decode burns extra CPU inside
+    the GIL — a pure-Python byte fold over the encoded payload.
+
+    Decode time scales with ``decode_work`` irrespective of image size,
+    so the sharded-data-plane benchmark can dial CPU-bound decode cost
+    without inflating cache footprints.  Still frozen and picklable, so
+    it ships to spawned shard processes unchanged.
+    """
+
+    decode_work: int = 16_384    # payload bytes folded per decode
+
+    def decode(self, encoded: bytes, sample_id: int) -> np.ndarray:
+        acc = 0
+        for b in encoded[:self.decode_work]:   # deliberate: holds the GIL
+            acc = (acc * 31 + b) & 0xFFFFFFFF
+        img = super().decode(encoded, sample_id)
+        # fold the checksum in so the work cannot be dead-code-eliminated
+        # and stays deterministic per (payload, id)
+        return ((img.astype(np.int32) + acc % 7) % 256).astype(np.uint8)
+
+
 class FileDataset:
     """Sharded on-disk materialization of a :class:`SyntheticDataset`.
 

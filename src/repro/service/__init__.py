@@ -1,0 +1,25 @@
+"""The disaggregated Seneca data plane (tf.data-service-style).
+
+A consistent-hash :class:`ShardRouter` maps sample keys to N
+:class:`CacheShard` instances — each with its own tiered cache,
+shard-local form×tier MDP solve, and telemetry — behind a small
+request/response protocol with two interchangeable transports:
+in-process simulation (deterministic under the VirtualClock) and one
+OS process per shard (payloads moved zero-copy via codec files +
+``np.memmap``).  :class:`ShardedCache` is the client: a drop-in for
+``TieredCache`` that ``SenecaServer(shards=N, shard_transport=...)``
+constructs, so sessions and pipelines work unchanged.  See docs/API.md
+"Sharded data plane".
+"""
+from repro.service.client import ShardedCache
+from repro.service.proto import Request, Response
+from repro.service.router import ShardRouter
+from repro.service.shard import CacheShard, ShardConfig
+from repro.service.transport import (ProcessTransport, SimTransport,
+                                     TRANSPORTS, make_transport)
+
+__all__ = [
+    "ShardRouter", "ShardedCache", "CacheShard", "ShardConfig",
+    "Request", "Response", "SimTransport", "ProcessTransport",
+    "TRANSPORTS", "make_transport",
+]

@@ -1,0 +1,174 @@
+"""Shard transports: how protocol requests reach the shard fleet.
+
+* :class:`SimTransport` — shards live as plain objects in the calling
+  process and ``call`` is a direct method invocation on the caller's
+  thread.  Zero concurrency of its own, which is the point: under the
+  :class:`~repro.workload.clock.VirtualClock` turn discipline every
+  shard call executes synchronously inside the caller's turn, so
+  sharded runs are byte-for-byte deterministic.
+* :class:`ProcessTransport` — one OS process per shard (``spawn``
+  context: the parent runs worker threads, and forking a threaded
+  process is undefined behavior).  Control messages (pickled
+  Request/Response) travel over one duplex pipe per shard, guarded by a
+  per-shard lock; bulk payloads travel as
+  :class:`~repro.cache.codecs.PayloadRef` files through the exchange
+  directory (memmap + unlink — the page cache, not the pipe, carries
+  the bytes).
+
+Both expose the same three members (``call``, ``close``,
+``wants_refs``), so the client cannot tell them apart.
+"""
+from __future__ import annotations
+
+import multiprocessing as mp
+import threading
+from typing import List, Sequence
+
+from repro.service import proto
+from repro.service.shard import CacheShard, ShardConfig
+
+TRANSPORTS = ("sim", "process")
+
+
+class SimTransport:
+    """In-process shards; deterministic and free."""
+
+    name = "sim"
+    #: payloads stay live Python objects — no exchange-dir indirection
+    wants_refs = False
+
+    def __init__(self, configs: Sequence[ShardConfig]):
+        self.shards: List[CacheShard] = []
+        try:
+            for cfg in configs:
+                self.shards.append(CacheShard(cfg))
+        except BaseException:
+            self.close()
+            raise
+
+    def call(self, shard_id: int, req: proto.Request) -> proto.Response:
+        return self.shards[shard_id].handle(req)
+
+    def close(self) -> None:
+        for shard in self.shards:
+            shard.close()
+
+
+def _shard_main(cfg: ShardConfig, conn) -> None:
+    """Child-process entry: build the shard, report readiness, then
+    serve the pipe until CLOSE/EOF.  The cache is torn down on every
+    exit path so a dying shard leaks no spill files."""
+    try:
+        shard = CacheShard(cfg)
+    except BaseException as e:
+        try:
+            conn.send(proto.Response(
+                False, error=f"{type(e).__name__}: {e}"))
+        finally:
+            conn.close()
+        return
+    conn.send(proto.Response(True, value="ready"))
+    try:
+        while True:
+            try:
+                req = conn.recv()
+            except (EOFError, OSError):
+                break
+            resp = shard.handle(req)
+            try:
+                conn.send(resp)
+            except (BrokenPipeError, OSError):
+                break
+            if req.op == proto.OP_CLOSE:
+                break
+    finally:
+        shard.close()
+        conn.close()
+
+
+class ProcessTransport:
+    """One spawned OS process per shard, request/response over a pipe.
+
+    Thread-safe per shard: a lock serializes each pipe (concurrent
+    callers to *different* shards proceed in parallel — that is the
+    transport's entire performance story).  Construction blocks on a
+    readiness handshake so a shard that fails to build (bad spill dir,
+    unpicklable config) surfaces as an exception here, not a hang on
+    first call; a partially built fleet is torn down before the raise.
+    """
+
+    name = "process"
+    wants_refs = True
+
+    def __init__(self, configs: Sequence[ShardConfig],
+                 start_method: str = "spawn",
+                 start_timeout: float = 120.0):
+        ctx = mp.get_context(start_method)
+        self._procs: list = []
+        self._conns: list = []
+        self._locks: List[threading.Lock] = []
+        self._closed = False
+        try:
+            for cfg in configs:
+                parent, child = ctx.Pipe()
+                proc = ctx.Process(
+                    target=_shard_main, args=(cfg, child),
+                    name=f"seneca-shard-{cfg.shard_id}", daemon=True)
+                proc.start()
+                child.close()
+                self._procs.append(proc)
+                self._conns.append(parent)
+                self._locks.append(threading.Lock())
+            for i, conn in enumerate(self._conns):
+                if not conn.poll(start_timeout):
+                    raise RuntimeError(
+                        f"shard {i} not ready within {start_timeout}s")
+                resp = conn.recv()
+                if not resp.ok:
+                    raise RuntimeError(
+                        f"shard {i} failed to start: {resp.error}")
+        except BaseException:
+            self.close()
+            raise
+
+    def call(self, shard_id: int, req: proto.Request) -> proto.Response:
+        if self._closed:
+            raise RuntimeError("transport is closed")
+        with self._locks[shard_id]:
+            conn = self._conns[shard_id]
+            conn.send(req)
+            return conn.recv()
+
+    def close(self) -> None:
+        """Idempotent orderly shutdown: CLOSE every shard (so spill
+        files are cleared by the owning process), then join, escalating
+        to terminate for stragglers."""
+        if self._closed:
+            return
+        self._closed = True
+        for i, conn in enumerate(self._conns):
+            with self._locks[i]:
+                try:
+                    conn.send(proto.Request(proto.OP_CLOSE))
+                    if conn.poll(5.0):
+                        conn.recv()
+                except (BrokenPipeError, OSError):
+                    pass
+                try:
+                    conn.close()
+                except OSError:
+                    pass
+        for proc in self._procs:
+            proc.join(timeout=10.0)
+            if proc.is_alive():
+                proc.terminate()
+                proc.join(timeout=5.0)
+
+
+def make_transport(name: str, configs: Sequence[ShardConfig], **kwargs):
+    if name == "sim":
+        return SimTransport(configs)
+    if name == "process":
+        return ProcessTransport(configs, **kwargs)
+    raise ValueError(f"unknown shard transport {name!r}; "
+                     f"expected one of {TRANSPORTS}")

@@ -118,6 +118,12 @@ class WorkloadResult:
     timed_out: bool = False          # run(timeout=) expired, jobs cut short
 
     @property
+    def shard_stats(self) -> Optional[List[Dict]]:
+        """Per-shard cache stats when the server ran a sharded data
+        plane (``SenecaConfig(shards=N)``), else None."""
+        return (self.stats or {}).get("shards")
+
+    @property
     def total_samples(self) -> int:
         return sum(j.samples for j in self.jobs)
 
@@ -185,6 +191,16 @@ class WorkloadRunner:
         self.record_ids = record_ids
         self.seed = seed
         self._stop = threading.Event()
+        if isinstance(self.clock, VirtualClock) and server is not None:
+            # determinism only holds for in-process shards: the sim
+            # transport runs shard calls synchronously on the calling
+            # job's turn, while process shards answer on OS scheduling
+            transport = getattr(server.service.cache, "transport_name", "sim")
+            if transport != "sim":
+                raise ValueError(
+                    "deterministic VirtualClock runs require the 'sim' "
+                    f"shard transport, not {transport!r} (process shards "
+                    "reply on wall-clock OS scheduling)")
 
     # ------------------------------------------------------------------
     def cancel(self) -> None:

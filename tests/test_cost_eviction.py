@@ -1,0 +1,157 @@
+"""Recompute-cost-aware ("cost", GDSF) eviction.
+
+Tier-level: the DRAM tier under ``policy="cost"`` scores entries by
+``inflation + recompute_cost / nbytes``, evicts the minimum, and ages
+the pool by raising the inflation floor to each victim's priority.
+Policy-level: ``resolve_policy("eviction", "cost")`` wires every
+partition to the cost engine and ``refresh`` converts telemetry stage
+latencies into per-form recompute costs (fetch / fetch+decode /
+fetch+decode+augment chains).
+"""
+import numpy as np
+import pytest
+
+from repro.api import SenecaServer, resolve_policy
+from repro.api.policies import CostAwareEviction
+from repro.api.telemetry import TelemetryAggregator
+from repro.cache.store import TieredCache
+from repro.cache.tiers import DramTier
+from repro.data.pipeline import DSIPipeline
+from repro.data.storage import RemoteStorage
+from repro.data.synthetic import tiny
+
+
+# ----------------------------------------------------------------------
+# DramTier "cost" mechanics
+def test_cost_tier_evicts_cheapest_per_byte_first():
+    tier = DramTier(100, "cost")
+    tier.put(1, b"a", 50)        # priority = cost/50 (small = expensive/B)
+    tier.put(2, b"b", 25)        # priority = cost/25
+    tier.put(3, b"c", 25)
+    # making room must pick the *largest* entry (lowest
+    # recompute-cost-per-byte), not the oldest
+    evicted = tier.put(4, b"d", 40)
+    assert [k for k, _v, _n in evicted] == [1]
+    assert 2 in tier and 3 in tier and 4 in tier
+
+
+def test_cost_tier_respects_recompute_cost():
+    tier = DramTier(100, "cost")
+    tier.put(1, b"cheap", 10)
+    tier.set_cost(100.0)          # later entries are pricey to rebuild
+    tier.put(2, b"dear", 10)
+    evicted = tier.set_capacity(15)
+    # same size, but entry 1 scored with cost 1.0 and entry 2 with 100.0
+    assert [k for k, _v, _n in evicted] == [1]
+    assert 2 in tier
+
+
+def test_cost_tier_touch_rescues_hot_entries():
+    tier = DramTier(30, "cost")
+    tier.put(1, b"a", 10)
+    tier.put(2, b"b", 10)
+    tier.put(3, b"c", 10)
+    evicted = tier.put(4, b"d", 10)   # evicts 1, raises inflation
+    assert [k for k, _v, _n in evicted] == [1]
+    # a touched survivor re-scores at the inflated floor, so the next
+    # victim is the untouched old entry, not the hot one
+    assert tier.get(2) == b"b"
+    evicted = tier.put(5, b"e", 10)
+    assert [k for k, _v, _n in evicted] == [3]
+    assert 2 in tier
+
+
+def test_cost_tier_inflation_ages_old_entries():
+    tier = DramTier(20, "cost")
+    tier.put(1, b"a", 10)
+    tier.put(2, b"b", 10)
+    tier.put(3, b"c", 10)         # evicts 1, inflation rises to 1's pri
+    assert 1 not in tier
+    # a fresh entry now scores above the pre-inflation survivors, so the
+    # next victim is the remaining old entry, not the newcomer
+    evicted = tier.put(4, b"d", 10)
+    assert [k for k, _v, _n in evicted] == [2]
+    assert 3 in tier and 4 in tier
+    assert tier._inflation > 0.0
+
+
+def test_cost_tier_accounting_stays_consistent():
+    tier = DramTier(64, "cost")
+    rng = np.random.default_rng(0)
+    for i in range(200):
+        k = int(rng.integers(0, 20))
+        op = int(rng.integers(0, 3))
+        if op == 0:
+            tier.put(k, bytes(2), int(rng.integers(1, 32)))
+        elif op == 1:
+            tier.get(k)
+        else:
+            tier.remove(k)
+    assert tier.stats.bytes_used == sum(tier._sizes.values())
+    assert tier.stats.bytes_used <= tier.capacity
+    assert set(tier._pri) == set(tier._data)
+
+
+# ----------------------------------------------------------------------
+# policy registration + telemetry-fed refresh
+def test_cost_policy_resolves_and_partitions():
+    pol = resolve_policy("eviction", "cost")
+    assert isinstance(pol, CostAwareEviction) and pol.name == "cost"
+    assert set(pol.partition_policies().values()) == {"cost"}
+    assert pol.threshold(None) is None
+
+
+def test_cost_refresh_builds_stage_chains():
+    cache = TieredCache(3_000, (0.4, 0.3, 0.3),
+                        evict_policies={"encoded": "cost",
+                                        "decoded": "cost",
+                                        "augmented": "cost"})
+    tele = TelemetryAggregator()
+    pol = CostAwareEviction()
+    # cold telemetry (all-None latencies): defaults survive, no crash
+    costs = pol.refresh(cache, tele.snapshot())
+    assert costs == CostAwareEviction.DEFAULT_COSTS
+    for _ in range(4):
+        tele.record_stage("fetch_storage", 0.010)
+        tele.record_stage("decode", 0.004)
+        tele.record_stage("augment", 0.002)
+    costs = pol.refresh(cache, tele.snapshot())
+    assert costs["encoded"] == pytest.approx(0.010)
+    assert costs["decoded"] == pytest.approx(0.014)
+    assert costs["augmented"] == pytest.approx(0.016)
+    for form, cost in costs.items():
+        assert cache.parts[form].dram.recompute_cost == \
+            pytest.approx(cost), form
+    cache.close()
+
+
+def test_cost_refresh_partial_telemetry_keeps_defaults():
+    cache = TieredCache(3_000, (0.4, 0.3, 0.3),
+                        evict_policies={"encoded": "cost",
+                                        "decoded": "cost",
+                                        "augmented": "cost"})
+    tele = TelemetryAggregator()
+    tele.record_stage("fetch_storage", 0.010)
+    costs = CostAwareEviction().refresh(cache, tele.snapshot())
+    assert costs["encoded"] == pytest.approx(0.010)
+    # decode/augment unseen: their chain keeps the default weights
+    assert costs["decoded"] == CostAwareEviction.DEFAULT_COSTS["decoded"]
+    assert costs["augmented"] == \
+        CostAwareEviction.DEFAULT_COSTS["augmented"]
+    cache.close()
+
+
+def test_server_runs_with_cost_eviction():
+    ds = tiny(n=64)
+    server = SenecaServer.for_dataset(ds, cache_frac=0.25, seed=0,
+                                      eviction="cost")
+    with server.open_session(batch_size=16) as sess:
+        pipe = DSIPipeline(sess, RemoteStorage(ds), n_workers=2)
+        for _ in range(8):         # > 1 epoch: evictions + refresh tick
+            batch = pipe.next_batch()
+            assert batch["images"].shape[0] == 16
+        stats = sess.stats()
+        pipe.stop()
+    assert stats["hits"] + stats["misses"] > 0
+    assert server.stats()["policies"]["eviction"] == "cost"
+    server.close()
