@@ -1,0 +1,184 @@
+"""Device-resident preprocessing: fused decode+augment + HBM tier vs
+the host pipeline.
+
+The device route (ISSUE-7) removes the host from the steady-state data
+path twice over: cold samples run decode and augment fused in one
+Pallas launch fed by per-sample scalars (no decoded image, no payload
+upload), and warm samples are served straight out of the device-side
+HBM cache tier with zero host→device bytes.  This benchmark measures
+both claims on the *live* stack:
+
+* ``pallas-augment`` — the strongest host configuration from
+  fig_pipeline_throughput: stage-parallel executor, host decode,
+  Pallas-batched augment, DRAM cache;
+* ``fused-device`` — the device executor with the *same* host DRAM
+  budget plus a device cache tier sized for the augmented working set.
+
+The two modes share the sampler, the admission/eviction policies
+(``capacity``/``lru`` — the single-job benchmark must let augmented
+rows persist across epochs; the paper's multi-job unseen-only/refcount
+reuse semantics are exercised by the workload suite), the storage
+token bucket, and the host DRAM bytes.  The device mode's only edge is
+the HBM tier — which is precisely the feature under test: Seneca's
+pitch is that idle accelerator memory is cache capacity the host
+pipeline structurally does not have, and the constrained-storage
+regime below (DRAM too small for the working set) is the regime the
+paper targets.
+
+Both modes warm one full epoch (jit traces + cache fill) and then
+report the median samples/s of three steady-state timed windows.  A
+separate small all-resident configuration runs two epochs and records
+the ``"h2d"`` telemetry channel around epoch 2 — the zero-copy claim
+is an exact byte count, not a rate.
+
+Emits ``BENCH_device.json``; ``--check`` asserts fused-device beats
+the pallas-augment baseline AND that the all-HBM-hit epoch moved zero
+h2d payload bytes (the CI smoke gate).
+"""
+from __future__ import annotations
+
+import statistics
+import time
+from typing import Dict, List, Tuple
+
+from benchmarks.common import write_bench_json
+from repro.api import SenecaServer
+from repro.data.pipeline import DSIPipeline
+from repro.data.storage import RemoteStorage
+from repro.data.synthetic import tiny
+
+
+def run_mode(label: str, *, n_samples: int, batch: int, windows: int,
+             window_batches: int, bandwidth: float, n_workers: int,
+             cache_frac: float, seed: int = 0) -> Dict:
+    ds = tiny(n=n_samples)
+    budget = int(cache_frac * n_samples * ds.augmented_bytes())
+    common = dict(cache_bytes=budget, seed=seed, use_ods=False,
+                  admission="capacity", eviction="lru")
+    if label == "fused-device":
+        hbm = int(1.2 * n_samples * ds.augmented_bytes())
+        server = SenecaServer.for_dataset(
+            ds, device_cache_bytes=hbm, hbm_split=(0.0, 0.0, 1.0),
+            **common)
+        pipe_kw = dict(executor="device")
+    else:
+        server = SenecaServer.for_dataset(
+            ds, augment_backend="pallas", **common)
+        pipe_kw = dict(executor="stage-parallel", prefetch=2)
+    storage = RemoteStorage(ds, bandwidth=bandwidth)
+    pipe = DSIPipeline(server.open_session(batch_size=batch), storage,
+                       n_workers=n_workers, seed=seed, **pipe_kw)
+    for _ in range(n_samples // batch):   # one warm epoch: traces + fill
+        pipe.next_batch()
+    rates = []
+    for _ in range(windows):
+        t0 = time.monotonic()
+        for _ in range(window_batches):
+            pipe.next_batch()
+        rates.append(window_batches * batch / (time.monotonic() - t0))
+    stats = server.stats()
+    result = {
+        "mode": label,
+        "samples_per_s": statistics.median(rates),
+        "window_samples_per_s": [round(r, 1) for r in rates],
+        "stage_times_s": pipe.times.as_dict(),
+        "cache_hit_rate": stats["cache_lookup_hit_rate"],
+        "h2d_bytes": server.service.telemetry.channel_total_bytes("h2d"),
+        "storage_fetches": storage.fetches,
+    }
+    if "residency_counts" in stats:
+        result["residency_counts"] = stats["residency_counts"]
+    if "hbm" in stats:
+        result["hbm_hits"] = sum(s["hbm_hits"] for s in stats["hbm"].values())
+        result["hbm_bytes_used"] = stats["hbm_bytes_used"]
+    pipe.stop()
+    server.close()
+    return result
+
+
+def run_zero_h2d_epoch(*, n_samples: int, batch: int, seed: int = 0) -> Dict:
+    """Two epochs with an HBM tier sized for the whole augmented set:
+    epoch 2 must serve every sample device-resident with zero bytes on
+    the h2d channel."""
+    ds = tiny(n=n_samples)
+    hbm = int(1.2 * n_samples * ds.augmented_bytes())
+    server = SenecaServer.for_dataset(
+        ds, cache_frac=0.25, seed=seed, use_ods=False,
+        admission="capacity", eviction="lru",
+        device_cache_bytes=hbm, hbm_split=(0.0, 0.0, 1.0))
+    pipe = DSIPipeline(server.open_session(batch_size=batch),
+                       RemoteStorage(ds), n_workers=2, executor="device",
+                       seed=seed)
+    tel = server.service.telemetry
+    for _ in range(n_samples // batch):           # epoch 1: fill HBM
+        pipe.next_batch()
+    before = tel.channel_total_bytes("h2d")
+    for _ in range(n_samples // batch):           # epoch 2: all HBM hits
+        pipe.next_batch()
+    stats = server.stats()
+    result = {
+        "epoch1_h2d_bytes": before,
+        "epoch2_h2d_bytes": tel.channel_total_bytes("h2d") - before,
+        "residency_counts": stats["residency_counts"],
+        "hbm_hits": sum(s["hbm_hits"] for s in stats["hbm"].values()),
+    }
+    pipe.stop()
+    server.close()
+    return result
+
+
+def run(full: bool = False, check: bool = False) -> List[Tuple[str, str]]:
+    knobs = dict(n_samples=4_096 if full else 1_024, batch=16,
+                 windows=3, window_batches=16 if full else 8,
+                 bandwidth=8e6, n_workers=4, cache_frac=0.15)
+    results = {label: run_mode(label, **knobs)
+               for label in ("pallas-augment", "fused-device")}
+
+    def sps(label):
+        return results[label]["samples_per_s"]
+
+    if check and sps("fused-device") <= sps("pallas-augment"):
+        # one retry before declaring a regression (same rationale as
+        # fig_pipeline_throughput: one noisy CI window can sink a
+        # 3-window median); the artifact is built from the retried
+        # numbers so the JSON never contradicts a passing gate
+        for label in ("pallas-augment", "fused-device"):
+            results[label] = run_mode(label, **knobs)
+
+    zero = run_zero_h2d_epoch(n_samples=512 if full else 128, batch=16)
+    payload = {"config": {k: str(v) for k, v in knobs.items()},
+               "zero_h2d_epoch": zero, **results}
+    path = write_bench_json("device", payload)
+
+    base, dev = sps("pallas-augment"), sps("fused-device")
+    rows = [(f"fig_device/{label}",
+             f"sps={r['samples_per_s']:.0f} x{r['samples_per_s'] / base:.2f} "
+             f"h2d={r['h2d_bytes']} windows={r['window_samples_per_s']}")
+            for label, r in results.items()]
+    rows.append(("fig_device/zero_h2d_epoch",
+                 f"epoch2_h2d={zero['epoch2_h2d_bytes']} "
+                 f"hbm_hits={zero['hbm_hits']} "
+                 f"hbm_resident={zero['residency_counts'].get('hbm', 0)}"))
+    rows.append(("fig_device/summary",
+                 f"fused-device speedup x{dev / base:.2f} json={path}"))
+    if check:
+        assert dev > base, (
+            f"fused-device ({dev:.0f} sps) must beat the pallas-augment "
+            f"baseline ({base:.0f} sps)")
+        assert zero["epoch2_h2d_bytes"] == 0, (
+            f"all-HBM-hit epoch shipped {zero['epoch2_h2d_bytes']} h2d "
+            f"bytes (expected 0)")
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--check", action="store_true",
+                    help="assert fused-device beats pallas-augment and "
+                         "the HBM-hit epoch is zero-h2d (CI)")
+    args = ap.parse_args()
+    for name, derived in run(full=args.full, check=args.check):
+        print(f"{name},{derived}")

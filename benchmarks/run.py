@@ -20,7 +20,8 @@ def main() -> None:
 
     from benchmarks import (fig3_cache_forms, fig4_pagecache,
                             fig8_validation, fig10_makespan, fig13_hitrate,
-                            fig14_concurrency, fig15_ect, fig_dynamic_jobs,
+                            fig14_concurrency, fig15_ect,
+                            fig_device_pipeline, fig_dynamic_jobs,
                             fig_live_makespan, fig_pipeline_throughput,
                             fig_sharded, fig_tiered_cache, roofline_report,
                             table6_mdp)
@@ -31,6 +32,7 @@ def main() -> None:
         ("fig14", fig14_concurrency), ("fig15", fig15_ect),
         ("dynamic", fig_dynamic_jobs),
         ("pipeline", fig_pipeline_throughput),
+        ("device", fig_device_pipeline),
         ("live", fig_live_makespan),
         ("tiered", fig_tiered_cache),
         ("sharded", fig_sharded),

@@ -55,6 +55,36 @@ def _spill_kwargs(args, ds) -> dict:
     return {"spill_dir": args.cache_spill_dir, "spill_bytes": spill}
 
 
+def _device_kwargs(args) -> dict:
+    """--device-cache-bytes: add a device-resident HBM cache tier in
+    front of DRAM (docs/API.md "Device-resident preprocessing & the
+    HBM tier"); pair with ``--executor device`` for the fused
+    decode+augment route."""
+    if not args.device_cache_bytes:
+        return {}
+    return {"device_cache_bytes": args.device_cache_bytes}
+
+
+def _print_tier_labels(server, args) -> None:
+    svc = server.service
+    parts = [server.partition.label]
+    if svc.hbm_partition is not None:
+        parts.insert(0, svc.hbm_partition.label)
+    if svc.disk_partition is not None:
+        parts.append(svc.disk_partition.label)
+    if len(parts) > 1:
+        levels = ["hbm"] if svc.hbm_partition is not None else []
+        levels.append("dram")
+        if svc.disk_partition is not None:
+            levels.append("disk")
+        print(f"[quickstart] {'|'.join(levels)} partition: "
+              f"{'|'.join(parts)}")
+    if svc.hbm_partition is not None:
+        print(f"[quickstart] device cache tier: "
+              f"{args.device_cache_bytes} bytes, hbm split "
+              f"{svc.hbm_partition.label}")
+
+
 def _shard_kwargs(args) -> dict:
     """--shards N: route the cache through the sharded data plane
     (docs/API.md \"Sharded data plane\")."""
@@ -78,6 +108,7 @@ def run_seneca(args) -> None:
                                       augment_backend=args.augment_backend,
                                       repartition=args.repartition,
                                       **_spill_kwargs(args, ds),
+                                      **_device_kwargs(args),
                                       **_shard_kwargs(args))
     print(f"[quickstart] MDP partition: {server.partition.label} "
           f"(backend={args.backend}, executor={args.executor}, "
@@ -87,6 +118,7 @@ def run_seneca(args) -> None:
         print(f"[quickstart] spill tier: disk split "
               f"{server.service.disk_partition.label} in "
               f"{args.cache_spill_dir}")
+    _print_tier_labels(server, args)
 
     cfg = registry.get_reduced("vit-huge")
     model = build(cfg)
@@ -125,8 +157,13 @@ def run_seneca(args) -> None:
           f"substitutions={stats['substitutions']} "
           f"tier_counts={stats['tier_counts']}")
     if "residency_counts" in stats:
+        extra = []
+        if "disk_bytes_used" in stats:
+            extra.append(f"disk_bytes_used={stats['disk_bytes_used']}")
+        if "hbm_bytes_used" in stats:
+            extra.append(f"hbm_bytes_used={stats['hbm_bytes_used']}")
         print(f"[quickstart] residency={stats['residency_counts']} "
-              f"disk_bytes_used={stats['disk_bytes_used']}")
+              + " ".join(extra))
     _print_shard_stats(stats)
     rp = stats["repartitions"]
     if rp["applied"]:
@@ -155,10 +192,12 @@ def run_multi(args) -> None:
                                       augment_backend=args.augment_backend,
                                       repartition=args.repartition,
                                       **_spill_kwargs(args, ds),
+                                      **_device_kwargs(args),
                                       **_shard_kwargs(args))
     print(f"[quickstart] MDP partition: {server.partition.label} "
           f"({args.jobs} concurrent jobs, one shared cache, "
           f"{args.shards} shard(s))")
+    _print_tier_labels(server, args)
     rates = [900, 500, 700, 1100, 600, 800][:args.jobs] or [900]
     trace = [JobSpec(f"job{i}", arrival_s=0.4 * i, epochs=1,
                      batch_size=args.batch, gpu_rate=rates[i % len(rates)],
@@ -220,9 +259,11 @@ def main() -> None:
     ap.add_argument("--backend", default="numpy",
                     choices=("numpy", "jax"))
     ap.add_argument("--executor", default="per-sample",
-                    choices=("per-sample", "stage-parallel"),
+                    choices=("per-sample", "stage-parallel", "device"),
                     help="DSI pipeline executor (stage-parallel = async "
-                         "queue-fed stages, docs/API.md)")
+                         "queue-fed stages; device = fused Pallas "
+                         "decode+augment with device collate, "
+                         "docs/API.md)")
     ap.add_argument("--augment-backend", default="numpy",
                     choices=("numpy", "pallas"),
                     help="batched augment engine for the stage-parallel "
@@ -244,6 +285,13 @@ def main() -> None:
                     help="sharded data-plane transport: in-process "
                          "deterministic shards, or one OS process per "
                          "shard")
+    ap.add_argument("--device-cache-bytes", type=int, default=0,
+                    help="device-resident HBM cache tier budget in "
+                         "bytes (0 = off): augmented rows are served "
+                         "zero-copy on device and the form×tier MDP "
+                         "solves a third simplex (docs/API.md "
+                         "\"Device-resident preprocessing & the HBM "
+                         "tier\")")
     ap.add_argument("--cache-spill-dir", default=None,
                     help="SSD spill directory: every cache partition "
                          "becomes a DRAM→disk tier chain sized by the "

@@ -337,7 +337,7 @@ class PallasAugmentBackend:
 
     name = "pallas"
 
-    def __init__(self, interpret: bool = None):
+    def __init__(self, interpret: Optional[bool] = None):
         import jax  # baked into the toolchain; fail loud if absent
         import jax.numpy as jnp
         from repro.kernels.augment.ops import augment_batch_seeded

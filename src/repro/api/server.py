@@ -47,8 +47,8 @@ from repro.core import mdp
 from repro.core.ods import (AUGMENTED, DECODED, ENCODED, IN_STORAGE,
                             EpochSampler)
 from repro.core.perf_model import (AZURE_NC96, DEFAULT_DISK_BW,
-                                   DatasetProfile, HardwareProfile,
-                                   JobProfile, calibrate)
+                                   DEFAULT_HBM_BW, DatasetProfile,
+                                   HardwareProfile, JobProfile, calibrate)
 
 __all__ = ["SenecaConfig", "SenecaService", "SenecaServer", "Session",
            "SessionClosed", "RepartitionController", "FORM_CODE",
@@ -93,6 +93,14 @@ class SenecaConfig:
     # manual disk split (y_e, y_d, y_a); None -> form×tier MDP (or the
     # DRAM split when that is manual too)
     spill_split: Optional[Tuple[float, float, float]] = None
+    # device-resident cache tier: >0 puts an HBM level at the head of
+    # every partition chain (array payloads device_put on insert, hot
+    # DRAM hits promoted up, served zero-copy).  Default off =
+    # two-level behavior, byte-identical to the pre-HBM engine.
+    device_cache_bytes: int = 0
+    # manual HBM split (z_e, z_d, z_a); None -> three-level MDP (or the
+    # DRAM split when that is manual too)
+    hbm_split: Optional[Tuple[float, float, float]] = None
     # live repartitioning (RepartitionController):
     #   "static"    — solve the MDP once at construction (seed behavior)
     #   "on-change" — re-solve when sessions open/close
@@ -200,13 +208,20 @@ class RepartitionController:
         p = self.service.disk_partition
         return (p.x_e, p.x_d, p.x_a) if p is not None else None
 
+    def _live_hbm_split(self):
+        p = self.service.hbm_partition
+        return (p.x_e, p.x_d, p.x_a) if p is not None else None
+
     def _tiered(self) -> bool:
-        return self.service.disk_partition is not None
+        return (self.service.disk_partition is not None
+                or self.service.hbm_partition is not None)
 
     def _predict_live(self, solver, hw) -> float:
         if self._tiered():
             return solver.predict_tiered(hw, self._live_split(),
-                                         self._live_disk_split())
+                                         self._live_disk_split()
+                                         or (1.0, 0.0, 0.0),
+                                         self._live_hbm_split())
         return solver.predict(hw, self._live_split())
 
     # -- triggers ------------------------------------------------------
@@ -248,18 +263,29 @@ class RepartitionController:
         live = self._live_split()
         if pred_live is None:
             pred_live = self._predict_live(solver, hw)
-        best_disk = None
+        best_disk = best_hbm = None
         if self._tiered():
-            # form×tier re-solve: both levels move together, and the
-            # gain gate compares combined two-level predictions
+            # form×tier re-solve: all configured levels move together,
+            # and the gain gate compares combined multi-level predictions
             tiered = solver.solve_tiered(hw)
             best, best_disk = tiered.dram, tiered.disk
+            best_hbm = tiered.hbm
             best_thr, to_label = tiered.throughput, tiered.label
-            changed = (live != (best.x_e, best.x_d, best.x_a)
-                       or self._live_disk_split()
-                       != (best_disk.x_e, best_disk.x_d, best_disk.x_a))
-            from_label = (f"{self.service.partition.label}|"
-                          f"{self.service.disk_partition.label}")
+            changed = live != (best.x_e, best.x_d, best.x_a)
+            if self.service.disk_partition is not None:
+                changed = changed or (self._live_disk_split()
+                                      != (best_disk.x_e, best_disk.x_d,
+                                          best_disk.x_a))
+            if best_hbm is not None:
+                changed = changed or (self._live_hbm_split()
+                                      != (best_hbm.x_e, best_hbm.x_d,
+                                          best_hbm.x_a))
+            parts = [self.service.partition.label]
+            if self.service.hbm_partition is not None:
+                parts.insert(0, self.service.hbm_partition.label)
+            if self.service.disk_partition is not None:
+                parts.append(self.service.disk_partition.label)
+            from_label = "|".join(parts)
         else:
             best = solver.solve(hw)
             best_thr, to_label = best.throughput, best.label
@@ -273,7 +299,8 @@ class RepartitionController:
                  "predicted_gain": round(float(gain), 4),
                  "applied": bool(apply)}
         if apply:
-            event["demoted"] = self.service.apply_partition(best, best_disk)
+            event["demoted"] = self.service.apply_partition(best, best_disk,
+                                                            best_hbm)
             self.applied += 1
             self._baseline = best_thr
             self._last_applied = event
@@ -325,21 +352,41 @@ class SenecaService:
                 # calibrates the real rate (CALIBRATABLE includes b_disk)
                 hw_over["b_disk"] = DEFAULT_DISK_BW
             self.hardware = replace(self.hardware, **hw_over)
+        self.has_hbm = cfg.device_cache_bytes > 0
+        if self.has_hbm:
+            hw_over = {"s_hbm": float(cfg.device_cache_bytes)}
+            if self.hardware.b_hbm <= 0:
+                # host→device link-rate prior until the "h2d" telemetry
+                # channel calibrates it (CALIBRATABLE includes b_hbm)
+                hw_over["b_hbm"] = DEFAULT_HBM_BW
+            self.hardware = replace(self.hardware, **hw_over)
         self.disk_partition: Optional[mdp.Partition] = None
+        self.hbm_partition: Optional[mdp.Partition] = None
         if cfg.split is not None:
             self.partition = mdp.Partition(*cfg.split, throughput=float("nan"))
             if self.has_spill:
                 self.disk_partition = mdp.Partition(
                     *(cfg.spill_split or cfg.split),
                     throughput=float("nan"))
-        elif self.has_spill:
+            if self.has_hbm:
+                self.hbm_partition = mdp.Partition(
+                    *(cfg.hbm_split or cfg.split),
+                    throughput=float("nan"))
+        elif self.has_spill or self.has_hbm:
             tiered = mdp.optimize_tiered(self.hardware, cfg.dataset,
                                          cfg.job, cfg.partition_step)
             self.partition = tiered.dram
-            self.disk_partition = mdp.Partition(
-                *(cfg.spill_split or (tiered.disk.x_e, tiered.disk.x_d,
-                                      tiered.disk.x_a)),
-                throughput=tiered.throughput)
+            if self.has_spill:
+                self.disk_partition = mdp.Partition(
+                    *(cfg.spill_split or (tiered.disk.x_e, tiered.disk.x_d,
+                                          tiered.disk.x_a)),
+                    throughput=tiered.throughput)
+            if self.has_hbm:
+                solved_hbm = tiered.hbm or tiered.dram
+                self.hbm_partition = mdp.Partition(
+                    *(cfg.hbm_split or (solved_hbm.x_e, solved_hbm.x_d,
+                                        solved_hbm.x_a)),
+                    throughput=tiered.throughput)
         else:
             self.partition = mdp.optimize(self.hardware, cfg.dataset,
                                           cfg.job, cfg.partition_step)
@@ -356,6 +403,9 @@ class SenecaService:
         spill_t = ((self.disk_partition.x_e, self.disk_partition.x_d,
                     self.disk_partition.x_a)
                    if self.disk_partition else None)
+        hbm_t = ((self.hbm_partition.x_e, self.hbm_partition.x_d,
+                  self.hbm_partition.x_a)
+                 if self.hbm_partition else None)
         if cfg.shards > 1 or cfg.shard_transport != "sim":
             # lazy import: repro.service must stay importable without
             # repro.api (its shard module imports telemetry lazily for
@@ -367,6 +417,8 @@ class SenecaService:
                 spill_bytes=cfg.spill_bytes if self.has_spill else 0,
                 spill_dir=cfg.spill_dir if self.has_spill else None,
                 spill_split=spill_t,
+                hbm_bytes=cfg.device_cache_bytes if self.has_hbm else 0,
+                hbm_split=hbm_t,
                 shards=cfg.shards, transport=cfg.shard_transport,
                 seed=cfg.seed, admission=self.admission,
                 hardware=self.hardware, dataset_profile=cfg.dataset,
@@ -380,7 +432,9 @@ class SenecaService:
                 evict_policies=self.eviction.partition_policies(),
                 spill_bytes=cfg.spill_bytes if self.has_spill else 0,
                 spill_dir=cfg.spill_dir if self.has_spill else None,
-                spill_split=spill_t)
+                spill_split=spill_t,
+                hbm_bytes=cfg.device_cache_bytes if self.has_hbm else 0,
+                hbm_split=hbm_t)
         try:
             self.backend = resolve_backend(backend or cfg.backend,
                                            cfg.dataset.n_total,
@@ -436,14 +490,15 @@ class SenecaService:
         if refresh is not None and next(self._batch_counter) % 32 == 0:
             refresh(self.cache, self.telemetry.snapshot())
         with self._lock:
-            if self.has_spill:
+            if self.has_spill or self.has_hbm:
                 # patch metadata for any keys the chains shed since the
-                # last batch (spill overflow / promotion backfill), then
-                # give the sampler the current tier levels so it can
-                # prefer DRAM hits over disk hits over storage misses.
-                # The O(N) residency rebuild is version-gated: skipped
-                # whenever no insert/evict/resize/promotion touched the
-                # cache since the last push
+                # last batch (spill overflow / promotion backfill / HBM
+                # demotion), then give the sampler the current tier
+                # levels so it can prefer device hits over DRAM hits
+                # over disk hits over storage misses.  The O(N)
+                # residency rebuild is version-gated: skipped whenever
+                # no insert/evict/resize/promotion touched the cache
+                # since the last push
                 self._reconcile_evictions_locked()
                 version = self.cache.version
                 if version != self._residency_version:
@@ -497,7 +552,8 @@ class SenecaService:
                 if ok:
                     self.backend.mark_cached(np.asarray([sample_id]),
                                              FORM_CODE[form])
-        if self.has_spill and self.cache.has_pending_evicted():
+        if (self.has_spill or self.has_hbm) \
+                and self.cache.has_pending_evicted():
             self.reconcile_evictions()
         return ok
 
@@ -552,7 +608,8 @@ class SenecaService:
                     np.asarray([entries[i][0] for i in live]),
                     FORM_CODE[form])
         ok[live] = True
-        if self.has_spill and self.cache.has_pending_evicted():
+        if (self.has_spill or self.has_hbm) \
+                and self.cache.has_pending_evicted():
             self.reconcile_evictions()
         return ok
 
@@ -580,8 +637,9 @@ class SenecaService:
         return self.cache.lookup(sample_id)
 
     def lookup_tiered(self, sample_id: int):
-        """(form, value, tier) — tier is "dram" | "disk" | None, so the
-        pipeline can report per-tier serve bandwidths."""
+        """(form, value, tier) — tier is "hbm" | "dram" | "disk" |
+        None, so the pipeline can report per-tier serve bandwidths (an
+        "hbm" value is a device-resident ``jax.Array``)."""
         return self.cache.lookup_tiered(sample_id)
 
     # ------------------------------------------------------------------
@@ -612,19 +670,21 @@ class SenecaService:
     def reconcile_evictions(self) -> Dict[str, int]:
         """Patch ODS metadata for keys the tier chains evicted as a side
         effect of serving (spill overflow making room, promotions
-        backfilling DRAM).  Runs automatically per batch and per admit;
-        public for tests and direct-engine users."""
-        if not self.has_spill:
+        backfilling DRAM, device demotions).  Runs automatically per
+        batch and per admit; public for tests and direct-engine
+        users."""
+        if not (self.has_spill or self.has_hbm):
             return {}
         with self._lock:
             return self._reconcile_evictions_locked()
 
     def apply_partition(self, partition: mdp.Partition,
-                        disk_partition: Optional[mdp.Partition] = None
+                        disk_partition: Optional[mdp.Partition] = None,
+                        hbm_partition: Optional[mdp.Partition] = None
                         ) -> Dict[str, int]:
-        """Resize the live cache to ``partition`` (and, with a spill
-        tier, its disk level to ``disk_partition``) and patch ODS
-        metadata.
+        """Resize the live cache to ``partition`` (and, when configured,
+        its disk level to ``disk_partition`` and device level to
+        ``hbm_partition``) and patch ODS metadata.
 
         Keys evicted by shrinking partitions are *demoted*: DRAM
         shrink evictions spill to disk where one exists, and each
@@ -645,12 +705,21 @@ class SenecaService:
             spill_split = (self.disk_partition.x_e,
                            self.disk_partition.x_d,
                            self.disk_partition.x_a)
+        hbm_split = None
+        if hbm_partition is not None and self.has_hbm:
+            hbm_split = (hbm_partition.x_e, hbm_partition.x_d,
+                         hbm_partition.x_a)
+        elif self.has_hbm and self.hbm_partition is not None:
+            hbm_split = (self.hbm_partition.x_e, self.hbm_partition.x_d,
+                         self.hbm_partition.x_a)
         evicted = self.cache.resize(
             (partition.x_e, partition.x_d, partition.x_a),
-            spill_split=spill_split)
+            spill_split=spill_split, hbm_split=hbm_split)
         self.partition = partition
         if disk_partition is not None and self.has_spill:
             self.disk_partition = disk_partition
+        if hbm_partition is not None and self.has_hbm:
+            self.hbm_partition = hbm_partition
         keys = set().union(*evicted.values()) if evicted else set()
         keys.update(self.cache.take_evicted())
         if not keys:
@@ -712,21 +781,34 @@ class SenecaService:
         return out
 
     def _spill_stats(self) -> Dict[str, object]:
-        """Additive spill-tier keys (empty dict without a spill dir so
-        single-tier stats() payloads stay byte-identical)."""
-        if not self.has_spill:
+        """Additive spill/device-tier keys (empty dict without either
+        tier so single-tier stats() payloads stay byte-identical; the
+        "hbm" residency count and the hbm block only appear when a
+        device tier is configured, so spill-only payloads keep their
+        historical shape too)."""
+        if not (self.has_spill or self.has_hbm):
             return {}
         res = self.cache.residency_array(self.cfg.dataset.n_total)
-        counts = np.bincount(res, minlength=3)
-        return {
-            "disk_partition": self.disk_partition.label
-            if self.disk_partition else None,
-            "disk_bytes_used": self.cache.disk_bytes_used(),
-            "residency_counts": {"storage": int(counts[0]),
-                                 "disk": int(counts[1]),
-                                 "dram": int(counts[2])},
-            "spill": self.cache.spill_stats(),
-        }
+        counts = np.bincount(res, minlength=4)
+        residency = {"storage": int(counts[0]), "disk": int(counts[1]),
+                     "dram": int(counts[2])}
+        if self.has_hbm:
+            residency["hbm"] = int(counts[3])
+        out: Dict[str, object] = {}
+        if self.has_spill:
+            out.update({
+                "disk_partition": self.disk_partition.label
+                if self.disk_partition else None,
+                "disk_bytes_used": self.cache.disk_bytes_used(),
+                "spill": self.cache.spill_stats(),
+            })
+        out["residency_counts"] = residency
+        if self.has_hbm:
+            out["hbm_partition"] = (self.hbm_partition.label
+                                    if self.hbm_partition else None)
+            out["hbm_bytes_used"] = self.cache.hbm_bytes_used()
+            out["hbm"] = self.cache.hbm_stats()
+        return out
 
 
 class Session:

@@ -52,7 +52,10 @@ from dataclasses import dataclass, field
 from typing import Dict, Optional
 
 STAGES = ("fetch_storage", "fetch_cache", "decode", "augment", "collate")
-CHANNELS = ("storage", "cache", "disk")
+#: "h2d" is the host→device transfer channel: its EWMA calibrates the
+#: device tier's ``b_hbm`` and its cumulative byte counter is the
+#: zero-copy assertion surface (an all-HBM-hit epoch moves no h2d bytes)
+CHANNELS = ("storage", "cache", "disk", "h2d")
 
 
 class Ewma:
@@ -95,7 +98,9 @@ class TelemetrySnapshot:
     b_storage: Optional[float] = None           # bytes/s
     b_cache: Optional[float] = None             # bytes/s (DRAM hits)
     b_disk: Optional[float] = None              # bytes/s (spill-tier hits)
+    b_hbm: Optional[float] = None               # bytes/s (h2d transfers)
     counts: Dict[str, int] = field(default_factory=dict)  # per calibration field
+    channel_bytes: Dict[str, int] = field(default_factory=dict)  # cumulative
 
     @property
     def n_serves(self) -> int:
@@ -118,6 +123,7 @@ class TelemetryAggregator:
         self._alpha = float(alpha)
         self._stages: Dict[str, Ewma] = {s: Ewma(alpha) for s in STAGES}
         self._bw: Dict[str, Ewma] = {c: Ewma(alpha) for c in CHANNELS}
+        self._channel_bytes: Dict[str, int] = {c: 0 for c in CHANNELS}
         self._serves: Dict[str, int] = {
             "encoded": 0, "decoded": 0, "augmented": 0, "storage": 0}
         self._concurrency = 0
@@ -155,12 +161,21 @@ class TelemetryAggregator:
 
     def record_bytes(self, channel: str, nbytes: int,
                      seconds: float) -> None:
-        """Record one transfer: ``nbytes`` moved in ``seconds``."""
+        """Record one transfer: ``nbytes`` moved in ``seconds``.  Also
+        accumulates the channel's total byte counter (the "h2d" total is
+        how the device pipeline proves an all-HBM-hit epoch shipped zero
+        per-batch host→device bytes)."""
         if channel not in self._bw or nbytes <= 0:
             return
         with self._lock:
             # floor on the denominator: an in-memory hit can measure ~0s
             self._bw[channel].update(nbytes / max(seconds, 1e-9))
+            self._channel_bytes[channel] += int(nbytes)
+
+    def channel_total_bytes(self, channel: str) -> int:
+        """Cumulative bytes recorded on ``channel`` since construction."""
+        with self._lock:
+            return self._channel_bytes.get(channel, 0)
 
     def record_serve(self, form: Optional[str]) -> None:
         """Which tier answered a lookup (None = storage fetch)."""
@@ -213,6 +228,7 @@ class TelemetryAggregator:
                      if e.value is not None}
             errors = dict(self._errors)
             sw = dict(self._stage_workers)
+            ch_bytes = dict(self._channel_bytes)
 
         def rate(total_latency: Optional[float]) -> Optional[float]:
             if not total_latency or total_latency <= 0:
@@ -236,6 +252,7 @@ class TelemetryAggregator:
             "b_storage": bw_n["storage"],
             "b_cache": bw_n["cache"],
             "b_disk": bw_n["disk"],
+            "b_hbm": bw_n["h2d"],
         }
         return TelemetrySnapshot(
             stage_latency=lat, stage_n=lat_n, bandwidth=bw,
@@ -243,7 +260,8 @@ class TelemetryAggregator:
             queue_depth=q_depth, queue_occupancy=q_occ, errors=errors,
             t_da=t_da, t_a=t_a,
             b_storage=bw["storage"], b_cache=bw["cache"],
-            b_disk=bw["disk"], counts=counts)
+            b_disk=bw["disk"], b_hbm=bw["h2d"], counts=counts,
+            channel_bytes=ch_bytes)
 
     def as_dict(self) -> Dict[str, object]:
         """JSON-friendly summary for ``stats()`` surfaces."""
@@ -261,5 +279,6 @@ class TelemetryAggregator:
             "errors": dict(snap.errors),
             "t_da": snap.t_da, "t_a": snap.t_a,
             "b_storage": snap.b_storage, "b_cache": snap.b_cache,
-            "b_disk": snap.b_disk,
+            "b_disk": snap.b_disk, "b_hbm": snap.b_hbm,
+            "channel_bytes": dict(snap.channel_bytes),
         }

@@ -3,23 +3,25 @@ DESIGN.md §2, plus the SSD spill production systems bolt on).
 
 Byte-accounted partitions for encoded / decoded / augmented samples with
 pluggable eviction.  Each partition is a *tier chain*
-(:mod:`repro.cache.tiers`): a :class:`DramTier` (the original dict
-store) optionally backed by a :class:`DiskTier` spill area.  Eviction
-from DRAM demotes entries down the chain instead of dropping them, a
-disk hit promotes the entry back up, and inserts that DRAM rejects
-overflow onto disk — so a DRAM-constrained cache degrades to disk
-bandwidth instead of storage bandwidth.
+(:mod:`repro.cache.tiers`): an optional device-resident
+:class:`HbmTier` at the head, a :class:`DramTier` (the original dict
+store), and an optional :class:`DiskTier` spill area.  Eviction demotes
+entries down the chain instead of dropping them (HBM→DRAM on overflow,
+DRAM→disk), hits promote back up (disk hits re-enter DRAM; hot DRAM
+hits of array payloads earn device residency), and inserts that DRAM
+rejects overflow onto disk — so a DRAM-constrained cache degrades to
+disk bandwidth instead of storage bandwidth, and a hot augmented set
+serves zero-copy from device memory.
 
 Thread-safe: the real data pipeline hits this store from fetch worker
 threads while the trainer consumes batches.  All chain behavior runs
-under the single cache lock; tiers themselves are lock-free.  Known
-limitation: spill-tier file IO (codec reads on disk hits, writes on
-demotion) therefore executes inside the cache lock's critical section —
-correct, but it serializes concurrent serving at disk latency while a
-transfer is in flight.  Moving spill IO out from under the lock needs
-per-entry in-flight state (promote/demote intents) and is deliberately
-left to a follow-up; benchmarks at the current scale are dominated by
-the storage token bucket, not this section.
+under the single cache lock; tiers themselves are lock-free.
+Spill-tier file *writes* are write-behind: ``DiskTier.put`` stages the
+payload under the lock, and each mutating public method drains the
+stage via :meth:`DiskTier.flush_staged` — write + fsync running with
+the lock released — before returning, so a slow SSD no longer stalls
+every concurrent lookup (the PR 5 known limitation).  Codec *reads* on
+disk hits still run under the lock.
 """
 from __future__ import annotations
 
@@ -28,21 +30,23 @@ from typing import Any, Dict, List, Optional, Tuple
 
 import numpy as np
 
-from repro.cache.tiers import (MISS, DiskTier, DramTier, PartitionStats,
-                               Tier)
+from repro.cache.tiers import (MISS, DiskTier, DramTier, HbmTier,
+                               PartitionStats, Tier)
 
 __all__ = ["FORMS", "PartitionStats", "CachePartition", "TieredCache",
-           "Tier", "DramTier", "DiskTier"]
+           "Tier", "DramTier", "DiskTier", "HbmTier"]
 
 FORMS = ("encoded", "decoded", "augmented")
 
 #: residency levels reported by :meth:`TieredCache.residency_array`
 RESIDENCY_NONE, RESIDENCY_DISK, RESIDENCY_DRAM = 0, 1, 2
+RESIDENCY_HBM = 3
 
 
 class CachePartition:
-    """One form's partition: a DRAM tier chained to an optional disk
-    spill tier, with byte accounting + LRU order per tier.
+    """One form's partition: an optional device (HBM) tier, a DRAM tier
+    and an optional disk spill tier, chained with byte accounting + LRU
+    order per tier.
 
     The public surface (and the DRAM-only behavior) is identical to the
     pre-chain ``CachePartition``; ``stats``/``_data``/``_sizes`` keep
@@ -50,18 +54,33 @@ class CachePartition:
     unchanged.  Keys evicted *out of the chain entirely* (spill
     overflow, promotion backfill) are recorded in ``pending_evicted``
     for the service to reconcile ODS metadata with.
+
+    HBM chain rules: array payloads whose insert the HBM tier admits go
+    device-resident immediately (``device_put``); others land in DRAM,
+    and a DRAM entry that takes ``HBM_PROMOTE_HITS`` lookup hits is
+    promoted up.  HBM overflow/resize demotes down into DRAM (host
+    copies), cascading into the spill tier like any DRAM eviction.
     """
 
+    #: DRAM lookup hits (of an HBM-eligible payload) before promotion
+    HBM_PROMOTE_HITS = 2
+
     def __init__(self, capacity_bytes: int, evict_policy: str = "none",
-                 spill: Optional[DiskTier] = None):
+                 spill: Optional[DiskTier] = None,
+                 hbm: Optional[HbmTier] = None):
         self.dram = DramTier(capacity_bytes, evict_policy)
         self.spill = spill
+        self.hbm = hbm
         # keys no longer resident anywhere in the chain, awaiting a
         # metadata patch (drained via TieredCache.take_evicted)
         self.pending_evicted: List[int] = []
         # chain traffic counters (how the spill is actually behaving)
         self.demotions = 0
         self.promotions = 0
+        # device-tier traffic + DRAM hit-heat driving promotion
+        self.hbm_promotions = 0
+        self.hbm_demotions = 0
+        self._heat: Dict[int, int] = {}
 
     # -- compat surface over the DRAM tier -----------------------------
     @property
@@ -94,14 +113,16 @@ class CachePartition:
 
     @property
     def total_capacity(self) -> int:
-        return self.dram.capacity + (self.spill.capacity if self.spill
-                                     else 0)
+        return (self.dram.capacity
+                + (self.spill.capacity if self.spill else 0)
+                + (self.hbm.capacity if self.hbm else 0))
 
     # -- chain-aggregate stats -----------------------------------------
     @property
     def total_hits(self) -> int:
-        return self.dram.stats.hits + (self.spill.stats.hits
-                                       if self.spill else 0)
+        return (self.dram.stats.hits
+                + (self.spill.stats.hits if self.spill else 0)
+                + (self.hbm.stats.hits if self.hbm else 0))
 
     @property
     def total_misses(self) -> int:
@@ -110,19 +131,25 @@ class CachePartition:
 
     # ------------------------------------------------------------------
     def __contains__(self, key: int) -> bool:
-        return key in self.dram or (self.spill is not None
-                                    and key in self.spill)
+        return (key in self.dram
+                or (self.spill is not None and key in self.spill)
+                or (self.hbm is not None and key in self.hbm))
 
     def __len__(self) -> int:
-        return len(self.dram) + (len(self.spill) if self.spill else 0)
+        return (len(self.dram) + (len(self.spill) if self.spill else 0)
+                + (len(self.hbm) if self.hbm else 0))
 
     def keys(self) -> List[int]:
         ks = self.dram.keys()
         if self.spill is not None:
             ks += self.spill.keys()
+        if self.hbm is not None:
+            ks += self.hbm.keys()
         return ks
 
     def tier_of(self, key: int) -> Optional[str]:
+        if self.hbm is not None and key in self.hbm:
+            return "hbm"
         if key in self.dram:
             return "dram"
         if self.spill is not None and key in self.spill:
@@ -136,11 +163,19 @@ class CachePartition:
     def get_tiered(self, key: int, default: Any = None
                    ) -> Tuple[Any, Optional[str]]:
         """Chain lookup counting exactly one hit or miss; disk hits
-        promote back to DRAM when it has (or can make) room.  Returns
-        ``(value, tier)`` with tier in ("dram", "disk", None)."""
+        promote back to DRAM when it has (or can make) room, hot DRAM
+        hits promote up to the device tier.  Returns ``(value, tier)``
+        with tier in ("hbm", "dram", "disk", None) — an "hbm" hit
+        serves the device-resident ``jax.Array`` zero-copy."""
+        if self.hbm is not None:
+            v = self.hbm.peek(key, MISS)
+            if v is not MISS:
+                return self.hbm.get(key, default), "hbm"
         v = self.dram.peek(key, MISS)
         if v is not MISS:
-            return self.dram.get(key, default), "dram"
+            value = self.dram.get(key, default)
+            self._maybe_promote_hbm(key, value)
+            return value, "dram"
         if self.spill is not None and key in self.spill:
             v = self.spill.get(key, MISS)   # counts the disk hit
             if v is not MISS:
@@ -154,6 +189,10 @@ class CachePartition:
         """Stats-neutral read: no hit/miss counting, no LRU promotion.
         For controller/refill scans that inspect residency without being
         part of the serving path."""
+        if self.hbm is not None:
+            v = self.hbm.peek(key, MISS)
+            if v is not MISS:
+                return v
         v = self.dram.peek(key, MISS)
         if v is not MISS:
             return v
@@ -195,9 +234,66 @@ class CachePartition:
             if not placed:
                 self.pending_evicted.append(k)
 
+    def _maybe_promote_hbm(self, key: int, value: Any) -> None:
+        """Count a DRAM hit toward device promotion; on the
+        ``HBM_PROMOTE_HITS``-th hit of an HBM-eligible payload, move it
+        up (device_put) and cascade any HBM evictions back down."""
+        if self.hbm is None or not HbmTier.wants_value(value):
+            return
+        heat = self._heat.get(key, 0) + 1
+        if heat < self.HBM_PROMOTE_HITS:
+            self._heat[key] = heat
+            return
+        self._heat.pop(key, None)
+        entry = self.dram.pop_entry(key)
+        if entry is None:
+            return
+        _v, nbytes = entry
+        if not self.hbm.admits(nbytes):
+            # oversized for the device tier: put it straight back (the
+            # slot it just vacated is still free, so this cannot evict)
+            self.dram.put(key, value, nbytes)
+            return
+        demoted = self.hbm.put(key, value, nbytes)
+        if key in self.hbm:
+            self.hbm_promotions += 1
+        self._demote_hbm(demoted)
+
+    def _demote_hbm(self, entries) -> None:
+        """Push HBM-evicted entries down into DRAM as host copies,
+        cascading DRAM overflow into the spill tier; entries nothing
+        below can hold leave the chain (queued for metadata patching —
+        unlike :meth:`_demote`, chain-leavers queue even without a
+        spill tier, because HBM demotion happens during *lookups* where
+        the caller sees no eviction list)."""
+        for k, v, nb in entries:
+            host = np.asarray(v)
+            placed = False
+            if self.dram.admits(nb):
+                dram_evicted = self.dram.put(k, host, nb)
+                placed = k in self.dram
+                if placed:
+                    self.hbm_demotions += 1
+                if self.spill is None:
+                    self.pending_evicted.extend(
+                        ek for ek, _ev, _enb in dram_evicted)
+                else:
+                    self._demote(dram_evicted)
+            if not placed:
+                if self.spill is not None and self.spill.admits(nb):
+                    for ek, _ev, _enb in self.spill.put(k, host, nb):
+                        self.pending_evicted.append(ek)
+                    placed = k in self.spill
+                    if placed:
+                        self.hbm_demotions += 1
+                if not placed:
+                    self.pending_evicted.append(k)
+
     # ------------------------------------------------------------------
     def admits(self, nbytes: int) -> bool:
         """Could an insert of ``nbytes`` land anywhere in the chain?"""
+        if self.hbm is not None and self.hbm.admits(nbytes):
+            return True
         if self.dram.admits(nbytes):
             return True
         return self.spill is not None and self.spill.admits(nbytes)
@@ -206,14 +302,33 @@ class CachePartition:
         """Insert; returns the keys evicted *out of the chain* (never
         evicts under 'none' — the insert overflows to the spill tier
         when one exists, or is rejected, MINIO-style).  Re-inserting an
-        existing key replaces it."""
+        existing key replaces it.  Array payloads the device tier
+        admits go HBM-resident immediately; HBM evictions cascade down
+        the chain like any demotion."""
+        if (self.hbm is not None and HbmTier.wants_value(value)
+                and self.hbm.admits(nbytes)):
+            demoted = self.hbm.put(key, value, nbytes)
+            evicted: List[int] = []
+            if key in self.hbm:
+                # single-residence invariant across all three tiers
+                self.dram.pop_entry(key)
+                if self.spill is not None:
+                    self.spill.discard(key)
+                self._heat.pop(key, None)
+                self._demote_hbm(demoted)
+                evicted.extend(k for k, _v, _nb in demoted
+                               if k not in self)
+                return evicted
+            # no-evict HBM rejected after all: fall through to DRAM
         demoted = self.dram.put(key, value, nbytes)
-        evicted: List[int] = []
+        evicted = []
         if key in self.dram:
             # single-residence invariant: a fresh DRAM copy supersedes
-            # any stale spill copy from an earlier demotion
+            # any stale spill (or device) copy from earlier demotions
             if self.spill is not None:
                 self.spill.discard(key)
+            if self.hbm is not None:
+                self.hbm.remove(key)
         elif self.spill is not None:
             # DRAM rejected (no-evict policy full / oversized): spill
             # admission keeps the entry cached at disk speed
@@ -246,12 +361,26 @@ class CachePartition:
         self.pending_evicted.extend(evicted)
         return evicted
 
+    def set_hbm_capacity(self, capacity_bytes: int) -> List[int]:
+        """Resize the device level live; shrink demotions cascade down
+        the chain (host copies into DRAM, overflowing to disk) and the
+        keys evicted out of the chain entirely are returned."""
+        if self.hbm is None:
+            return []
+        demoted = self.hbm.set_capacity(capacity_bytes)
+        self._demote_hbm(demoted)
+        return [k for k, _v, _nb in demoted if k not in self]
+
     def remove(self, key: int) -> bool:
         """Drop ``key`` from every tier (refcount eviction consumes the
-        sample entirely — a spilled copy must not resurrect it)."""
+        sample entirely — a spilled or device copy must not resurrect
+        it)."""
         dropped = self.dram.remove(key)
         if self.spill is not None and self.spill.remove(key):
             dropped = True
+        if self.hbm is not None and self.hbm.remove(key):
+            dropped = True
+        self._heat.pop(key, None)
         return dropped
 
     def take_pending_evicted(self) -> List[int]:
@@ -262,14 +391,16 @@ class CachePartition:
 
 class TieredCache:
     """The Seneca cache: three partitions sized by an MDP split, each an
-    optional DRAM→disk tier chain sized by the form×tier MDP."""
+    optional HBM→DRAM→disk tier chain sized by the form×tier MDP."""
 
     def __init__(self, capacity_bytes: int,
                  split: Tuple[float, float, float],
                  evict_policies: Optional[Dict[str, str]] = None,
                  spill_bytes: int = 0,
                  spill_dir: Optional[str] = None,
-                 spill_split: Optional[Tuple[float, float, float]] = None):
+                 spill_split: Optional[Tuple[float, float, float]] = None,
+                 hbm_bytes: int = 0,
+                 hbm_split: Optional[Tuple[float, float, float]] = None):
         x_e, x_d, x_a = split
         assert abs(x_e + x_d + x_a - 1.0) < 1e-6, split
         pol = evict_policies or {"encoded": "none", "decoded": "none",
@@ -289,14 +420,30 @@ class TieredCache:
         else:
             self.spill_split = None
             spills = {form: None for form in FORMS}
+        self.hbm_bytes = int(hbm_bytes)
+        if self.hbm_bytes > 0:
+            self.hbm_split = tuple(hbm_split) if hbm_split \
+                else tuple(split)
+            z_e, z_d, z_a = self.hbm_split
+            assert abs(z_e + z_d + z_a - 1.0) < 1e-6, self.hbm_split
+            # LRU on device: HBM is small and hot — coldest array falls
+            # back to DRAM rather than blocking new promotions
+            hbms = {form: HbmTier(int(z * self.hbm_bytes), "lru")
+                    for form, z in zip(FORMS, (z_e, z_d, z_a))}
+        else:
+            self.hbm_split = None
+            hbms = {form: None for form in FORMS}
         self.parts: Dict[str, CachePartition] = {
             "encoded": CachePartition(int(x_e * capacity_bytes),
-                                      pol["encoded"], spills["encoded"]),
+                                      pol["encoded"], spills["encoded"],
+                                      hbms["encoded"]),
             "decoded": CachePartition(int(x_d * capacity_bytes),
-                                      pol["decoded"], spills["decoded"]),
+                                      pol["decoded"], spills["decoded"],
+                                      hbms["decoded"]),
             "augmented": CachePartition(int(x_a * capacity_bytes),
                                         pol["augmented"],
-                                        spills["augmented"]),
+                                        spills["augmented"],
+                                        hbms["augmented"]),
         }
         self.lock = threading.Lock()
         self._closed = False
@@ -313,6 +460,20 @@ class TieredCache:
     def has_spill(self) -> bool:
         return self.spill_dir is not None
 
+    @property
+    def has_hbm(self) -> bool:
+        return self.hbm_bytes > 0
+
+    def _flush_spill(self) -> None:
+        """Drain staged write-behind spill payloads, releasing the cache
+        lock around each file write (:meth:`DiskTier.flush_staged`).
+        Called *after* the lock is dropped by every mutating public
+        method, so op boundaries observe index == files-on-disk."""
+        if not self.has_spill:
+            return
+        for part in self.parts.values():
+            part.spill.flush_staged(self.lock)
+
     def lookup(self, key: int) -> Tuple[Optional[str], Any]:
         """Most-processed form first (augmented > decoded > encoded)."""
         form, value, _tier = self.lookup_tiered(key)
@@ -321,30 +482,37 @@ class TieredCache:
     def lookup_tiered(self, key: int
                       ) -> Tuple[Optional[str], Any, Optional[str]]:
         """Like :meth:`lookup` but also names the tier that answered
-        ("dram" | "disk" | None) so telemetry can track per-tier serve
-        bandwidths."""
-        with self.lock:
-            for form in ("augmented", "decoded", "encoded"):
-                part = self.parts[form]
-                if key in part:
-                    promos = part.promotions
-                    value, tier = part.get_tiered(key, MISS)
-                    if value is not MISS:
-                        # only an actual promotion changes residency; a
-                        # disk hit that stays on disk must not defeat
-                        # the version-gated residency rebuild
-                        if part.promotions != promos:
-                            self.version += 1
-                        return form, value, tier
-            self.lookup_misses += 1
-            return None, None, None
+        ("hbm" | "dram" | "disk" | None) so telemetry can track
+        per-tier serve bandwidths."""
+        try:
+            with self.lock:
+                for form in ("augmented", "decoded", "encoded"):
+                    part = self.parts[form]
+                    if key in part:
+                        promos = part.promotions + part.hbm_promotions
+                        value, tier = part.get_tiered(key, MISS)
+                        if value is not MISS:
+                            # only an actual promotion changes residency;
+                            # a disk hit that stays on disk must not
+                            # defeat the version-gated residency rebuild
+                            if (part.promotions
+                                    + part.hbm_promotions != promos):
+                                self.version += 1
+                            return form, value, tier
+                self.lookup_misses += 1
+                return None, None, None
+        finally:
+            # promotions can cascade demotions into the spill stage
+            self._flush_spill()
 
     def insert(self, key: int, form: str, value: Any, nbytes: int) -> bool:
         """Insert; True when the key is resident afterwards."""
         with self.lock:
             self.version += 1
             self.parts[form].put(key, value, nbytes)
-            return key in self.parts[form]
+            resident = key in self.parts[form]
+        self._flush_spill()
+        return resident
 
     def insert_gated(self, key: int, form: str, value: Any, nbytes: int,
                      policy) -> bool:
@@ -357,7 +525,9 @@ class TieredCache:
                 return False
             self.version += 1
             part.put(key, value, nbytes)
-            return key in part
+            resident = key in part
+        self._flush_spill()
+        return resident
 
     def insert_batch_gated(self, form: str, entries, policy) -> List[bool]:
         """Batch-granular admission: ``entries`` is a sequence of
@@ -381,6 +551,7 @@ class TieredCache:
                 self.version += 1
                 part.put(key, value, nbytes)
                 out.append(key in part)
+        self._flush_spill()
         return out
 
     def evict(self, key: int, form: str) -> bool:
@@ -450,6 +621,8 @@ class TieredCache:
             free = part.free_bytes
             if part.spill is not None:
                 free += part.spill.free_bytes
+            if part.hbm is not None:
+                free += part.hbm.free_bytes
             return free
 
     def set_form_costs(self, costs: Dict[str, float]) -> None:
@@ -478,7 +651,8 @@ class TieredCache:
                        for part in self.parts.values())
 
     def resize(self, split: Tuple[float, float, float],
-               spill_split: Optional[Tuple[float, float, float]] = None
+               spill_split: Optional[Tuple[float, float, float]] = None,
+               hbm_split: Optional[Tuple[float, float, float]] = None
                ) -> Dict[str, List[int]]:
         """Re-partition the same total capacity live under the cache lock.
 
@@ -489,8 +663,11 @@ class TieredCache:
         evictions demote to disk, and ``spill_split`` (defaulting to
         ``split``) resizes the disk level the same way — disk grows
         first so demotion traffic lands in the enlarged tiers, disk
-        shrinks last.  Returns ``{form: [keys evicted out of the
-        chain]}`` so the caller can demote/patch ODS metadata.
+        shrinks last.  With a device tier, ``hbm_split`` resizes the
+        HBM level: HBM shrinks before the DRAM pass (demotions land in
+        the still-sized DRAM/disk tiers) and grows after it.  Returns
+        ``{form: [keys evicted out of the chain]}`` so the caller can
+        demote/patch ODS metadata.
         """
         x_e, x_d, x_a = split
         if abs(x_e + x_d + x_a - 1.0) >= 1e-6:
@@ -522,10 +699,33 @@ class TieredCache:
                         add(form, part.set_spill_capacity(
                             disk_targets[form]))
                 self.spill_split = tuple(float(y) for y in ys)
+            hbm_targets = None
+            if self.has_hbm:
+                zs = tuple(hbm_split) if hbm_split is not None \
+                    else (float(x_e), float(x_d), float(x_a))
+                if abs(sum(zs) - 1.0) >= 1e-6:
+                    raise ValueError(
+                        f"hbm_split must sum to 1: {zs}")
+                hbm_targets = {f: int(z * self.hbm_bytes)
+                               for f, z in zip(FORMS, zs)}
+                # HBM shrinks before the DRAM pass so device demotions
+                # land in tiers that still have their old headroom
+                for form in FORMS:
+                    part = self.parts[form]
+                    if hbm_targets[form] < part.hbm.capacity:
+                        add(form, part.set_hbm_capacity(
+                            hbm_targets[form]))
+                self.hbm_split = tuple(float(z) for z in zs)
             order = sorted(FORMS,
                            key=lambda f: targets[f] - self.parts[f].capacity)
             for form in order:            # shrinks first, then grows
                 add(form, self.parts[form].set_capacity(targets[form]))
+            if hbm_targets is not None:   # HBM grows after the DRAM pass
+                for form in FORMS:
+                    part = self.parts[form]
+                    if hbm_targets[form] >= part.hbm.capacity:
+                        add(form, part.set_hbm_capacity(
+                            hbm_targets[form]))
             if disk_targets is not None:  # disk shrinks last
                 for form in FORMS:
                     part = self.parts[form]
@@ -534,6 +734,7 @@ class TieredCache:
                             disk_targets[form]))
             self.split = (float(x_e), float(x_d), float(x_a))
             self.version += 1
+        self._flush_spill()
         return evicted
 
     def status_array(self, n: int) -> np.ndarray:
@@ -551,12 +752,12 @@ class TieredCache:
 
     def residency_array(self, n: int) -> np.ndarray:
         """uint8[N] residency levels: 0 = storage only, 1 = disk,
-        2 = DRAM — of the form a lookup would actually serve (the
-        most-processed resident form), not the best tier over all
+        2 = DRAM, 3 = HBM — of the form a lookup would actually serve
+        (the most-processed resident form), not the best tier over all
         forms: a sample whose augmented copy spilled to disk serves at
         disk latency even if its encoded copy sits in DRAM.  Feeds the
-        ODS substitution preference (DRAM hits beat disk hits beat
-        storage misses)."""
+        ODS substitution preference (device hits beat DRAM hits beat
+        disk hits beat storage misses)."""
         out = np.zeros(n, np.uint8)
         with self.lock:
             # lowest serving priority first; higher-priority forms
@@ -571,6 +772,10 @@ class TieredCache:
                 ks = part.dram.keys()
                 if ks:
                     out[np.asarray(ks, int)] = RESIDENCY_DRAM
+                if part.hbm is not None:
+                    ks = part.hbm.keys()
+                    if ks:
+                        out[np.asarray(ks, int)] = RESIDENCY_HBM
         return out
 
     def hit_rate(self) -> float:
@@ -585,6 +790,25 @@ class TieredCache:
     def disk_bytes_used(self) -> int:
         return sum(p.spill.stats.bytes_used for p in self.parts.values()
                    if p.spill is not None)
+
+    def hbm_bytes_used(self) -> int:
+        return sum(p.hbm.stats.bytes_used for p in self.parts.values()
+                   if p.hbm is not None)
+
+    def hbm_stats(self) -> Dict[str, Dict[str, int]]:
+        """Per-form device-tier traffic (JSON-friendly; empty without an
+        HBM tier)."""
+        if not self.has_hbm:
+            return {}
+        with self.lock:
+            return {form: {
+                "hbm_bytes_used": part.hbm.stats.bytes_used,
+                "hbm_capacity": part.hbm.capacity,
+                "hbm_entries": len(part.hbm),
+                "hbm_hits": part.hbm.stats.hits,
+                "hbm_promotions": part.hbm_promotions,
+                "hbm_demotions": part.hbm_demotions,
+            } for form, part in self.parts.items()}
 
     def spill_stats(self) -> Dict[str, Dict[str, int]]:
         """Per-form chain traffic (JSON-friendly; empty without spill)."""

@@ -3,6 +3,8 @@
 A :class:`~repro.cache.store.CachePartition` used to *be* an in-memory
 ``OrderedDict``; it is now a chain of tiers sharing one protocol:
 
+* :class:`HbmTier` — device-resident store: payloads are ``jax.Array``
+  (``device_put`` on insert, zero-copy serve into the training step);
 * :class:`DramTier` — the original dict store, behavior-identical;
 * :class:`DiskTier` — a directory of per-entry files (one file per
   cached sample, serialized by the form's
@@ -12,7 +14,13 @@ A :class:`~repro.cache.store.CachePartition` used to *be* an in-memory
 Tiers are dumb byte-accounted stores; *chain* behavior (demote on
 eviction, promote on hit) lives in ``CachePartition``, and all locking
 stays with :class:`~repro.cache.store.TieredCache` — tier methods are
-only ever called under the cache lock.
+only ever called under the cache lock.  The one exception is the
+:class:`DiskTier` write-behind: ``put`` *stages* the payload in memory
+under the lock, and the file write/fsync runs in
+:meth:`DiskTier.flush_staged` with the lock **released** around the IO,
+so a slow SSD never stalls concurrent lookups (the TieredCache flushes
+before each public method returns, keeping the index↔files invariant at
+op boundaries).
 
 ``put`` / ``set_capacity`` return the entries they evicted as
 ``(key, value, nbytes)`` triples so a chain can demote them into the
@@ -32,6 +40,10 @@ from repro.cache.codecs import codec_for
 #: sentinel distinguishing "absent" from a legitimately stored falsy /
 #: ``None`` payload (an empty encoded sample must count as a hit)
 MISS = object()
+
+#: DiskTier index meta for an entry whose file write is still staged
+#: (write-behind: the payload is in ``_staged``, not yet on disk)
+_PENDING = object()
 
 Evicted = List[Tuple[int, Any, int]]
 
@@ -255,6 +267,9 @@ class DiskTier:
         self.codec = codec_for(form)
         # key -> (nbytes, codec meta); OrderedDict gives LRU order
         self._index: "OrderedDict[int, Tuple[int, Any]]" = OrderedDict()
+        # write-behind staging: key -> payload awaiting its file write
+        # (index meta is _PENDING meanwhile; get/peek serve from here)
+        self._staged: Dict[int, Any] = {}
         self.stats = PartitionStats()
         self.io_errors = 0
 
@@ -281,6 +296,13 @@ class DiskTier:
         if entry is MISS:
             self.stats.misses += 1
             return default
+        staged = self._staged.get(key, MISS)
+        if staged is not MISS:
+            # write still pending: serve the in-memory payload directly
+            self.stats.hits += 1
+            if self.policy == "lru":
+                self._index.move_to_end(key)
+            return staged
         nbytes, meta = entry
         try:
             value = self.codec.load(self._path(key), meta)
@@ -301,6 +323,9 @@ class DiskTier:
         entry = self._index.get(key, MISS)
         if entry is MISS:
             return default
+        staged = self._staged.get(key, MISS)
+        if staged is not MISS:
+            return staged
         try:
             return self.codec.load(self._path(key), entry[1])
         except OSError:
@@ -311,7 +336,11 @@ class DiskTier:
     def put(self, key: int, value: Any, nbytes: int) -> Evicted:
         """Insert (or demotion from the DRAM tier).  Returns the entries
         evicted to make room with ``value=None`` — a disk eviction is
-        terminal, nothing downstream consumes the payload."""
+        terminal, nothing downstream consumes the payload.
+
+        Write-behind: the payload is only *staged* here (the caller
+        holds the cache lock); the file write happens in
+        :meth:`flush_staged` with the lock released around the IO."""
         evicted: Evicted = []
         if key in self._index:
             self._drop(key)
@@ -326,21 +355,66 @@ class DiskTier:
                 evicted.append((k, None, nb))
             else:
                 return evicted
-        try:
-            _written, meta = self.codec.dump(value, self._path(key))
-        except OSError:
-            # a failed spill write is a rejected insert, not a crash on
-            # the serving path; leave no partial file behind
-            self.io_errors += 1
-            try:
-                os.unlink(self._path(key))
-            except OSError:
-                pass
-            return evicted
-        self._index[key] = (nbytes, meta)
+        self._index[key] = (nbytes, _PENDING)
+        self._staged[key] = value
         self.stats.bytes_used += nbytes
         self.stats.inserts += 1
         return evicted
+
+    def flush_staged(self, lock) -> None:
+        """Drain the write-behind stage: claim one staged payload under
+        ``lock``, run the codec dump (write + fsync) with the lock
+        *released*, then commit the codec meta back under the lock.
+
+        Concurrent drops/replacements while a write is in flight are
+        reconciled at commit time: a dropped key's orphan file is
+        unlinked, a replaced key stays staged (its newer payload is
+        picked up by a later iteration).  TieredCache calls this after
+        releasing its lock from every mutating public method, so at op
+        boundaries the stage is empty and index == files on disk."""
+        if not self._staged:
+            # racy-but-benign fast path: callers flush after their own
+            # mutation, so missing a concurrent stage just defers it to
+            # that op's flush
+            return
+        while True:
+            with lock:
+                if not self._staged:
+                    return
+                key = next(iter(self._staged))
+                value = self._staged[key]
+            path = self._path(key)
+            err = False
+            try:
+                _written, meta = self.codec.dump(value, path)
+            except OSError:
+                err = True
+            with lock:
+                if self._staged.get(key, MISS) is not value:
+                    # dropped or replaced mid-write; if nothing current
+                    # claims the key, the file we just wrote is an orphan
+                    if key not in self._index:
+                        try:
+                            os.unlink(path)
+                        except OSError:
+                            pass
+                    continue
+                del self._staged[key]
+                entry = self._index.get(key)
+                if entry is None:
+                    continue
+                if err:
+                    # a failed spill write is a rejected insert, not a
+                    # crash on the serving path; leave no partial file
+                    self.io_errors += 1
+                    nbytes, _m = self._index.pop(key)
+                    self.stats.bytes_used -= nbytes
+                    try:
+                        os.unlink(path)
+                    except OSError:
+                        pass
+                else:
+                    self._index[key] = (entry[0], meta)
 
     def set_capacity(self, capacity_bytes: int) -> Evicted:
         self.capacity = int(capacity_bytes)
@@ -374,6 +448,7 @@ class DiskTier:
 
     def _drop(self, key: int) -> None:
         nbytes, _meta = self._index.pop(key)
+        self._staged.pop(key, None)
         self.stats.bytes_used -= nbytes
         try:
             os.unlink(self._path(key))
@@ -395,3 +470,37 @@ class DiskTier:
             os.rmdir(self.dir)
         except OSError:
             pass
+
+
+class HbmTier(DramTier):
+    """Device-resident tier at the head of a partition chain.
+
+    Payloads are held as ``jax.Array`` on the default device —
+    ``jax.device_put`` on insert, so a hit serves the accelerator-side
+    buffer zero-copy into the training step (on the CPU backend the
+    semantics and accounting are identical; only the memory space
+    differs).  Accounting, eviction policies and the chain protocol are
+    inherited from :class:`DramTier`; byte sizes stay caller-declared
+    (host-side nbytes — the MDP's currency).
+
+    Only array payloads are admitted (:meth:`wants_value`): raw encoded
+    ``bytes`` gain nothing from device residency and would force a
+    host copy on every decode, so the chain routes them to DRAM.
+    """
+
+    def __init__(self, capacity_bytes: int, evict_policy: str = "none"):
+        super().__init__(capacity_bytes, evict_policy)
+        import jax  # baked into the toolchain; fail loud if absent
+        self._jax = jax
+
+    @staticmethod
+    def wants_value(value: Any) -> bool:
+        """Device-residency eligibility: ndarray-like payloads only."""
+        return hasattr(value, "__array__") or hasattr(value, "dtype")
+
+    def to_device(self, value: Any):
+        """Host payload -> device array (no-op for resident arrays)."""
+        return self._jax.device_put(value)
+
+    def put(self, key: int, value: Any, nbytes: int) -> Evicted:
+        return super().put(key, self.to_device(value), nbytes)

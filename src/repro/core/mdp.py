@@ -84,25 +84,40 @@ def optimize(hw: HardwareProfile, ds: DatasetProfile,
 @dataclass(frozen=True)
 class TieredPartition:
     """One split per cache level: ``dram`` partitions ``s_cache``,
-    ``disk`` partitions ``s_disk``; ``throughput`` is the combined
-    two-level model prediction (both member Partitions carry it too)."""
+    ``disk`` partitions ``s_disk``, and (when a device tier is
+    configured) ``hbm`` partitions ``s_hbm``; ``throughput`` is the
+    combined multi-level model prediction (member Partitions carry it
+    too).  ``hbm`` trails with a ``None`` default so existing
+    two-level positional construction keeps working."""
     dram: Partition
     disk: Partition
     throughput: float
+    hbm: Optional[Partition] = None
 
     @property
     def label(self) -> str:
+        if self.hbm is not None:
+            return f"{self.hbm.label}|{self.dram.label}|{self.disk.label}"
         return f"{self.dram.label}|{self.disk.label}"
 
 
-def _solve_level_on_grid(hw, ds, job, grid, fixed, level: str) -> Partition:
-    """Sweep one level's simplex with the other level fixed — a single
-    vectorized two-tier model pass."""
+def _solve_level_on_grid(hw, ds, job, grid, fixed, level: str,
+                         fixed_hbm=None) -> Partition:
+    """Sweep one level's simplex with the other level(s) fixed — a
+    single vectorized tiered model pass.  ``fixed_hbm`` pins the device
+    level while sweeping dram/disk; ``level == "hbm"`` sweeps the
+    device level with ``fixed`` = (dram_split, disk_split)."""
     xe, xd, xa = grid
     if level == "dram":
-        overall = dsi_throughput_tiered(hw, ds, job, (xe, xd, xa), fixed)
-    else:
-        overall = dsi_throughput_tiered(hw, ds, job, fixed, (xe, xd, xa))
+        overall = dsi_throughput_tiered(hw, ds, job, (xe, xd, xa), fixed,
+                                        fixed_hbm)
+    elif level == "disk":
+        overall = dsi_throughput_tiered(hw, ds, job, fixed, (xe, xd, xa),
+                                        fixed_hbm)
+    else:                                  # "hbm"
+        dram_fixed, disk_fixed = fixed
+        overall = dsi_throughput_tiered(hw, ds, job, dram_fixed,
+                                        disk_fixed, (xe, xd, xa))
     best = int(np.argmax(overall))
     return Partition(float(xe[best]), float(xd[best]), float(xa[best]),
                      float(overall[best]))
@@ -111,32 +126,50 @@ def _solve_level_on_grid(hw, ds, job, grid, fixed, level: str) -> Partition:
 def optimize_tiered(hw: HardwareProfile, ds: DatasetProfile,
                     job: Optional[JobProfile] = None, step: float = 0.01,
                     sweeps: int = 2) -> TieredPartition:
-    """Form×tier MDP: coordinate descent over the two simplexes.
+    """Form×tier MDP: coordinate descent over up to three simplexes.
 
-    A joint 1%-grid over both levels is ~26M points; instead each sweep
-    fixes one level and brute-forces the other (two vectorized 5151-
-    point passes per sweep).  The objective is monotone under each
-    conditional argmax, so two sweeps reach a coordinate-wise optimum —
-    in practice the first disk pass already lands it, because the DRAM
-    level's greedy coverage is solved first and the disk level only
-    sees the leftovers.  With no disk tier configured the result
-    degenerates to :func:`optimize`'s split with an all-encoded disk
-    label placeholder.
+    A joint 1%-grid over multiple levels is combinatorial (~26M points
+    for two, ~10^11 for three); instead each sweep fixes the other
+    level(s) and brute-forces one (vectorized 5151-point passes).  The
+    objective is monotone under each conditional argmax, so a couple of
+    sweeps reach a coordinate-wise optimum — in practice the first pass
+    per level already lands it, because faster levels' greedy coverage
+    is solved first and slower levels only see the leftovers.  With no
+    disk tier configured the result degenerates to :func:`optimize`'s
+    split with an all-encoded disk label placeholder; with no device
+    tier ``hbm`` stays ``None`` and the solve is exactly the two-level
+    descent.
     """
     job = job or JobProfile()
     grid = _grid_cached(step)
     dram = _solve_on_grid(hw, ds, job, grid)      # one-level warm start
     disk = Partition(1.0, 0.0, 0.0, dram.throughput)
-    if hw.b_disk <= 0 or hw.s_disk <= 0:
+    has_hbm = hw.b_hbm > 0 and hw.s_hbm > 0
+    has_disk = hw.b_disk > 0 and hw.s_disk > 0
+    if not has_disk and not has_hbm:
         return TieredPartition(dram, disk, dram.throughput)
+    hbm = Partition(0.0, 0.0, 1.0, dram.throughput) if has_hbm else None
     for _ in range(max(int(sweeps), 1)):
-        disk = _solve_level_on_grid(hw, ds, job, grid,
-                                    (dram.x_e, dram.x_d, dram.x_a), "disk")
-        dram = _solve_level_on_grid(hw, ds, job, grid,
-                                    (disk.x_e, disk.x_d, disk.x_a), "dram")
+        hbm_fixed = (hbm.x_e, hbm.x_d, hbm.x_a) if has_hbm else None
+        if has_hbm:
+            # fastest level first: device coverage shapes what the
+            # lower levels are left to cover
+            hbm = _solve_level_on_grid(
+                hw, ds, job, grid,
+                ((dram.x_e, dram.x_d, dram.x_a),
+                 (disk.x_e, disk.x_d, disk.x_a)), "hbm")
+            hbm_fixed = (hbm.x_e, hbm.x_d, hbm.x_a)
+        if has_disk:
+            disk = _solve_level_on_grid(
+                hw, ds, job, grid,
+                (dram.x_e, dram.x_d, dram.x_a), "disk", hbm_fixed)
+        dram = _solve_level_on_grid(
+            hw, ds, job, grid,
+            (disk.x_e, disk.x_d, disk.x_a), "dram", hbm_fixed)
     thr = dram.throughput
     return TieredPartition(replace_throughput(dram, thr),
-                           replace_throughput(disk, thr), thr)
+                           replace_throughput(disk, thr), thr,
+                           replace_throughput(hbm, thr) if hbm else None)
 
 
 def replace_throughput(p: Partition, thr: float) -> Partition:
@@ -161,7 +194,8 @@ def shard_view(hw: HardwareProfile, ds: DatasetProfile, n_shards: int
     n = max(int(n_shards), 1)
     if n == 1:
         return hw, ds
-    return (replace(hw, s_cache=hw.s_cache / n, s_disk=hw.s_disk / n),
+    return (replace(hw, s_cache=hw.s_cache / n, s_disk=hw.s_disk / n,
+                    s_hbm=hw.s_hbm / n),
             replace(ds, n_total=max(int(np.ceil(ds.n_total / n)), 1)))
 
 
@@ -212,11 +246,14 @@ class IncrementalSolver:
 
     def predict_tiered(self, hw: HardwareProfile,
                        dram_split: Tuple[float, float, float],
-                       disk_split: Tuple[float, float, float]) -> float:
-        """Two-level model prediction for one concrete (dram, disk)
-        split pair."""
+                       disk_split: Tuple[float, float, float],
+                       hbm_split: Optional[Tuple[float, float, float]]
+                       = None) -> float:
+        """Tiered model prediction for one concrete (dram, disk[, hbm])
+        split tuple."""
         return float(dsi_throughput_tiered(hw, self.ds, self.job,
-                                           dram_split, disk_split))
+                                           dram_split, disk_split,
+                                           hbm_split))
 
 
 def sweep(hw: HardwareProfile, ds: DatasetProfile,

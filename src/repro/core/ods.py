@@ -184,22 +184,25 @@ class ODSState:
     def _pick_candidates(self, cand: np.ndarray, take: int) -> np.ndarray:
         """Draw ``take`` substitution picks from ``cand``.  Single-tier
         (residency None): one uniform draw, the paper's rule and the
-        historical byte-identical path.  Two-tier: DRAM-resident
-        candidates are exhausted first (uniformly among themselves),
-        then disk-resident ones — opportunistic sampling prefers the
-        faster tier when both could fill a slot."""
+        historical byte-identical path.  Tiered: faster-tier candidates
+        are exhausted first (uniformly among themselves) — device (HBM)
+        residents, then DRAM, then disk — opportunistic sampling
+        prefers the fastest tier when several could fill a slot.  With
+        no level-3 entries the HBM bucket is empty and the draw
+        sequence is byte-identical to the two-tier rule."""
         if self.residency is None:
             return self.rng.choice(cand, size=take, replace=False)
         res = self.residency[cand]
-        dram = cand[res >= 2]
-        slower = cand[res < 2]
-        n_dram = min(take, len(dram))
+        buckets = (cand[res >= 3], cand[(res >= 2) & (res < 3)],
+                   cand[res < 2])
         picks = []
-        if n_dram:
-            picks.append(self.rng.choice(dram, size=n_dram, replace=False))
-        if take - n_dram:
-            picks.append(self.rng.choice(slower, size=take - n_dram,
-                                         replace=False))
+        left = take
+        for bucket in buckets:
+            n = min(left, len(bucket))
+            if n:
+                picks.append(self.rng.choice(bucket, size=n,
+                                             replace=False))
+                left -= n
         return np.concatenate(picks) if picks else np.empty(0, np.int64)
 
     # ------------------------------------------------------------------

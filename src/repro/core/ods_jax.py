@@ -42,9 +42,11 @@ def _substitute_core(state: ODSJaxState, requested: jax.Array,
     diverge between them — only candidate *scoring* differs).
 
     ``residency`` is ``None`` (single-tier: cached-unseen 2 > uncached-
-    unseen 1) or uint8[N] tier levels 0 storage / 1 disk / 2 DRAM
-    (two-tier: DRAM-unseen 3 > disk-unseen 2 > uncached-unseen 1) —
-    a trace-time constant, so each variant compiles once.
+    unseen 1) or uint8[N] tier levels 0 storage / 1 disk / 2 DRAM /
+    3 HBM (tiered: HBM-unseen 4 > DRAM-unseen 3 > disk-unseen 2 >
+    uncached-unseen 1; with no level-3 entries the ranks reduce exactly
+    to the two-tier rule) — a trace-time constant, so each variant
+    compiles once.
     """
     N = state.status.shape[0]
     B = requested.shape[0]
@@ -64,8 +66,11 @@ def _substitute_core(state: ODSJaxState, requested: jax.Array,
     if residency is None:
         score = jnp.where(free & cached, 2, 0)
     else:
+        hbm = residency >= 3
         dram = residency >= 2
-        score = jnp.where(free & cached & dram, 3, 0)
+        score = jnp.where(free & cached & hbm, 4, 0)
+        score = jnp.where(free & cached & dram & ~hbm,
+                          jnp.maximum(score, 3), score)
         score = jnp.where(free & cached & ~dram, jnp.maximum(score, 2),
                           score)
     score = jnp.where(free & ~cached, jnp.maximum(score, 1), score)

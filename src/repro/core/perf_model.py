@@ -35,6 +35,12 @@ Gbit = 1e9 / 8
 #: no measured ``b_disk`` (telemetry calibration replaces it live)
 DEFAULT_DISK_BW = 1.5 * GB
 
+#: device-memory serve-bandwidth prior for HBM tiers with no measured
+#: ``b_hbm`` — conservatively the host→device link rate until the "h2d"
+#: telemetry channel calibrates it (an HBM hit costs no transfer at all,
+#: but the *fill* path that earned residency ran at this rate)
+DEFAULT_HBM_BW = 100 * GB
+
 
 @dataclass(frozen=True)
 class HardwareProfile:
@@ -55,6 +61,9 @@ class HardwareProfile:
     # SSD spill tier (form×tier MDP): 0 disables the disk level
     b_disk: float = 0.0       # local disk read bandwidth (B/s)
     s_disk: float = 0.0       # disk spill capacity (bytes)
+    # device-resident (HBM) tier: 0 disables the device level
+    b_hbm: float = 0.0        # device-tier serve bandwidth (B/s)
+    s_hbm: float = 0.0        # device cache capacity (bytes)
 
 
 @dataclass(frozen=True)
@@ -223,17 +232,25 @@ def _form_rates(hw: HardwareProfile, ds: DatasetProfile, job: JobProfile,
 
 
 def dsi_throughput_tiered(hw: HardwareProfile, ds: DatasetProfile,
-                          job: JobProfile, dram_split, disk_split):
-    """Overall DSI throughput with a two-level cache.
+                          job: JobProfile, dram_split, disk_split,
+                          hbm_split=None):
+    """Overall DSI throughput with a two- or three-level cache.
 
-    ``dram_split`` partitions ``hw.s_cache`` and ``disk_split``
-    partitions ``hw.s_disk`` across the three forms; each may be a
-    scalar triple or broadcastable arrays (the MDP solver fixes one
-    level and sweeps the other).  Coverage is greedy most-processed
-    first within each level (Eqs. 2/4/6), the disk level covering only
-    samples the DRAM level left over; per-form serve rates come from
-    :func:`_form_rates` at ``b_cache`` vs ``b_disk``.  With
-    ``b_disk * s_disk == 0`` this reduces exactly to Eq. 9.
+    ``dram_split`` partitions ``hw.s_cache``, ``disk_split`` partitions
+    ``hw.s_disk`` and ``hbm_split`` (default: ``dram_split``'s
+    geometry) partitions ``hw.s_hbm`` across the three forms; each may
+    be a scalar triple or broadcastable arrays (the MDP solver fixes
+    two levels and sweeps the third).  Coverage is greedy
+    most-processed first within each level (Eqs. 2/4/6), faster levels
+    covering first — HBM, then DRAM, then the disk level over what DRAM
+    left over; per-form DRAM/disk serve rates come from
+    :func:`_form_rates` at ``b_cache`` vs ``b_disk``.  A device-tier
+    hit is already accelerator-resident and device kernels handle any
+    remaining processing (fused decode+augment), so its rate skips the
+    NIC/CPU/PCIe terms entirely: ``min(b_hbm / bytes_f, n * t_gpu)``.
+    With ``b_hbm * s_hbm == 0`` the computation is *bit-identical* to
+    the two-level model (regression-pinned), and with
+    ``b_disk * s_disk == 0`` too it reduces exactly to Eq. 9.
     """
     x_e, x_d, x_a = (np.asarray(v, np.float64) for v in dram_split)
     y_e, y_d, y_a = (np.asarray(v, np.float64) for v in disk_split)
@@ -249,6 +266,23 @@ def dsi_throughput_tiered(hw: HardwareProfile, ds: DatasetProfile,
         da2 = dd2 = de2 = 0.0
     N = float(ds.n_total)
     remaining = N + 0.0 * (x_a + y_a)          # broadcast shape
+    hbm = 0.0
+    s_hbm = hw.s_hbm if hw.b_hbm > 0 else 0.0
+    if s_hbm > 0:
+        zs = hbm_split if hbm_split is not None else (x_e, x_d, x_a)
+        z_e, z_d, z_a = (np.asarray(v, np.float64) for v in zs)
+        n = hw.n_nodes
+        da0 = min(hw.b_hbm / a_b, n * hw.t_gpu)
+        dd0 = min(hw.b_hbm / d_b, n * hw.t_gpu)
+        de0 = min(hw.b_hbm / S, n * hw.t_gpu)
+        remaining = remaining + 0.0 * z_a
+        n_a0 = np.minimum(remaining, z_a * s_hbm / a_b)
+        remaining = remaining - n_a0
+        n_d0 = np.minimum(remaining, z_d * s_hbm / d_b)
+        remaining = remaining - n_d0
+        n_e0 = np.minimum(remaining, z_e * s_hbm / S)
+        remaining = remaining - n_e0
+        hbm = n_a0 * da0 + n_d0 * dd0 + n_e0 * de0
     n_a1 = np.minimum(remaining, x_a * hw.s_cache / a_b)
     remaining = remaining - n_a1
     n_d1 = np.minimum(remaining, x_d * hw.s_cache / d_b)
@@ -261,7 +295,8 @@ def dsi_throughput_tiered(hw: HardwareProfile, ds: DatasetProfile,
     remaining = remaining - n_d2
     n_e2 = np.minimum(remaining, y_e * s_disk / S)
     remaining = remaining - n_e2
-    overall = (n_a1 * da1 + n_d1 * dd1 + n_e1 * de1
+    overall = (hbm
+               + n_a1 * da1 + n_d1 * dd1 + n_e1 * de1
                + n_a2 * da2 + n_d2 * dd2 + n_e2 * de2
                + np.maximum(remaining, 0.0) * dsi_s) / N
     return overall
@@ -272,7 +307,7 @@ def dsi_throughput_tiered(hw: HardwareProfile, ds: DatasetProfile,
 # ---------------------------------------------------------------------------
 
 #: HardwareProfile fields a telemetry snapshot can override.
-CALIBRATABLE = ("t_da", "t_a", "b_storage", "b_cache", "b_disk")
+CALIBRATABLE = ("t_da", "t_a", "b_storage", "b_cache", "b_disk", "b_hbm")
 
 
 def calibrate(hw: HardwareProfile, telemetry,

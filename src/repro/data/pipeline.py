@@ -9,11 +9,24 @@ so the paper's concurrency experiments run for real on CPU::
     pipe = DSIPipeline(server.open_session(batch_size=32), storage)
     batch = pipe.next_batch()
 
-Two executors (the ``executor=`` knob):
+Three executors (the ``executor=`` knob):
 
 * ``"per-sample"`` (default, the seed behavior): every sample runs
   fetch->decode->augment serially inside one worker, ``next_batch`` is a
   synchronous barrier over the whole batch.
+* ``"device"``: device-resident preprocessing — encoded samples go
+  through the fused Pallas decode+augment kernel
+  (:func:`repro.kernels.augment.ops.decode_augment_batch_seeded`) in one
+  launch per batch (only per-sample scalars cross the PCIe link), HBM
+  cache hits serve zero-copy device arrays, and the collated
+  ``"images"`` tensor is a ``jax.Array`` ready for the training step.
+  Host→device payload copies (DRAM/disk hits, decoded-hit uploads) are
+  metered on the telemetry ``"h2d"`` channel, which calibrates
+  ``HardwareProfile.b_hbm`` — an all-HBM-hit epoch records zero bytes
+  there.  Synchronous and single-threaded like ``"per-sample"``
+  (VirtualClock-deterministic with ``sync_refills``); requires a
+  dataset whose ``decode`` is the counter-hash
+  ``SyntheticDataset.decode`` (see :func:`fused_decode_seed`).
 * ``"stage-parallel"``: a decoupled asynchronous executor — bounded
   queues between sampler -> fetch -> decode -> augment -> collate,
   per-stage worker groups sized from the service telemetry's stage EWMAs
@@ -58,13 +71,25 @@ from repro.data.synthetic import SyntheticDataset
 
 log = logging.getLogger(__name__)
 
-EXECUTORS = ("per-sample", "stage-parallel")
+EXECUTORS = ("per-sample", "stage-parallel", "device")
 
 
 def _aug_seed(epoch_tag: int, sid: int) -> int:
-    """The per-sample augmentation seed — shared by both executors and
+    """The per-sample augmentation seed — shared by every executor and
     both augment backends, so batch composition never changes content."""
     return (epoch_tag * 1_000_003 + sid) & 0x7FFFFFFF
+
+
+def fused_decode_seed(ds) -> Optional[int]:
+    """The dataset's decode-PRNG seed when its ``decode`` is the
+    counter-hash ``SyntheticDataset.decode`` the fused Pallas kernel
+    reimplements; ``None`` for any dataset that overrides ``decode``
+    (e.g. ``DecodeHeavyDataset``) — the device executor refuses those at
+    construction rather than silently diverging from the host path.
+    Thin lazy wrapper over :func:`repro.kernels.decode.ops` so importing
+    this module never pulls in jax."""
+    from repro.kernels.decode.ops import fused_decode_seed as impl
+    return impl(ds)
 
 
 @dataclass
@@ -532,6 +557,14 @@ class DSIPipeline:
         self.svc: SenecaService = self.session.service
         self.storage = storage
         self.ds: SyntheticDataset = storage.dataset
+        self._fused_seed: Optional[int] = None
+        if executor == "device":
+            self._fused_seed = fused_decode_seed(self.ds)
+            if self._fused_seed is None:
+                raise ValueError(
+                    "device executor needs a dataset whose decode is the "
+                    "counter-hash SyntheticDataset.decode (the fused "
+                    f"kernel's semantics); got {type(self.ds).__name__}")
         self.bs = self.session.batch_size
         self.pool = ThreadPoolExecutor(max_workers=n_workers)
         self.times = StageTimes()
@@ -630,6 +663,11 @@ class DSIPipeline:
             if self._consume_hook is not None:
                 self._consume_hook(batch)
             return batch
+        if self.executor == "device":
+            batch = self._next_batch_device()
+            if self._consume_hook is not None:
+                self._consume_hook(batch)
+            return batch
         ids, _forms = self.session.next_batch_ids()
         epoch_tag = self.session.epoch
         imgs = list(self.pool.map(
@@ -651,6 +689,125 @@ class DSIPipeline:
         self.svc.maybe_repartition()
         if self._consume_hook is not None:
             self._consume_hook(batch)
+        return batch
+
+    def _next_batch_device(self) -> Dict[str, np.ndarray]:
+        """One batch through the device route: fused decode+augment for
+        encoded samples, zero-copy serve for HBM hits, device collate.
+
+        Every sample ends as a device row; the only host→device payload
+        traffic (metered on the ``"h2d"`` channel) is DRAM/disk-cached
+        values being uploaded.  Encoded samples never materialize a host
+        decoded image — the fused kernel ships per-sample scalars only —
+        so (by design) this route admits no "decoded" forms.
+        """
+        import jax.numpy as jnp
+
+        from repro.kernels.augment.ops import (augment_batch_seeded,
+                                               decode_augment_batch_seeded)
+        tel = self.telemetry
+        ids, _forms = self.session.next_batch_ids()
+        epoch_tag = self.session.epoch
+        rows: List = [None] * len(ids)
+        enc_group: List[Tuple[int, int, bytes]] = []   # (slot, sid, payload)
+        dec_group: List[Tuple[int, int, np.ndarray]] = []
+        for slot, sid_ in enumerate(ids):
+            sid = int(sid_)
+            t_look = time.monotonic()
+            form, value, tier = self.session.lookup_tiered(sid)
+            tel.record_serve(form)
+            t0 = time.monotonic()
+            if form is None:
+                enc = self.storage.fetch(sid)
+                dt = time.monotonic() - t0
+                self.times.fetch += dt
+                tel.record_stage("fetch_storage", dt)
+                tel.record_bytes("storage", len(enc), dt)
+                self.session.admit(sid, "encoded", enc, len(enc))
+                enc_group.append((slot, sid, enc))
+                continue
+            self.times.fetch += t0 - t_look
+            tel.record_stage("fetch_cache", t0 - t_look)
+            if form == "augmented" and tier == "hbm":
+                # zero-copy device serve: no h2d traffic at all
+                rows[slot] = value
+                continue
+            channel = "disk" if tier == "disk" else "cache"
+            if form == "augmented":
+                host = np.asarray(value)
+                tel.record_bytes(channel, host.nbytes, t0 - t_look)
+                t1 = time.monotonic()
+                rows[slot] = jnp.asarray(host)
+                tel.record_bytes("h2d", host.nbytes,
+                                 time.monotonic() - t1)
+            elif form == "decoded":
+                img = np.asarray(value)
+                tel.record_bytes(channel, img.nbytes, t0 - t_look)
+                dec_group.append((slot, sid, img))
+            else:                                      # encoded cache hit
+                tel.record_bytes(channel, len(value), t0 - t_look)
+                enc_group.append((slot, sid, value))
+        fresh: List[Tuple[int, object]] = []           # (sid, device row)
+        if enc_group:
+            sids = [sid for _s, sid, _p in enc_group]
+            seeds = np.asarray([_aug_seed(epoch_tag, sid) for sid in sids],
+                               np.int64)
+            t1 = time.monotonic()
+            out = decode_augment_batch_seeded(
+                [p for _s, _sid, p in enc_group], sids, seeds,
+                ds_seed=self._fused_seed, image_hw=self.ds.image_hw,
+                crop_h=self.ds.crop_hw[0], crop_w=self.ds.crop_hw[1])
+            dt = time.monotonic() - t1
+            # one fused launch covers both stages; split its time evenly
+            # so the calibrated t_da = conc/(decode+augment) lands on
+            # the fused rate
+            self.times.decode += dt / 2
+            self.times.augment += dt / 2
+            tel.record_stage("decode", dt / 2, n=len(enc_group))
+            tel.record_stage("augment", dt / 2, n=len(enc_group))
+            for i, (slot, sid, _p) in enumerate(enc_group):
+                rows[slot] = out[i]
+                fresh.append((sid, out[i]))
+        if dec_group:
+            sids = [sid for _s, sid, _img in dec_group]
+            imgs = np.stack([img for _s, _sid, img in dec_group])
+            seeds = np.asarray([_aug_seed(epoch_tag, sid) for sid in sids],
+                               np.int64)
+            t1 = time.monotonic()
+            out = augment_batch_seeded(imgs, seeds, *self.ds.crop_hw,
+                                       as_device=True)
+            dt = time.monotonic() - t1
+            self.times.augment += dt
+            tel.record_stage("augment", dt, n=len(dec_group))
+            # decoded pixels shipped up for the device-side augment
+            tel.record_bytes("h2d", imgs.nbytes, dt)
+            for i, (slot, sid, _img) in enumerate(dec_group):
+                rows[slot] = out[i]
+                fresh.append((sid, out[i]))
+        # admit the freshly augmented device rows: HBM-first put routing
+        # keeps them device-resident; without a device tier admit host
+        # copies so a DRAM slot never pins a jax buffer
+        if fresh and self.svc.tier_capacity("augmented") > 0:
+            wanted = self.svc.admission_votes("augmented",
+                                              [sid for sid, _r in fresh])
+            entries = [(sid, row if self.svc.has_hbm else np.asarray(row),
+                        int(row.nbytes))
+                       for (sid, row), w in zip(fresh, wanted) if w]
+            if entries:
+                self.session.admit_batch("augmented", entries)
+        t0 = time.monotonic()
+        batch = {
+            "images": jnp.stack(rows).astype(jnp.float32),
+            "labels": np.asarray([self.ds.label(int(s)) for s in ids],
+                                 np.int32),
+            "ids": np.asarray(ids, np.int64),
+        }
+        dt = time.monotonic() - t0
+        self.times.collate += dt
+        tel.record_stage("collate", dt, n=len(ids))
+        self.times.batches += 1
+        self._process_refills()
+        self.svc.maybe_repartition()
         return batch
 
     def _process_refills(self, max_n: int = 32) -> None:

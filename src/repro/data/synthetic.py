@@ -20,6 +20,33 @@ from typing import Dict, Tuple
 
 import numpy as np
 
+# splitmix32-style counter hash: the canonical "JPEG decode" pixel PRNG.
+# Every pixel byte is a pure function of (base seed, flat pixel index) in
+# exact uint32 wraparound math, so the jnp/Pallas decode kernel
+# (repro.kernels.decode) reproduces it bit-for-bit on device — something a
+# stateful NumPy Generator could never offer.  Changing any constant here
+# breaks the kernel parity tests.
+_HASH_STEP = 0x9E3779B9          # golden-ratio counter increment
+_HASH_M1 = 0x7FEB352D
+_HASH_M2 = 0x846CA68B
+
+
+def pixel_hash(base: int, n: int) -> np.ndarray:
+    """uint8[n] pixel stream for counter indices 0..n-1 (host reference).
+
+    ``base`` is the per-sample seed, reduced mod 2**32; all arithmetic
+    wraps in uint32 exactly like the device twin
+    :func:`repro.kernels.decode.ref.pixel_hash_jnp`.
+    """
+    idx = np.arange(n, dtype=np.uint32)
+    x = np.uint32(base & 0xFFFFFFFF) + idx * np.uint32(_HASH_STEP)
+    x ^= x >> np.uint32(16)
+    x *= np.uint32(_HASH_M1)
+    x ^= x >> np.uint32(15)
+    x *= np.uint32(_HASH_M2)
+    x ^= x >> np.uint32(16)
+    return (x & np.uint32(0xFF)).astype(np.uint8)
+
 
 @dataclass(frozen=True)
 class SyntheticDataset:
@@ -48,15 +75,30 @@ class SyntheticDataset:
     def label(self, sample_id: int) -> int:
         return (sample_id * 2654435761) % self.n_classes
 
+    def decode_base_seed(self, sample_id: int) -> int:
+        """The per-sample counter-hash base seed (mod 2**32) — the host
+        half of the device decode contract (repro.kernels.decode)."""
+        return (self.seed * 31 + sample_id) & 0xFFFFFFFF
+
+    @staticmethod
+    def decode_head_mix(encoded: bytes) -> int:
+        """Payload statistic folded into every pixel (0..255): the sum of
+        the first 4 KiB, so decode actually reads the buffer."""
+        head = np.frombuffer(encoded[:4096], dtype=np.uint8)
+        return int(head.sum()) % 256
+
     def decode(self, encoded: bytes, sample_id: int) -> np.ndarray:
         """'JPEG decode': deterministic uint8 HWC image derived from the
-        payload.  Does real CPU work proportional to the image area."""
+        payload.  Does real CPU work proportional to the image area.
+
+        Pixels come from the counter hash (:func:`pixel_hash`) over the
+        per-sample base seed, plus a payload-header mix — exactly the
+        semantics the fused Pallas decode kernel reproduces on device.
+        """
         h, w = self.image_hw
-        rng = np.random.default_rng(self.seed * 31 + sample_id)
-        img = rng.integers(0, 256, size=(h, w, 3), dtype=np.uint8)
-        # mix in payload statistics so decode actually reads the buffer
-        head = np.frombuffer(encoded[:4096], dtype=np.uint8)
-        img = (img.astype(np.int32) + int(head.sum()) % 256) % 256
+        img = pixel_hash(self.decode_base_seed(sample_id),
+                         h * w * 3).reshape(h, w, 3)
+        img = (img.astype(np.int32) + self.decode_head_mix(encoded)) % 256
         return img.astype(np.uint8)
 
     def decoded_bytes(self) -> int:

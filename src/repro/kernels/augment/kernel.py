@@ -11,10 +11,13 @@ memory-bound, bytes_out drop 4x).
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.kernels.device import resolve_interpret
 
 MEAN = (0.485, 0.456, 0.406)
 STD = (0.229, 0.224, 0.225)
@@ -43,15 +46,15 @@ def _augment_kernel(img_ref, top_ref, left_ref, flip_ref, out_ref, *,
 def augment(images: jax.Array, tops: jax.Array, lefts: jax.Array,
             flips: jax.Array, *, crop_h: int, crop_w: int,
             out_dtype=jnp.bfloat16,
-            interpret: bool = None) -> jax.Array:
+            interpret: Optional[bool] = None) -> jax.Array:
     """images (B,H,W,3) uint8 -> (B,crop_h,crop_w,3) out_dtype.
 
-    ``interpret=None`` (default) auto-selects: compiled Mosaic on TPU,
-    interpreter everywhere else (CPU CI / tests).  The flag is static, so
-    the choice is resolved once per (shape, dtype) trace.
+    ``interpret=None`` (default) auto-selects via the cached module-level
+    probe (repro.kernels.device): compiled Mosaic on TPU, interpreter
+    everywhere else (CPU CI / tests).  The flag is static, so the choice
+    is resolved once per (shape, dtype) trace.
     """
-    if interpret is None:
-        interpret = jax.default_backend() != "tpu"
+    interpret = resolve_interpret(interpret)
     B, H, W, C = images.shape
     assert C == 3
     kernel = functools.partial(_augment_kernel, crop_h=crop_h, crop_w=crop_w)

@@ -10,8 +10,16 @@ integer seeds with the exact draw sequence of
 :func:`repro.data.augment.augment_np`, so the kernel output matches the
 NumPy fallback per sample (same seed -> same crop/flip, float32 math on
 both sides) regardless of how samples are batched together.
+
+``decode_augment_batch_seeded(payloads, sample_ids, seeds, ...)`` goes one
+step further for counter-hash datasets: encoded byte buffers in, augmented
+device crops out, with decode and augment fused into one Pallas kernel —
+the host ships only per-sample scalars (seed base, header mix, crop
+params), never a decoded image.
 """
 from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -24,7 +32,7 @@ from repro.kernels.augment.ref import augment_ref
 
 def augment_batch(rng: jax.Array, images: jax.Array, crop_h: int,
                   crop_w: int, *, use_kernel: bool = True,
-                  interpret: bool = None,
+                  interpret: Optional[bool] = None,
                   out_dtype=jnp.bfloat16) -> jax.Array:
     B, H, W, _ = images.shape
     k1, k2, k3 = jax.random.split(rng, 3)
@@ -48,15 +56,19 @@ def _pad_to_bucket(n: int) -> int:
 
 def augment_batch_seeded(images: np.ndarray, seeds: np.ndarray,
                          crop_h: int, crop_w: int, *,
-                         out_dtype=jnp.float32, interpret: bool = None,
-                         bucket: int = None) -> np.ndarray:
+                         out_dtype=jnp.float32,
+                         interpret: Optional[bool] = None,
+                         bucket: Optional[int] = None,
+                         as_device: bool = False) -> np.ndarray:
     """(B,H,W,3) uint8 + per-sample seeds -> (B,crop_h,crop_w,3) host array.
 
     Batches are padded up to power-of-two buckets (rows repeated, result
     sliced back) to bound jit retraces across ragged group sizes;
     ``bucket`` overrides the target size (callers pass ``bucket=B`` for
     sizes they know recur, e.g. the full batch, so a 12-sample batch is
-    not padded to 16 forever).
+    not padded to 16 forever).  ``as_device`` skips the final host copy
+    and returns the sliced device array — the device-path executor
+    admits those rows into the HBM tier zero-copy.
     """
     images = np.ascontiguousarray(images)
     B, H, W, _ = images.shape
@@ -73,4 +85,45 @@ def augment_batch_seeded(images: np.ndarray, seeds: np.ndarray,
                   jnp.asarray(lefts), jnp.asarray(flips),
                   crop_h=crop_h, crop_w=crop_w, out_dtype=out_dtype,
                   interpret=interpret)
-    return np.asarray(out[:B])
+    return out[:B] if as_device else np.asarray(out[:B])
+
+
+def decode_augment_batch_seeded(payloads: Sequence[bytes],
+                                sample_ids: Sequence[int],
+                                seeds: np.ndarray, *, ds_seed: int,
+                                image_hw: Tuple[int, int], crop_h: int,
+                                crop_w: int, out_dtype=jnp.float32,
+                                interpret: Optional[bool] = None,
+                                bucket: Optional[int] = None) -> jax.Array:
+    """Encoded byte buffers + per-sample augment seeds -> augmented
+    (B,crop_h,crop_w,3) crops as a *device* array, decode and augment
+    fused into one kernel launch.
+
+    Crop/flip params come from the exact :func:`crop_flip_params` draw
+    sequence (via ``derive_batch_params``), and the decode half is the
+    counter hash of ``SyntheticDataset.decode`` — so per sample the
+    result equals ``augment_batch_seeded(decode(payload), seed)``
+    bitwise (pinned by tests/test_decode_kernel.py).  Same power-of-two
+    bucket padding as :func:`augment_batch_seeded`; the output stays on
+    device so an HBM cache tier can admit it zero-copy.
+    """
+    from repro.kernels.decode.ops import decode_params
+    B = len(payloads)
+    bases, mixes = decode_params(ds_seed, sample_ids, payloads)
+    H, W = image_hw
+    tops, lefts, flips = derive_batch_params(
+        (H, W), (crop_h, crop_w), np.asarray(seeds))
+    Bp = max(bucket, B) if bucket else _pad_to_bucket(B)
+    if Bp != B:
+        bases = np.pad(bases, (0, Bp - B), mode="edge")
+        mixes = np.pad(mixes, (0, Bp - B), mode="edge")
+        tops = np.pad(tops, (0, Bp - B), mode="edge")
+        lefts = np.pad(lefts, (0, Bp - B), mode="edge")
+        flips = np.pad(flips, (0, Bp - B), mode="edge")
+    from repro.kernels.decode.kernel import decode_augment
+    out = decode_augment(jnp.asarray(bases), jnp.asarray(mixes),
+                         jnp.asarray(tops), jnp.asarray(lefts),
+                         jnp.asarray(flips), img_h=H, img_w=W,
+                         crop_h=crop_h, crop_w=crop_w,
+                         out_dtype=out_dtype, interpret=interpret)
+    return out[:B]

@@ -1,0 +1,14 @@
+"""Device-side 'JPEG decode' kernels (counter-hash pixel synthesis).
+
+``repro.data.synthetic.SyntheticDataset.decode`` derives every pixel byte
+from a splitmix32-style counter hash plus a payload-header mix; this
+package reproduces that math bit-for-bit on device — standalone
+(:func:`ops.decode_batch`) or fused with crop/flip/normalize
+(:func:`repro.kernels.augment.ops.decode_augment_batch_seeded`), so the
+augmented tensor is produced in one device round-trip with no host-side
+decoded image at all.
+"""
+from repro.kernels.decode.ops import (decode_batch, decode_params,
+                                      fused_decode_seed)
+
+__all__ = ["decode_batch", "decode_params", "fused_decode_seed"]

@@ -1,0 +1,113 @@
+"""Pallas decode + fused decode/augment kernels.
+
+One grid step synthesizes one image: the counter hash runs over a
+``broadcasted_iota`` index cube, so there is no source tile to stage — the
+"decode" reads nothing but two scalars per sample (base seed + header
+mix).  The fused variant hashes *only the crop window's* source indices
+(mirrored columns under flip) and feeds the exact float pipeline of the
+augment kernel, emitting the normalized crop with no intermediate decoded
+image anywhere.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.augment.kernel import MEAN, STD
+from repro.kernels.decode.ref import pixel_hash_jnp
+from repro.kernels.device import resolve_interpret
+
+
+def _decode_kernel(base_ref, mix_ref, out_ref, *, h: int, w: int):
+    base = base_ref[0]
+    mix = mix_ref[0]
+    row = jax.lax.broadcasted_iota(jnp.uint32, (h, w, 3), 0)
+    col = jax.lax.broadcasted_iota(jnp.uint32, (h, w, 3), 1)
+    chan = jax.lax.broadcasted_iota(jnp.uint32, (h, w, 3), 2)
+    idx = (row * jnp.uint32(w) + col) * jnp.uint32(3) + chan
+    u8 = pixel_hash_jnp(base, idx).astype(jnp.int32)
+    out_ref[0] = ((u8 + mix) % 256).astype(jnp.uint8)
+
+
+@functools.partial(jax.jit, static_argnames=("h", "w", "interpret"))
+def decode(bases: jax.Array, mixes: jax.Array, *, h: int, w: int,
+           interpret: Optional[bool] = None) -> jax.Array:
+    """(B,) uint32 base seeds + (B,) int32 header mixes -> (B,h,w,3) uint8.
+
+    Byte-identical to ``SyntheticDataset.decode`` per sample (pinned by
+    tests/test_decode_kernel.py).
+    """
+    interpret = resolve_interpret(interpret)
+    B = bases.shape[0]
+    kernel = functools.partial(_decode_kernel, h=h, w=w)
+    return pl.pallas_call(
+        kernel,
+        grid=(B,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b: (b,)),
+            pl.BlockSpec((1,), lambda b: (b,)),
+        ],
+        out_specs=pl.BlockSpec((1, h, w, 3), lambda b: (b, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, h, w, 3), jnp.uint8),
+        interpret=interpret,
+    )(bases.astype(jnp.uint32), mixes.astype(jnp.int32))
+
+
+def _decode_augment_kernel(base_ref, mix_ref, top_ref, left_ref, flip_ref,
+                           out_ref, *, img_w: int, crop_h: int,
+                           crop_w: int):
+    base = base_ref[0]
+    mix = mix_ref[0]
+    top = top_ref[0]
+    left = left_ref[0]
+    flip = flip_ref[0]
+    i = jax.lax.broadcasted_iota(jnp.int32, (crop_h, crop_w, 3), 0)
+    j = jax.lax.broadcasted_iota(jnp.int32, (crop_h, crop_w, 3), 1)
+    c = jax.lax.broadcasted_iota(jnp.int32, (crop_h, crop_w, 3), 2)
+    # the flip is a source-index mirror: hash the pixel the flipped crop
+    # would have read, instead of materializing then reversing
+    src_j = jnp.where(flip != 0, crop_w - 1 - j, j)
+    row = (top + i).astype(jnp.uint32)
+    col = (left + src_j).astype(jnp.uint32)
+    idx = (row * jnp.uint32(img_w) + col) * jnp.uint32(3) \
+        + c.astype(jnp.uint32)
+    u8 = pixel_hash_jnp(base, idx).astype(jnp.int32)
+    pix = (u8 + mix) % 256
+    # from here: the augment kernel's exact float pipeline (/255, scalar
+    # per-channel normalize) so fused == decode-then-augment bitwise
+    x = pix.astype(jnp.float32) / 255.0
+    chans = [(x[:, :, ch] - MEAN[ch]) / STD[ch] for ch in range(3)]
+    out_ref[0] = jnp.stack(chans, axis=-1).astype(out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("img_h", "img_w", "crop_h",
+                                             "crop_w", "out_dtype",
+                                             "interpret"))
+def decode_augment(bases: jax.Array, mixes: jax.Array, tops: jax.Array,
+                   lefts: jax.Array, flips: jax.Array, *, img_h: int,
+                   img_w: int, crop_h: int, crop_w: int,
+                   out_dtype=jnp.float32,
+                   interpret: Optional[bool] = None) -> jax.Array:
+    """Fused decode+crop+flip+normalize: per-sample scalars in, augmented
+    (B,crop_h,crop_w,3) out — one kernel, one device round-trip."""
+    interpret = resolve_interpret(interpret)
+    del img_h  # part of the contract/signature; only img_w indexes memory
+    B = bases.shape[0]
+    kernel = functools.partial(_decode_augment_kernel, img_w=img_w,
+                               crop_h=crop_h, crop_w=crop_w)
+    scalar = pl.BlockSpec((1,), lambda b: (b,))
+    return pl.pallas_call(
+        kernel,
+        grid=(B,),
+        in_specs=[scalar] * 5,
+        out_specs=pl.BlockSpec((1, crop_h, crop_w, 3),
+                               lambda b: (b, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, crop_h, crop_w, 3), out_dtype),
+        interpret=interpret,
+    )(bases.astype(jnp.uint32), mixes.astype(jnp.int32),
+      tops.astype(jnp.int32), lefts.astype(jnp.int32),
+      flips.astype(jnp.int32))

@@ -1,0 +1,67 @@
+"""Public decode ops: host param derivation + batched device decode.
+
+The device decode contract is two scalars per sample — the counter-hash
+base seed and the payload-header mix — both derived here on host from the
+dataset seed and the encoded byte buffers (:func:`decode_params`), so the
+kernel never sees the payload itself.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.synthetic import FileDataset, SyntheticDataset
+from repro.kernels.decode.kernel import decode as _decode_kernel_call
+
+
+def decode_params(seed: int, sample_ids: Sequence[int],
+                  payloads: Sequence[bytes]
+                  ) -> Tuple[np.ndarray, np.ndarray]:
+    """(bases uint32[B], mixes int32[B]) for a batch of encoded buffers
+    under dataset ``seed`` — the host half of the kernel contract,
+    byte-compatible with ``SyntheticDataset.decode_base_seed`` /
+    ``decode_head_mix``."""
+    bases = np.fromiter(((seed * 31 + int(s)) & 0xFFFFFFFF
+                         for s in sample_ids), np.uint32,
+                        count=len(sample_ids))
+    mixes = np.fromiter((SyntheticDataset.decode_head_mix(p)
+                         for p in payloads), np.int32,
+                        count=len(payloads))
+    return bases, mixes
+
+
+def fused_decode_seed(ds) -> Optional[int]:
+    """The dataset seed when ``ds.decode`` is exactly the base
+    counter-hash decode (so the device kernel can substitute for it),
+    else None.  Subclasses that override ``decode`` (e.g.
+    ``DecodeHeavyDataset``) are rejected; ``FileDataset`` delegates to
+    its base, so it qualifies when the base does."""
+    base = ds.base if isinstance(ds, FileDataset) else ds
+    if type(base) is SyntheticDataset:
+        return int(base.seed)
+    return None
+
+
+def decode_batch(payloads: Sequence[bytes], sample_ids: Sequence[int], *,
+                 seed: int, image_hw: Tuple[int, int],
+                 interpret: Optional[bool] = None) -> np.ndarray:
+    """Batched device decode -> (B,h,w,3) uint8 host array, byte-identical
+    to per-sample ``SyntheticDataset.decode``."""
+    bases, mixes = decode_params(seed, sample_ids, payloads)
+    h, w = image_hw
+    out = _decode_kernel_call(jnp.asarray(bases), jnp.asarray(mixes),
+                              h=h, w=w, interpret=interpret)
+    return np.asarray(out)
+
+
+def decode_batch_ref(payloads: Sequence[bytes],
+                     sample_ids: Sequence[int], *, seed: int,
+                     image_hw: Tuple[int, int]) -> jax.Array:
+    """jnp oracle twin of :func:`decode_batch` (tests)."""
+    from repro.kernels.decode.ref import decode_ref
+    bases, mixes = decode_params(seed, sample_ids, payloads)
+    h, w = image_hw
+    return decode_ref(jnp.asarray(bases), jnp.asarray(mixes), h, w)

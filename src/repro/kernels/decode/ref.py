@@ -1,0 +1,41 @@
+"""jnp oracle for the decode kernel (and the shared hash body).
+
+:func:`pixel_hash_jnp` is the device twin of
+:func:`repro.data.synthetic.pixel_hash`: identical constants, identical
+uint32 wraparound, so host and device decode agree byte-for-byte.  The
+Pallas kernel calls the same function inside its body — pure ``jnp`` ops
+lower fine under ``pallas_call`` — keeping exactly one device copy of the
+mixer.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.data.synthetic import _HASH_M1, _HASH_M2, _HASH_STEP
+
+
+def pixel_hash_jnp(base: jax.Array, idx: jax.Array) -> jax.Array:
+    """uint32 pixel-byte stream (low 8 bits significant) for counter
+    indices ``idx`` under per-sample seed ``base`` (both uint32)."""
+    x = base + idx * jnp.uint32(_HASH_STEP)
+    x = x ^ (x >> jnp.uint32(16))
+    x = x * jnp.uint32(_HASH_M1)
+    x = x ^ (x >> jnp.uint32(15))
+    x = x * jnp.uint32(_HASH_M2)
+    x = x ^ (x >> jnp.uint32(16))
+    return x & jnp.uint32(0xFF)
+
+
+def _decode_one(base: jax.Array, mix: jax.Array, h: int, w: int
+                ) -> jax.Array:
+    idx = jnp.arange(h * w * 3, dtype=jnp.uint32)
+    u8 = pixel_hash_jnp(base, idx).astype(jnp.int32)
+    return ((u8 + mix) % 256).astype(jnp.uint8).reshape(h, w, 3)
+
+
+def decode_ref(bases: jax.Array, mixes: jax.Array, h: int, w: int
+               ) -> jax.Array:
+    """(B,) uint32 bases + (B,) int32 header mixes -> (B,h,w,3) uint8."""
+    return jax.vmap(lambda b, m: _decode_one(b, m, h, w))(
+        bases.astype(jnp.uint32), mixes.astype(jnp.int32))

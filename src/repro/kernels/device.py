@@ -1,0 +1,29 @@
+"""Shared device probe for the Pallas kernels.
+
+Every kernel entry point auto-selects ``interpret`` mode when the caller
+passes ``None``: compiled Mosaic on TPU, the Pallas interpreter everywhere
+else (CPU CI / tests).  The probe used to run per ``augment`` call —
+``jax.default_backend()`` walks the backend registry every batch — so it
+is hoisted here behind a cache shared by the augment and decode kernels.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+
+@functools.lru_cache(maxsize=1)
+def default_interpret() -> bool:
+    """True when Pallas kernels should run in interpret mode (non-TPU).
+
+    Cached for the process lifetime: the default backend cannot change
+    after the first JAX computation anyway.
+    """
+    import jax
+
+    return jax.default_backend() != "tpu"
+
+
+def resolve_interpret(interpret: Optional[bool]) -> bool:
+    """``None`` -> the cached probe; explicit flags pass through."""
+    return default_interpret() if interpret is None else bool(interpret)

@@ -58,6 +58,8 @@ class ShardedCache:
                  spill_bytes: int = 0,
                  spill_dir: Optional[str] = None,
                  spill_split: Optional[Tuple[float, float, float]] = None,
+                 hbm_bytes: int = 0,
+                 hbm_split: Optional[Tuple[float, float, float]] = None,
                  *,
                  shards: int = 1,
                  transport: str = "sim",
@@ -94,6 +96,8 @@ class ShardedCache:
         has_spill = spill_dir is not None and per_spill > 0
         self.spill_bytes = per_spill * n if has_spill else 0
         self.spill_dir = spill_dir if has_spill else None
+        per_hbm = int(hbm_bytes) // n
+        self.hbm_bytes = per_hbm * n
         self._xchg = (tempfile.mkdtemp(prefix="seneca-xchg-")
                       if transport == "process" else None)
         configs = [ShardConfig(
@@ -107,6 +111,9 @@ class ShardedCache:
             spill_bytes=per_spill if has_spill else 0,
             spill_split=(tuple(spill_split) if spill_split is not None
                          else None),
+            hbm_bytes=per_hbm,
+            hbm_split=(tuple(hbm_split) if hbm_split is not None
+                       else None),
             hardware=hardware, dataset_profile=dataset_profile, job=job,
             partition_step=partition_step,
             dataset=dataset,
@@ -128,6 +135,8 @@ class ShardedCache:
         self.split = tuple(hello[0]["split"])
         self.spill_split = (tuple(spill_split)
                             if spill_split is not None else None)
+        self.hbm_split = (tuple(hbm_split)
+                          if hbm_split is not None else None)
         #: per-shard MDP labels (None entries when the split was pinned)
         self.shard_partitions = [h["partition"] for h in hello]
 
@@ -153,6 +162,10 @@ class ShardedCache:
         if not getattr(self.transport, "wants_refs", False) \
                 or value is None:
             return value
+        if not isinstance(value, (bytes, np.ndarray)):
+            # device-resident arrays (HBM tier) cross processes as host
+            # copies; the receiving shard re-device_puts on admission
+            value = np.asarray(value)
         path = os.path.join(
             self._xchg, f"c{os.getpid()}-{next(self._seq)}.bin")
         return ship_payload(form, value, path)
@@ -171,6 +184,10 @@ class ShardedCache:
     @property
     def has_spill(self) -> bool:
         return self.spill_dir is not None
+
+    @property
+    def has_hbm(self) -> bool:
+        return self.hbm_bytes > 0
 
     def lookup(self, key: int) -> Tuple[Optional[str], Any]:
         form, value, _tier = self.lookup_tiered(key)
@@ -264,20 +281,24 @@ class ShardedCache:
             return bool(self._pending)
 
     def resize(self, split: Tuple[float, float, float],
-               spill_split: Optional[Tuple[float, float, float]] = None
+               spill_split: Optional[Tuple[float, float, float]] = None,
+               hbm_split: Optional[Tuple[float, float, float]] = None
                ) -> Dict[str, List[int]]:
         """Broadcast the new split to every shard; merge the per-shard
         evicted-key maps (disjoint keys — a plain extend)."""
         merged: Dict[str, List[int]] = {}
         for sid in range(self.n_shards):
             ev = self._call(sid, proto.OP_RESIZE, tuple(split),
-                            tuple(spill_split) if spill_split else None)
+                            tuple(spill_split) if spill_split else None,
+                            tuple(hbm_split) if hbm_split else None)
             for form, keys in ev.items():
                 if keys:
                     merged.setdefault(form, []).extend(keys)
         self.split = tuple(float(x) for x in split)
         if spill_split is not None:
             self.spill_split = tuple(float(y) for y in spill_split)
+        if hbm_split is not None:
+            self.hbm_split = tuple(float(z) for z in hbm_split)
         return merged
 
     def set_form_costs(self, costs: Dict[str, float]) -> None:
@@ -311,12 +332,26 @@ class ShardedCache:
     def disk_bytes_used(self) -> int:
         return sum(s["disk_bytes_used"] for s in self.shard_stats())
 
+    def hbm_bytes_used(self) -> int:
+        return sum(s.get("hbm_bytes_used", 0) for s in self.shard_stats())
+
     def spill_stats(self) -> Dict[str, Dict[str, int]]:
         if not self.has_spill:
             return {}
+        return self._merge_form_stats("spill")
+
+    def hbm_stats(self) -> Dict[str, Dict[str, int]]:
+        if not self.has_hbm:
+            return {}
+        return self._merge_form_stats("hbm")
+
+    def _merge_form_stats(self, key: str) -> Dict[str, Dict[str, int]]:
+        """Sum the per-form counter dicts every shard reports under
+        ``key`` (capacities and byte counters add across disjoint
+        shards)."""
         merged: Dict[str, Dict[str, int]] = {}
         for s in self.shard_stats():
-            for form, d in (s.get("spill") or {}).items():
+            for form, d in (s.get(key) or {}).items():
                 agg = merged.setdefault(form, dict.fromkeys(d, 0))
                 for k, v in d.items():
                     agg[k] += v

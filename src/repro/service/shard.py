@@ -75,6 +75,9 @@ class ShardConfig:
     spill_dir: Optional[str] = None
     spill_bytes: int = 0
     spill_split: Optional[Tuple[float, float, float]] = None
+    #: device-resident tier budget (this shard's 1/N slice) + split
+    hbm_bytes: int = 0
+    hbm_split: Optional[Tuple[float, float, float]] = None
     #: profiles feeding the per-shard MDP solve (used when split=None)
     hardware: Any = None
     dataset_profile: Any = None
@@ -100,6 +103,9 @@ class CacheShard:
         spill_split = (tuple(cfg.spill_split)
                        if cfg.spill_split is not None else None)
         has_spill = cfg.spill_dir is not None and cfg.spill_bytes > 0
+        has_hbm = cfg.hbm_bytes > 0
+        hbm_split = (tuple(cfg.hbm_split)
+                     if cfg.hbm_split is not None else None)
         self.partition_label = None
         if split is None:
             if cfg.hardware is None or cfg.dataset_profile is None:
@@ -110,12 +116,15 @@ class CacheShard:
             solved = mdp.optimize_shard(
                 cfg.hardware, cfg.dataset_profile, cfg.job,
                 n_shards=cfg.n_shards, step=cfg.partition_step,
-                tiered=has_spill)
-            if has_spill:
+                tiered=has_spill or has_hbm)
+            if has_spill or has_hbm:
                 split = (solved.dram.x_e, solved.dram.x_d, solved.dram.x_a)
-                if spill_split is None:
+                if has_spill and spill_split is None:
                     spill_split = (solved.disk.x_e, solved.disk.x_d,
                                    solved.disk.x_a)
+                if has_hbm and hbm_split is None and solved.hbm is not None:
+                    hbm_split = (solved.hbm.x_e, solved.hbm.x_d,
+                                 solved.hbm.x_a)
             else:
                 split = (solved.x_e, solved.x_d, solved.x_a)
             self.partition_label = solved.label
@@ -125,7 +134,9 @@ class CacheShard:
             evict_policies=cfg.evict_policies,
             spill_bytes=cfg.spill_bytes if has_spill else 0,
             spill_dir=cfg.spill_dir if has_spill else None,
-            spill_split=spill_split)
+            spill_split=spill_split,
+            hbm_bytes=cfg.hbm_bytes if has_hbm else 0,
+            hbm_split=hbm_split if has_hbm else None)
         self.admission = cfg.admission or _FitsGate()
         self.telemetry = TelemetryAggregator()
         self.dataset = cfg.dataset
@@ -144,6 +155,10 @@ class CacheShard:
         ref (process transport) or pass the object through (sim)."""
         if self.cfg.exchange_dir is None or form is None or value is None:
             return value
+        if not isinstance(value, (bytes, np.ndarray)):
+            # device-resident (HBM-tier) arrays leave the shard as host
+            # copies; the client side receives a plain ndarray
+            value = np.asarray(value)
         path = os.path.join(
             self.cfg.exchange_dir,
             f"s{self.cfg.shard_id}-{os.getpid()}-{next(self._seq)}.bin")
@@ -226,9 +241,10 @@ class CacheShard:
     def _op_residency(self, n):
         return self.cache.residency_array(n)
 
-    def _op_resize(self, split, spill_split):
+    def _op_resize(self, split, spill_split, hbm_split=None):
         out = self.cache.resize(tuple(split),
-                                tuple(spill_split) if spill_split else None)
+                                tuple(spill_split) if spill_split else None,
+                                tuple(hbm_split) if hbm_split else None)
         self.split = tuple(float(x) for x in split)
         return out
 
@@ -248,9 +264,11 @@ class CacheShard:
             "hit_rate": self.cache.hit_rate(),
             "bytes_used": self.cache.bytes_used(),
             "disk_bytes_used": self.cache.disk_bytes_used(),
+            "hbm_bytes_used": self.cache.hbm_bytes_used(),
             "entries": sum(len(p) for p in parts.values()),
             "produced": self.produced,
             "spill": self.cache.spill_stats(),
+            "hbm": self.cache.hbm_stats(),
             "telemetry": self.telemetry.as_dict(),
         }
 

@@ -324,3 +324,71 @@ def test_stage_parallel_elastic_groups_track_telemetry():
     target = pipe._executor._target
     assert abs(target["fetch"] - planned[0]) <= 2
     assert abs(target["decode"] - planned[1]) <= 2
+
+
+# ----------------------------------------------------------------------
+# device executor semantics (fused Pallas decode+augment + HBM tier)
+def test_device_executor_epoch_coverage_and_bitwise_parity():
+    """One epoch through the device route, augmented/decoded tiers
+    disabled so every sample takes the fused kernel fresh: batch rows
+    must equal decode + Pallas augment_batch_seeded *bitwise* (the
+    kernel parity contract, here exercised through the live stack)."""
+    from repro.data.pipeline import _aug_seed
+    from repro.kernels.augment.ops import augment_batch_seeded
+    ds = tiny(n=64)
+    server = _server(ds, use_ods=False, split=(1.0, 0.0, 0.0))
+    sess = server.open_session(batch_size=8)
+    pipe = DSIPipeline(sess, RemoteStorage(ds), n_workers=2,
+                       executor="device")
+    seen = []
+    for _ in range(64 // 8):
+        epoch = sess.epoch
+        b = pipe.next_batch()
+        assert b["images"].shape == (8, *ds.crop_hw, 3)
+        ids = b["ids"].tolist()
+        seen.extend(ids)
+        imgs = np.stack([ds.decode(ds.encoded(s), s) for s in ids])
+        seeds = np.asarray([_aug_seed(epoch, s) for s in ids], np.int64)
+        ref = augment_batch_seeded(imgs, seeds, *ds.crop_hw)
+        np.testing.assert_array_equal(np.asarray(b["images"]), ref)
+    assert sorted(seen) == list(range(64)), \
+        "device executor dropped/duplicated samples"
+    pipe.stop()
+    server.close()
+
+
+def test_device_executor_hbm_hits_are_zero_h2d():
+    """With an HBM tier large enough for every augmented sample, the
+    second epoch serves device-resident rows: no bytes cross the h2d
+    channel and the HBM tier reports hits."""
+    ds = tiny(n=64)
+    hbm = int(1.2 * 64 * ds.augmented_bytes())
+    server = _server(ds, use_ods=False, split=(0.5, 0.0, 0.5),
+                     device_cache_bytes=hbm, hbm_split=(0.0, 0.0, 1.0))
+    sess = server.open_session(batch_size=8)
+    pipe = DSIPipeline(sess, RemoteStorage(ds), n_workers=2,
+                       executor="device")
+    tel = server.service.telemetry
+    for _ in range(64 // 8):                      # epoch 1: all fresh
+        pipe.next_batch()
+    h2d_after_e1 = tel.channel_total_bytes("h2d")
+    for _ in range(64 // 8):                      # epoch 2: all HBM hits
+        b = pipe.next_batch()
+        assert b["images"].shape == (8, *ds.crop_hw, 3)
+    assert tel.channel_total_bytes("h2d") == h2d_after_e1, \
+        "HBM-hit epoch shipped host->device payload bytes"
+    stats = server.stats()
+    assert stats["residency_counts"]["hbm"] == 64
+    assert stats["hbm"]["augmented"]["hbm_hits"] > 0
+    pipe.stop()
+    server.close()
+
+
+def test_device_executor_rejects_non_fusable_dataset():
+    from repro.data.synthetic import DecodeHeavyDataset
+    ds = DecodeHeavyDataset("h", 32, 1024)
+    server = _server(ds, use_ods=False)
+    with pytest.raises(ValueError, match="device executor"):
+        DSIPipeline(server.open_session(batch_size=8), RemoteStorage(ds),
+                    executor="device")
+    server.close()

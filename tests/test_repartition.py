@@ -154,7 +154,7 @@ def test_snapshot_rates_and_counts():
     assert snap.t_da == pytest.approx(4 / 0.025)
     assert snap.b_storage == pytest.approx(1e8)
     assert snap.counts == {"t_da": 8, "t_a": 8, "b_storage": 8,
-                           "b_cache": 0, "b_disk": 0}
+                           "b_cache": 0, "b_disk": 0, "b_hbm": 0}
     tel.record_serve("augmented")
     tel.record_serve(None)
     rates = tel.snapshot().hit_rates()

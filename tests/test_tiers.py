@@ -73,12 +73,16 @@ def test_disk_tier_basics(tmp_path):
     evicted = t.put(3, b"c" * 400, 400)
     assert [k for k, _v, _nb in evicted] == [1]
     assert 1 not in t and t.get(1) is None        # counted miss
-    assert t.get(2) == b"b" * 400
+    assert t.get(2) == b"b" * 400                 # served from the stage
     assert t.stats.bytes_used == 800 == sum(
         t.size_of(k) for k in t.keys())
-    # files exist for residents only
+    # write-behind: files appear once the stage is drained (residents
+    # only), and reads after the flush come from disk
+    t.flush_staged(threading.Lock())
+    assert not t._staged
     names = sorted(os.listdir(str(tmp_path / "encoded")))
     assert names == ["2.bin", "3.bin"]
+    assert t.get(2) == b"b" * 400
     t.clear()
     assert not os.path.exists(str(tmp_path / "encoded"))
 
@@ -424,3 +428,109 @@ def test_pipeline_over_spill_server_serves_disk_hits(tmp_path):
     leftovers = [f for _dp, _dn, fs in os.walk(str(tmp_path / "spill"))
                  for f in fs]
     assert not leftovers, leftovers
+
+
+# ----------------------------------------------------------------------
+# HBM tier: three-level model, ODS preference, live three-level resize
+def test_tiered_model_hbm_zero_split_is_byte_identical():
+    """Regression pin: with no device tier configured (s_hbm == 0) the
+    three-level model must be *bit-identical* to the two-level one —
+    passing an hbm_split may not perturb a single float in the
+    reduction (the hbm coverage term must stay an exact 0.0 scalar, not
+    an array that re-associates the sums)."""
+    from dataclasses import replace
+    hw = replace(AZURE_NC96, s_cache=40 * GB, b_disk=2 * GB,
+                 s_disk=400 * GB)
+    ds = DatasetProfile("t", 1_000_000, 100_000.0)
+    job = JobProfile()
+    for dram in [(0.2, 0.5, 0.3), (1.0, 0.0, 0.0), (0.0, 0.0, 1.0)]:
+        for disk in [(1.0, 0.0, 0.0), (0.3, 0.3, 0.4)]:
+            base = dsi_throughput_tiered(hw, ds, job, dram, disk)
+            for hbm in [None, (0.2, 0.5, 0.3), (0.0, 0.0, 1.0)]:
+                got = dsi_throughput_tiered(hw, ds, job, dram, disk,
+                                            hbm_split=hbm)
+                assert float(got) == float(base), (dram, disk, hbm)
+
+
+def test_optimize_tiered_three_level():
+    from dataclasses import replace
+    hw2 = replace(AZURE_NC96, s_cache=40 * GB, b_disk=2 * GB,
+                  s_disk=400 * GB)
+    hw3 = replace(hw2, b_hbm=100 * GB, s_hbm=8 * GB)
+    ds = DatasetProfile("t", 1_000_000, 100_000.0)
+    two = mdp.optimize_tiered(hw2, ds)
+    three = mdp.optimize_tiered(hw3, ds)
+    assert two.hbm is None
+    assert three.hbm is not None
+    assert three.label.count("|") == 2          # hbm|dram|disk
+    assert three.throughput >= two.throughput
+    # the solved hbm split is a valid simplex point
+    s = three.hbm.x_e + three.hbm.x_d + three.hbm.x_a
+    assert s == pytest.approx(1.0)
+
+
+def test_ods_numpy_prefers_hbm_resident_candidates():
+    from repro.core.ods import ODSState
+    state = ODSState.create(64, seed=1)
+    state.register_job(0)
+    state.status[:32] = 3                      # cached (augmented)
+    residency = np.zeros(64, np.uint8)
+    residency[:8] = 3                          # HBM (device-resident)
+    residency[8:16] = 2                        # DRAM
+    residency[16:32] = 1                       # disk
+    state.set_residency(residency)
+    requested = np.arange(40, 48)              # all storage misses
+    batch, _ = state.sample_batch(0, requested)
+    subs = batch[np.isin(batch, np.arange(32))]
+    assert len(subs) == 8
+    assert set(subs) == set(range(8)), \
+        "with 8 HBM-resident candidates and 8 slots, all picks are HBM"
+
+
+def test_ods_jax_tiered_kernel_prefers_hbm():
+    jax = pytest.importorskip("jax")
+    import jax.numpy as jnp
+    from repro.core import ods_jax
+    state = ods_jax.create(64)
+    state = state._replace(status=state.status.at[:32].set(3))
+    residency = (jnp.zeros(64, jnp.uint8).at[:8].set(3)
+                 .at[8:16].set(2).at[16:32].set(1))
+    _state, batch, _em = ods_jax.substitute_tiered_jit(
+        state, jnp.arange(40, 48), jax.random.key(0), 5, residency)
+    assert set(np.asarray(batch)) == set(range(8))
+
+
+def test_apply_partition_resizes_three_levels():
+    from repro.api import SenecaServer
+    ds = tiny(n=64)
+    server = SenecaServer.for_dataset(
+        ds, cache_bytes=10_000, seed=0, split=(0.5, 0.5, 0.0),
+        device_cache_bytes=6_000, hbm_split=(0.0, 0.5, 0.5))
+    svc = server.service
+    assert svc.has_hbm
+    assert svc.cache.parts["decoded"].hbm.capacity == 3_000
+    svc.apply_partition(mdp.Partition(0.2, 0.8, 0.0, float("nan")),
+                        None,
+                        mdp.Partition(0.0, 0.0, 1.0, float("nan")))
+    assert svc.cache.parts["encoded"].capacity == 2_000
+    assert svc.cache.parts["decoded"].capacity == 8_000
+    assert svc.cache.parts["decoded"].hbm.capacity == 0
+    assert svc.cache.parts["augmented"].hbm.capacity == 6_000
+    assert svc.hbm_partition.label == "0-0-100"
+    assert "hbm" in server.stats()["residency_counts"] or \
+        server.stats()["residency_counts"]["storage"] == 64
+    server.close()
+
+
+def test_h2d_telemetry_calibrates_b_hbm():
+    from repro.api.telemetry import TelemetryAggregator
+    from repro.core.perf_model import calibrate
+    tel = TelemetryAggregator()
+    for _ in range(8):
+        tel.record_bytes("h2d", 1_000_000, 0.001)   # 1 GB/s observed
+    snap = tel.snapshot()
+    assert snap.b_hbm == pytest.approx(1e9)
+    assert snap.counts["b_hbm"] == 8
+    hw = calibrate(AZURE_NC96, snap, min_samples=8)
+    assert hw.b_hbm == pytest.approx(1e9)
+    assert hw.name.endswith("+calibrated")

@@ -268,6 +268,36 @@ def test_virtual_clock_runs_are_deterministic():
     assert res1.clock == "virtual"
 
 
+def test_virtual_clock_deterministic_with_hbm_tier():
+    """Determinism holds with the device cache tier enabled: HBM
+    admission/promotion must not introduce ordering races into
+    virtual-clock runs (same trace -> same ids, ends, makespan)."""
+    def run():
+        ds = tiny(n=128)
+        server = _server(
+            ds, device_cache_bytes=int(0.3 * 128 * ds.augmented_bytes()))
+        runner = WorkloadRunner(server, RemoteStorage(ds),
+                                clock=VirtualClock(), seed=0)
+        res = runner.run([
+            JobSpec("a", arrival_s=0.0, epochs=2, batch_size=16,
+                    gpu_rate=1000),
+            JobSpec("b", arrival_s=0.05, epochs=2, batch_size=16,
+                    gpu_rate=500),
+        ], timeout=300)
+        stats = res.stats
+        server.close()
+        return res, stats
+
+    res1, stats1 = run()
+    res2, stats2 = run()
+    for j1, j2 in zip(res1.jobs, res2.jobs):
+        assert j1.sample_ids == j2.sample_ids, j1.spec.name
+        assert j1.epoch_ends == j2.epoch_ends, j1.spec.name
+        assert j1.end_s == j2.end_s
+    assert res1.makespan == res2.makespan
+    assert stats1["ods_hit_rate"] == stats2["ods_hit_rate"]
+
+
 def test_virtual_clock_interleaving_respects_rates():
     """Faster-ingest jobs finish earlier; epoch ends are monotone; the
     makespan is the slowest job's end (all in virtual seconds)."""
