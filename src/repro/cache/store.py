@@ -221,6 +221,11 @@ class CachePartition:
         Without a spill tier nothing queues — chain-leavers are exactly
         the caller-visible eviction lists the pre-chain code returned,
         so no reconcile pass exists (or is needed) to drain them."""
+        for k, _v, _nb in entries:
+            # every entry here left DRAM: its promotion heat is stale
+            # (a later re-entry must re-earn device residency) and the
+            # map must not grow toward n_total over long runs
+            self._heat.pop(k, None)
         if self.spill is None:
             return
         for k, v, nb in entries:
@@ -275,8 +280,9 @@ class CachePartition:
                 if placed:
                     self.hbm_demotions += 1
                 if self.spill is None:
-                    self.pending_evicted.extend(
-                        ek for ek, _ev, _enb in dram_evicted)
+                    for ek, _ev, _enb in dram_evicted:
+                        self._heat.pop(ek, None)
+                        self.pending_evicted.append(ek)
                 else:
                     self._demote(dram_evicted)
             if not placed:

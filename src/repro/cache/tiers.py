@@ -270,6 +270,10 @@ class DiskTier:
         # write-behind staging: key -> payload awaiting its file write
         # (index meta is _PENDING meanwhile; get/peek serve from here)
         self._staged: Dict[int, Any] = {}
+        # keys whose file write a flush_staged caller has claimed and is
+        # running outside the lock — other flushers must not pick them
+        # up, or two threads would dump to the same path concurrently
+        self._inflight: set = set()
         self.stats = PartitionStats()
         self.io_errors = 0
 
@@ -306,11 +310,13 @@ class DiskTier:
         nbytes, meta = entry
         try:
             value = self.codec.load(self._path(key), meta)
-        except OSError:
-            # the file vanished under us (external cleanup): drop the
-            # index entry rather than serving a phantom hit.  Counted in
-            # io_errors only — the chain's lookup counts the resulting
-            # miss at lookup granularity, so counting here would double
+        except (OSError, ValueError):
+            # the file vanished or is shorter than dtype*shape claims
+            # (external cleanup, or truncated mid-rewrite — np.memmap
+            # raises ValueError for short files): drop the index entry
+            # rather than serving a phantom hit.  Counted in io_errors
+            # only — the chain's lookup counts the resulting miss at
+            # lookup granularity, so counting here would double
             self.io_errors += 1
             self._drop(key)
             return default
@@ -328,7 +334,7 @@ class DiskTier:
             return staged
         try:
             return self.codec.load(self._path(key), entry[1])
-        except OSError:
+        except (OSError, ValueError):
             self.io_errors += 1
             self._drop(key)
             return default
@@ -366,12 +372,17 @@ class DiskTier:
         ``lock``, run the codec dump (write + fsync) with the lock
         *released*, then commit the codec meta back under the lock.
 
-        Concurrent drops/replacements while a write is in flight are
-        reconciled at commit time: a dropped key's orphan file is
-        unlinked, a replaced key stays staged (its newer payload is
-        picked up by a later iteration).  TieredCache calls this after
-        releasing its lock from every mutating public method, so at op
-        boundaries the stage is empty and index == files on disk."""
+        Claims are marked in ``_inflight`` so concurrent flushers never
+        pick the same key — two threads dumping to one path outside the
+        lock would race truncate-and-rewrite against a reader.  A
+        flusher finding only in-flight keys returns; their claimants
+        commit them.  Concurrent drops/replacements while a write is in
+        flight are reconciled at commit time: a dropped key's orphan
+        file is unlinked, a replaced key stays staged (its newer payload
+        is picked up by a later iteration).  TieredCache calls this
+        after releasing its lock from every mutating public method, so
+        at op boundaries the stage is empty and index == files on
+        disk."""
         if not self._staged:
             # racy-but-benign fast path: callers flush after their own
             # mutation, so missing a concurrent stage just defers it to
@@ -379,10 +390,14 @@ class DiskTier:
             return
         while True:
             with lock:
-                if not self._staged:
+                key = next((k for k in self._staged
+                            if k not in self._inflight), MISS)
+                if key is MISS:
+                    # nothing unclaimed (empty, or every remaining key's
+                    # write is owned by another flusher)
                     return
-                key = next(iter(self._staged))
                 value = self._staged[key]
+                self._inflight.add(key)
             path = self._path(key)
             err = False
             try:
@@ -390,6 +405,7 @@ class DiskTier:
             except OSError:
                 err = True
             with lock:
+                self._inflight.discard(key)
                 if self._staged.get(key, MISS) is not value:
                     # dropped or replaced mid-write; if nothing current
                     # claims the key, the file we just wrote is an orphan

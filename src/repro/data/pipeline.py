@@ -700,7 +700,14 @@ class DSIPipeline:
         values being uploaded.  Encoded samples never materialize a host
         decoded image — the fused kernel ships per-sample scalars only —
         so (by design) this route admits no "decoded" forms.
+
+        Telemetry timings block on JAX async dispatch
+        (``block_until_ready``) before the closing timestamp — otherwise
+        the h2d EWMA feeding the CALIBRATABLE ``b_hbm`` and the fused
+        stage times would measure dispatch latency, not the transfer or
+        compute, and mis-steer MDP repartitioning.
         """
+        import jax
         import jax.numpy as jnp
 
         from repro.kernels.augment.ops import (augment_batch_seeded,
@@ -711,6 +718,7 @@ class DSIPipeline:
         rows: List = [None] * len(ids)
         enc_group: List[Tuple[int, int, bytes]] = []   # (slot, sid, payload)
         dec_group: List[Tuple[int, int, np.ndarray]] = []
+        dec_dev_group: List[Tuple[int, int, object]] = []  # HBM decoded hits
         for slot, sid_ in enumerate(ids):
             sid = int(sid_)
             t_look = time.monotonic()
@@ -737,13 +745,19 @@ class DSIPipeline:
                 host = np.asarray(value)
                 tel.record_bytes(channel, host.nbytes, t0 - t_look)
                 t1 = time.monotonic()
-                rows[slot] = jnp.asarray(host)
+                rows[slot] = jax.block_until_ready(jnp.asarray(host))
                 tel.record_bytes("h2d", host.nbytes,
                                  time.monotonic() - t1)
             elif form == "decoded":
-                img = np.asarray(value)
-                tel.record_bytes(channel, img.nbytes, t0 - t_look)
-                dec_group.append((slot, sid, img))
+                if tier == "hbm":
+                    # device-resident decoded hit: augment on device —
+                    # no host round-trip, so no byte-channel record (a
+                    # d2h download metered as "cache" would skew b_cache)
+                    dec_dev_group.append((slot, sid, value))
+                else:
+                    img = np.asarray(value)
+                    tel.record_bytes(channel, img.nbytes, t0 - t_look)
+                    dec_group.append((slot, sid, img))
             else:                                      # encoded cache hit
                 tel.record_bytes(channel, len(value), t0 - t_look)
                 enc_group.append((slot, sid, value))
@@ -753,10 +767,10 @@ class DSIPipeline:
             seeds = np.asarray([_aug_seed(epoch_tag, sid) for sid in sids],
                                np.int64)
             t1 = time.monotonic()
-            out = decode_augment_batch_seeded(
+            out = jax.block_until_ready(decode_augment_batch_seeded(
                 [p for _s, _sid, p in enc_group], sids, seeds,
                 ds_seed=self._fused_seed, image_hw=self.ds.image_hw,
-                crop_h=self.ds.crop_hw[0], crop_w=self.ds.crop_hw[1])
+                crop_h=self.ds.crop_hw[0], crop_w=self.ds.crop_hw[1]))
             dt = time.monotonic() - t1
             # one fused launch covers both stages; split its time evenly
             # so the calibrated t_da = conc/(decode+augment) lands on
@@ -774,14 +788,31 @@ class DSIPipeline:
             seeds = np.asarray([_aug_seed(epoch_tag, sid) for sid in sids],
                                np.int64)
             t1 = time.monotonic()
-            out = augment_batch_seeded(imgs, seeds, *self.ds.crop_hw,
-                                       as_device=True)
+            out = jax.block_until_ready(
+                augment_batch_seeded(imgs, seeds, *self.ds.crop_hw,
+                                     as_device=True))
             dt = time.monotonic() - t1
             self.times.augment += dt
             tel.record_stage("augment", dt, n=len(dec_group))
             # decoded pixels shipped up for the device-side augment
             tel.record_bytes("h2d", imgs.nbytes, dt)
             for i, (slot, sid, _img) in enumerate(dec_group):
+                rows[slot] = out[i]
+                fresh.append((sid, out[i]))
+        if dec_dev_group:
+            sids = [sid for _s, sid, _img in dec_dev_group]
+            imgs_dev = jnp.stack([img for _s, _sid, img in dec_dev_group])
+            seeds = np.asarray([_aug_seed(epoch_tag, sid) for sid in sids],
+                               np.int64)
+            t1 = time.monotonic()
+            out = jax.block_until_ready(
+                augment_batch_seeded(imgs_dev, seeds, *self.ds.crop_hw,
+                                     as_device=True))
+            dt = time.monotonic() - t1
+            self.times.augment += dt
+            tel.record_stage("augment", dt, n=len(dec_dev_group))
+            # pixels were already device-resident: no h2d traffic
+            for i, (slot, sid, _img) in enumerate(dec_dev_group):
                 rows[slot] = out[i]
                 fresh.append((sid, out[i]))
         # admit the freshly augmented device rows: HBM-first put routing

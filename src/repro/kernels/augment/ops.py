@@ -69,15 +69,21 @@ def augment_batch_seeded(images: np.ndarray, seeds: np.ndarray,
     not padded to 16 forever).  ``as_device`` skips the final host copy
     and returns the sliced device array — the device-path executor
     admits those rows into the HBM tier zero-copy.
+
+    ``images`` may be a device-resident ``jax.Array`` (HBM-tier decoded
+    hits): it is padded and fed to the kernel on device, with no host
+    round-trip.
     """
-    images = np.ascontiguousarray(images)
+    on_device = isinstance(images, jax.Array)
+    if not on_device:
+        images = np.ascontiguousarray(images)
     B, H, W, _ = images.shape
     tops, lefts, flips = derive_batch_params(
         (H, W), (crop_h, crop_w), np.asarray(seeds))
     Bp = max(bucket, B) if bucket else _pad_to_bucket(B)
     if Bp != B:
         pad = [(0, Bp - B)] + [(0, 0)] * (images.ndim - 1)
-        images = np.pad(images, pad, mode="edge")
+        images = (jnp if on_device else np).pad(images, pad, mode="edge")
         tops = np.pad(tops, (0, Bp - B), mode="edge")
         lefts = np.pad(lefts, (0, Bp - B), mode="edge")
         flips = np.pad(flips, (0, Bp - B), mode="edge")

@@ -392,3 +392,43 @@ def test_device_executor_rejects_non_fusable_dataset():
         DSIPipeline(server.open_session(batch_size=8), RemoteStorage(ds),
                     executor="device")
     server.close()
+
+
+def test_device_executor_decoded_hbm_hit_stays_on_device():
+    """A decoded-form value served from the HBM tier (hbm_split with
+    z_d > 0) must be augmented on device: no d2h download metered on
+    the cache channel, no re-upload on h2d, and the rows still match
+    the host decode+augment reference bitwise."""
+    from repro.data.pipeline import _aug_seed
+    from repro.kernels.augment.ops import augment_batch_seeded
+    ds = tiny(n=32)
+    hbm = int(1.2 * 32 * ds.decoded_bytes())
+    server = _server(ds, use_ods=False, split=(0.0, 1.0, 0.0),
+                     device_cache_bytes=hbm, hbm_split=(0.0, 1.0, 0.0))
+    sess = server.open_session(batch_size=8)
+    # pre-warm every sample's decoded form; array payloads the HBM tier
+    # admits go device-resident immediately
+    for sid in range(32):
+        img = ds.decode(ds.encoded(sid), sid)
+        assert sess.admit(sid, "decoded", img, img.nbytes)
+    assert server.stats()["hbm"]["decoded"]["hbm_entries"] == 32
+    pipe = DSIPipeline(sess, RemoteStorage(ds), n_workers=2,
+                      executor="device")
+    tel = server.service.telemetry
+    seen = []
+    for _ in range(32 // 8):
+        epoch = sess.epoch
+        b = pipe.next_batch()
+        ids = b["ids"].tolist()
+        seen.extend(ids)
+        imgs = np.stack([ds.decode(ds.encoded(s), s) for s in ids])
+        seeds = np.asarray([_aug_seed(epoch, s) for s in ids], np.int64)
+        ref = augment_batch_seeded(imgs, seeds, *ds.crop_hw)
+        np.testing.assert_array_equal(np.asarray(b["images"]), ref)
+    assert sorted(seen) == list(range(32))
+    assert tel.channel_total_bytes("cache") == 0, \
+        "decoded HBM hit metered a device->host download as cache bytes"
+    assert tel.channel_total_bytes("h2d") == 0, \
+        "decoded HBM hit re-uploaded device-resident pixels"
+    pipe.stop()
+    server.close()

@@ -87,6 +87,83 @@ def test_disk_tier_basics(tmp_path):
     assert not os.path.exists(str(tmp_path / "encoded"))
 
 
+def test_disk_tier_truncated_file_degrades_to_miss(tmp_path):
+    """np.memmap raises ValueError (not OSError) when a spill file is
+    shorter than dtype*shape — e.g. truncated mid-rewrite by a racing
+    writer.  The serving path must treat that as a miss, not crash."""
+    t = DiskTier(10_000, str(tmp_path), "decoded")
+    arr = np.arange(64, dtype=np.uint8).reshape(8, 8)
+    t.put(1, arr, arr.nbytes)
+    t.flush_staged(threading.Lock())
+    path = os.path.join(str(tmp_path / "decoded"), "1.bin")
+    with open(path, "wb") as f:                   # truncate to 1 byte
+        f.write(b"\x00")
+    assert t.get(1) is None
+    assert t.io_errors == 1 and 1 not in t
+    # same degradation on the stats-neutral path
+    t.put(2, arr, arr.nbytes)
+    t.flush_staged(threading.Lock())
+    with open(os.path.join(str(tmp_path / "decoded"), "2.bin"),
+              "wb") as f:
+        f.write(b"\x00")
+    assert t.peek(2) is None and t.io_errors == 2
+    t.clear()
+
+
+def test_flush_staged_concurrent_claims_are_exclusive(tmp_path):
+    """Two threads draining the stage concurrently must never dump the
+    same key's file at once (claim-marking via _inflight): every entry
+    ends committed exactly once, index == files on disk, and reads
+    serve intact payloads."""
+    t = DiskTier(1 << 20, str(tmp_path), "decoded")
+    lock = threading.Lock()
+    arrs = {k: np.full((16, 16), k, np.uint8) for k in range(24)}
+    with lock:
+        for k, a in arrs.items():
+            t.put(k, a, a.nbytes)
+    threads = [threading.Thread(target=t.flush_staged, args=(lock,))
+               for _ in range(4)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+    assert not t._staged and not t._inflight
+    names = sorted(os.listdir(str(tmp_path / "decoded")))
+    assert names == sorted(f"{k}.bin" for k in arrs)
+    for k, a in arrs.items():
+        np.testing.assert_array_equal(t.get(k), a)
+    assert t.io_errors == 0
+    t.clear()
+
+
+def test_hbm_heat_resets_when_key_leaves_dram():
+    """Promotion heat must not survive a key's departure from DRAM: a
+    key evicted by a resize and re-admitted later re-earns device
+    residency from zero (and the heat map stays bounded by the DRAM
+    population instead of growing toward n_total)."""
+    from repro.cache.tiers import HbmTier
+    hbm = HbmTier(100, "none")
+    part = CachePartition(1000, "lru", None, hbm)
+    blocker = np.zeros(100, np.uint8)
+    part.put(1, blocker, 100)              # fills the device tier
+    assert part.tier_of(1) == "hbm"
+    a = np.ones(100, np.uint8)
+    part.put(2, a, 100)                    # HBM full ("none") -> DRAM
+    assert part.tier_of(2) == "dram"
+    part.get(2)                            # heat 1 of HBM_PROMOTE_HITS
+    part.set_capacity(0)                   # key 2 leaves the chain
+    assert part.tier_of(2) is None
+    assert 2 not in part._heat, "evicted key kept stale heat"
+    part.set_capacity(1000)
+    part.put(2, a, 100)                    # re-enters DRAM cold
+    hbm.remove(1)                          # device room opens up
+    part.get(2)                            # first hit after re-entry...
+    assert part.tier_of(2) == "dram", \
+        "stale heat promoted a cold re-entrant on its first hit"
+    part.get(2)                            # ...the second one earns it
+    assert part.tier_of(2) == "hbm"
+
+
 def test_chain_overflow_and_promotion(tmp_path):
     # "none" DRAM rejects when full -> overflow lands on disk
     spill = DiskTier(5000, str(tmp_path), "encoded")
