@@ -1,0 +1,178 @@
+"""Fault recovery makespan: checkpoint/restore vs naive restart vs fault-free.
+
+The fault-tolerance layer's claim (ISSUE-8, motivated by CoorDL's
+data-stalls analysis): a preempted job re-admitted with its sampler
+state restored — seen-mask, epoch counters, permutation + RNG position
+(``Session.checkpoint_state()``) — resumes without re-fetching or
+re-preprocessing anything it already consumed, so the workload makespan
+degrades by roughly the preemption dwell, not by a from-scratch rerun.
+
+Three modes over one deterministic ``VirtualClock`` trace (3 staggered
+jobs on a shared sharded server, shard-kill + spill-corruption + a
+mid-run preemption):
+
+* **fault-free** — the same trace with no faults (lower bound);
+* **recovery** — faults injected, ``fault_policy="checkpoint"``:
+  preempted jobs snapshot + restore sampler state on re-admission;
+* **naive-restart** — same faults, ``fault_policy="restart"``: the
+  preempted job loses all progress and replays from sample 0 (the
+  kill-and-restart-from-scratch baseline).
+
+Every mode must finish with exact once-per-epoch coverage per job, and
+the virtual clock makes each mode's makespan a deterministic number —
+the benchmark reruns the recovery mode and asserts byte-equality.
+
+Emits ``BENCH_faults.json``; ``--check`` asserts (1) recovery makespan
+strictly beats naive restart, (2) recovery overhead over fault-free is
+bounded, (3) per-job epoch coverage is exact, (4) determinism holds.
+"""
+from __future__ import annotations
+
+import tempfile
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from benchmarks.common import write_bench_json
+from repro.api import (FaultSpec, JobSpec, SenecaServer, VirtualClock,
+                       WorkloadRunner)
+from repro.data.storage import RemoteStorage
+from repro.data.synthetic import tiny
+
+N_SAMPLES = 256
+BATCH = 16
+JOBS = ((("a", 0.00, 1000)), (("b", 0.05, 600)), (("c", 0.10, 1500)))
+PREEMPT_DWELL_S = 0.12
+
+
+def _trace(epochs: int) -> List[JobSpec]:
+    return [JobSpec(name, arrival_s=at, epochs=epochs, batch_size=BATCH,
+                    gpu_rate=rate) for name, at, rate in JOBS]
+
+
+def _faults() -> List[FaultSpec]:
+    return [
+        FaultSpec("shard-kill", at_s=0.10, shard=1, duration_s=0.15),
+        FaultSpec("spill-corrupt", at_s=0.15, n_files=2),
+        # preempt the slowest job (the one that sets the makespan) once
+        # it has real progress to lose — the naive-restart penalty is
+        # the replay of everything consumed before t=0.45
+        FaultSpec("preempt", at_s=0.45, job="b",
+                  duration_s=PREEMPT_DWELL_S),
+    ]
+
+
+def _coverage_exact(sample_ids: List[int], n: int) -> bool:
+    """Every consecutive n-sample window is a permutation of range(n)
+    (BATCH divides N_SAMPLES, so epochs tile exactly)."""
+    ids = np.asarray(sample_ids)
+    epochs = len(ids) // n
+    if epochs * n != len(ids):
+        return False
+    want = np.arange(n)
+    return all(
+        np.array_equal(np.sort(ids[e * n:(e + 1) * n]), want)
+        for e in range(epochs))
+
+
+def run_mode(mode: str, *, epochs: int, seed: int = 0) -> Dict:
+    ds = tiny(n=N_SAMPLES)
+    spill = tempfile.mkdtemp(prefix="bench-faults-")
+    server = SenecaServer.for_dataset(
+        ds, cache_frac=0.3, seed=seed, shards=2, spill_dir=spill,
+        spill_bytes=int(0.2 * N_SAMPLES * ds.augmented_bytes()))
+    storage = RemoteStorage(ds)
+    faults = [] if mode == "fault-free" else _faults()
+    policy = "restart" if mode == "naive-restart" else "checkpoint"
+    runner = WorkloadRunner(server, storage, clock=VirtualClock(),
+                            seed=seed, faults=faults,
+                            fault_policy=policy)
+    res = runner.run(_trace(epochs), timeout=600)
+    stats = res.stats
+    server.close()
+    return {
+        "mode": mode,
+        "makespan_s": res.makespan,
+        "wall_s": res.wall_s,
+        "total_samples": res.total_samples,
+        "storage_fetches": storage.fetches,
+        "per_job_s": {j.spec.name: round(j.duration_s, 4)
+                      for j in res.jobs},
+        "preemptions": sum(j.preemptions for j in res.jobs),
+        "coverage_exact": all(
+            _coverage_exact(j.sample_ids, N_SAMPLES) for j in res.jobs),
+        "sample_id_digest": [hash(tuple(j.sample_ids))
+                             for j in res.jobs],
+        "faults": (stats or {}).get("faults"),
+    }
+
+
+def run(full: bool = False) -> List[Tuple[str, str]]:
+    epochs = 3 if full else 2
+    results = {mode: run_mode(mode, epochs=epochs)
+               for mode in ("fault-free", "recovery", "naive-restart")}
+    rerun = run_mode("recovery", epochs=epochs)
+    deterministic = (
+        rerun["makespan_s"] == results["recovery"]["makespan_s"]
+        and rerun["sample_id_digest"]
+        == results["recovery"]["sample_id_digest"])
+    free = results["fault-free"]["makespan_s"]
+    rec = results["recovery"]["makespan_s"]
+    naive = results["naive-restart"]["makespan_s"]
+    payload = {
+        "config": {"n_samples": N_SAMPLES, "batch": BATCH,
+                   "epochs": epochs,
+                   "preempt_dwell_s": PREEMPT_DWELL_S},
+        "recovery_vs_naive": 1 - rec / naive,
+        "recovery_overhead_vs_fault_free": rec / free - 1,
+        "deterministic": deterministic,
+        **results,
+    }
+    path = write_bench_json("faults", payload)
+    rows = [(f"fig_fault_recovery/{m}",
+             f"makespan={r['makespan_s']:.3f}s "
+             f"fetches={r['storage_fetches']} "
+             f"coverage={'exact' if r['coverage_exact'] else 'BROKEN'}")
+            for m, r in results.items()]
+    rows.append((
+        "fig_fault_recovery/summary",
+        f"recovery beats naive restart by "
+        f"{payload['recovery_vs_naive'] * 100:.1f}%, overhead vs "
+        f"fault-free {payload['recovery_overhead_vs_fault_free'] * 100:.1f}%"
+        f" deterministic={deterministic} json={path}"))
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--check", action="store_true",
+                    help="assert recovery < naive restart, bounded "
+                         "overhead vs fault-free, exact coverage, "
+                         "deterministic reruns")
+    args = ap.parse_args()
+    out_rows = run(full=args.full)
+    for name, derived in out_rows:
+        print(f"{name},{derived}")
+    if args.check:
+        import json
+        with open("BENCH_faults.json") as f:
+            bench = json.load(f)
+        for mode in ("fault-free", "recovery", "naive-restart"):
+            assert bench[mode]["coverage_exact"], (
+                f"{mode}: per-epoch sample coverage is not exact")
+        assert bench["deterministic"], (
+            "two identical recovery runs were not byte-for-byte equal")
+        rec = float(bench["recovery"]["makespan_s"])
+        naive = float(bench["naive-restart"]["makespan_s"])
+        free = float(bench["fault-free"]["makespan_s"])
+        assert rec < naive, (
+            f"recovery makespan {rec:.3f}s did not beat naive restart "
+            f"{naive:.3f}s")
+        assert rec / free - 1 < 1.0, (
+            f"recovery overhead vs fault-free too large: "
+            f"{rec / free - 1:.2f}")
+        print(f"CHECK OK: recovery {rec:.3f}s < naive {naive:.3f}s, "
+              f"overhead vs fault-free {rec / free - 1:.1%}")

@@ -23,7 +23,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 import jax
 import numpy as np
 
-from repro.api import JobSpec, SenecaServer, WorkloadRunner
+from repro.api import FaultSpec, JobSpec, SenecaServer, WorkloadRunner
 from repro.configs import registry
 from repro.configs.base import ParallelismConfig
 from repro.data.pipeline import DSIPipeline
@@ -181,6 +181,25 @@ def run_seneca(args) -> None:
     print("[quickstart] OK — trained through the repro.api facade")
 
 
+def _fault_trace(args) -> list:
+    """--inject-faults: a small mixed-domain fault trace scaled to the
+    run's configuration (docs/API.md "Fault tolerance & elasticity") —
+    the preempted job is restored from its sampler checkpoint, so the
+    epoch accounting below still holds exactly."""
+    faults = [
+        FaultSpec("worker-crash", at_s=0.5, job="job0"),
+        FaultSpec("preempt", at_s=1.0, job="job0", duration_s=0.5),
+        FaultSpec("bandwidth-collapse", at_s=0.8, factor=0.5,
+                  duration_s=0.6),
+    ]
+    if args.shards > 1:
+        faults.append(FaultSpec("shard-kill", at_s=0.7,
+                                shard=args.shards - 1, duration_s=0.5))
+    if args.cache_spill_dir:
+        faults.append(FaultSpec("spill-corrupt", at_s=0.9, n_files=2))
+    return faults
+
+
 def run_multi(args) -> None:
     """``--jobs N``: N concurrent sessions sharing one Seneca cache,
     driven by the multi-job WorkloadRunner (docs/API.md "Multi-job
@@ -203,24 +222,43 @@ def run_multi(args) -> None:
                      batch_size=args.batch, gpu_rate=rates[i % len(rates)],
                      executor=args.executor, n_workers=2)
              for i in range(args.jobs)]
-    runner = WorkloadRunner(server, RemoteStorage(ds, bandwidth=60e6),
-                            record_ids=False)
+    storage = RemoteStorage(ds, bandwidth=60e6)
+    faults = _fault_trace(args) if args.inject_faults else []
+    if faults:
+        print(f"[quickstart] injecting {len(faults)} fault(s): "
+              + ", ".join(f.kind for f in faults))
+    runner = WorkloadRunner(server, storage, record_ids=False,
+                            faults=faults, fault_policy="checkpoint")
     res = runner.run(trace, timeout=600)
     for job in res.jobs:
+        extra = ""
+        if job.preemptions or job.worker_restarts:
+            extra = (f", {job.preemptions} preemption(s), "
+                     f"{job.worker_restarts} worker restart(s)")
         print(f"[quickstart]   {job.spec.name}: arrived "
               f"{job.spec.arrival_s:.1f}s, {job.samples} samples in "
-              f"{job.duration_s:.1f}s ({job.epochs_completed} epoch(s))")
+              f"{job.duration_s:.1f}s ({job.epochs_completed} epoch(s)"
+              f"{extra})")
     stats = res.stats
     print(f"[quickstart] makespan {res.makespan:.1f}s  "
           f"ods_hit_rate={stats['ods_hit_rate']:.3f} "
           f"substitutions={stats['substitutions']}")
     _print_shard_stats(stats)
+    fstats = (stats or {}).get("faults")
+    if fstats:
+        print(f"[quickstart] faults injected={fstats['injected']} "
+              f"recovered={fstats['recovered']} "
+              f"shard_failovers={fstats['shard_failovers']}")
     server.close()
     # each job consumes one whole-batch epoch pass (the runner's epoch
-    # accounting — exact even when --batch does not divide the dataset)
+    # accounting — exact even when --batch does not divide the dataset;
+    # with --inject-faults the checkpoint/restore policy keeps it exact
+    # through the preemption too)
     epoch_size = (ds.n_samples // args.batch) * args.batch
     assert res.ok and res.total_samples == args.jobs * epoch_size
     assert all(j.epochs_completed == 1 for j in res.jobs)
+    if args.inject_faults:
+        assert sum(j.preemptions for j in res.jobs) == 1
     print(f"[quickstart] OK — {args.jobs} jobs shared one Seneca cache")
 
 
@@ -276,6 +314,14 @@ def main() -> None:
                          "cache via the WorkloadRunner (docs/API.md "
                          "\"Multi-job workloads\") instead of the "
                          "single-job training loop")
+    ap.add_argument("--inject-faults", action="store_true",
+                    help="with --jobs N: inject a worker crash, a job "
+                         "preemption, a storage-bandwidth collapse — "
+                         "plus a shard kill with --shards > 1 and a "
+                         "spill corruption with --cache-spill-dir — and "
+                         "recover through the checkpoint/restore policy "
+                         "(docs/API.md \"Fault tolerance & "
+                         "elasticity\")")
     ap.add_argument("--shards", type=int, default=1,
                     help="split the cache across N consistent-hash "
                          "shards (docs/API.md \"Sharded data plane\"); "
@@ -307,6 +353,9 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=16)
     ap.add_argument("--seq", type=int, default=64)
     args = ap.parse_args()
+    if args.inject_faults and (args.lm or args.jobs < 2):
+        ap.error("--inject-faults needs the multi-job runner: "
+                 "pass --jobs N (N >= 2) without --lm")
     if args.steps is None:
         args.steps = 200 if args.lm else 30
     if args.lm:

@@ -53,16 +53,31 @@ from repro.core.perf_model import (AWS_P3, AZURE_NC96, DATASETS,
 from repro.sim.desim import (ALL_LOADERS, DALI_CPU, DALI_GPU, DSISimulator,
                              LoaderSpec, MDP_ONLY, MINIO, PYTORCH, QUIVER,
                              SENECA, SHADE, SimJob, SimResult)
-# live multi-job workload runner + pluggable clocks (docs/API.md
-# "Multi-job workloads"); VirtualClock makes concurrency deterministic
-from repro.workload import (Clock, JobResult, JobSpec, RealClock,
-                            VirtualClock, WorkloadResult, WorkloadRunner,
-                            deterministic_runner)
 # sharded data plane (docs/API.md "Sharded data plane"): consistent-hash
 # router + per-shard caches behind sim/process transports, selected via
 # SenecaConfig(shards=N, shard_transport=...)
 from repro.service import (CacheShard, ShardConfig, ShardedCache,
                            ShardRouter)
+# fault injection + failover (docs/API.md "Fault tolerance & elasticity")
+from repro.faults import (FAULT_KINDS, FaultInjector, FaultSpec,
+                          LivenessRegistry)
+
+# live multi-job workload runner + pluggable clocks (docs/API.md
+# "Multi-job workloads"); VirtualClock makes concurrency deterministic.
+# These are re-exported lazily (PEP 562): repro.workload.runner imports
+# the pipeline, which imports repro.api.server, which initializes this
+# package — an eager import here would close that cycle on a partially
+# initialized module.
+_WORKLOAD_EXPORTS = ("Clock", "JobResult", "JobSpec", "RealClock",
+                     "VirtualClock", "WorkloadResult", "WorkloadRunner",
+                     "deterministic_runner")
+
+
+def __getattr__(name: str):
+    if name in _WORKLOAD_EXPORTS:
+        import repro.workload as _workload
+        return getattr(_workload, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
 
 __all__ = [
     # server / session facade
@@ -97,4 +112,6 @@ __all__ = [
     "Clock", "RealClock", "VirtualClock", "deterministic_runner",
     # sharded data plane
     "ShardRouter", "ShardedCache", "CacheShard", "ShardConfig",
+    # fault injection + failover
+    "FaultSpec", "FaultInjector", "LivenessRegistry", "FAULT_KINDS",
 ]

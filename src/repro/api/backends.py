@@ -65,6 +65,10 @@ class OdsBackend(Protocol):
     def admission_value(self, sample_id: int) -> int: ...
     def storage_pool(self) -> np.ndarray: ...
 
+    # fault tolerance --------------------------------------------------
+    def checkpoint_job(self, job_id: int) -> Dict: ...
+    def restore_job(self, job_id: int, snap: Dict) -> None: ...
+
     # stats ------------------------------------------------------------
     @property
     def hits(self) -> int: ...
@@ -127,6 +131,13 @@ class NumpyOdsBackend:
 
     def storage_pool(self):
         return np.flatnonzero(self.state.status == IN_STORAGE)
+
+    # fault tolerance --------------------------------------------------
+    def checkpoint_job(self, job_id):
+        return self.state.checkpoint_job(job_id)
+
+    def restore_job(self, job_id, snap):
+        self.state.restore_job(job_id, snap)
 
     # stats ------------------------------------------------------------
     @property
@@ -273,6 +284,36 @@ class JaxOdsBackend:
 
     def storage_pool(self):
         return np.flatnonzero(self.status == IN_STORAGE)
+
+    # fault tolerance --------------------------------------------------
+    def checkpoint_job(self, job_id):
+        """Same contract as :meth:`ODSState.checkpoint_job` — seen mask,
+        epoch, served; the fold-in key is recorded for inspection but
+        not restored (it is shared across jobs)."""
+        if job_id not in self.seen:
+            raise KeyError(f"job {job_id} is not registered")
+        return {
+            "n_samples": self.n_samples,
+            "seen": np.packbits(self.seen[job_id]),
+            "epoch": int(self.epoch[job_id]),
+            "served": int(self.served[job_id]),
+            "substitutions": int(self._substitutions),
+            "rng_state": np.asarray(
+                self._jax.random.key_data(self._key)).tolist(),
+        }
+
+    def restore_job(self, job_id, snap):
+        if int(snap["n_samples"]) != self.n_samples:
+            raise ValueError(
+                f"snapshot is for a {snap['n_samples']}-sample dataset, "
+                f"this one has {self.n_samples}")
+        if job_id not in self.seen:
+            raise KeyError(f"job {job_id} is not registered")
+        self.seen[job_id] = np.unpackbits(
+            np.asarray(snap["seen"], np.uint8),
+            count=self.n_samples).astype(bool)
+        self.epoch[job_id] = int(snap["epoch"])
+        self.served[job_id] = int(snap["served"])
 
     # stats ------------------------------------------------------------
     @property

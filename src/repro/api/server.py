@@ -745,6 +745,80 @@ class SenecaService:
         return self.cache.chain_free_bytes(form)
 
     # ------------------------------------------------------------------
+    def checkpoint_job(self, job_id: int) -> Dict:
+        """Epoch-consistent snapshot of one job's sampling state: the
+        backend's seen-mask/epoch/served plus the job's EpochSampler
+        position (permutation, offset, RNG).  Restoring into a fresh
+        session continues exactly-once-per-epoch coverage with zero
+        re-preprocessing of already-consumed samples."""
+        with self._lock:
+            if job_id not in self._samplers:
+                raise KeyError(f"job {job_id} is not registered")
+            return {
+                "format": 1,
+                "n_samples": self.cfg.dataset.n_total,
+                "batch_size": self._samplers[job_id].bs,
+                "backend": self.backend.checkpoint_job(job_id),
+                "sampler": self._samplers[job_id].state_dict(),
+            }
+
+    def restore_job(self, job_id: int, snap: Dict) -> None:
+        """Install a :meth:`checkpoint_job` snapshot on ``job_id`` (a
+        re-admitted job's fresh session id is fine — the snapshot fully
+        overwrites the new registration's sampler and seen state)."""
+        if snap.get("format") != 1:
+            raise ValueError(f"unknown snapshot format "
+                             f"{snap.get('format')!r}")
+        if int(snap["n_samples"]) != self.cfg.dataset.n_total:
+            raise ValueError(
+                f"snapshot is for a {snap['n_samples']}-sample dataset, "
+                f"this service has {self.cfg.dataset.n_total}")
+        with self._lock:
+            if job_id not in self._samplers:
+                raise KeyError(f"job {job_id} is not registered")
+            if int(snap["batch_size"]) != self._samplers[job_id].bs:
+                raise ValueError(
+                    f"snapshot batch_size {snap['batch_size']} != session "
+                    f"batch_size {self._samplers[job_id].bs}")
+            self._samplers[job_id].load_state_dict(snap["sampler"])
+            self.backend.restore_job(job_id, snap["backend"])
+
+    # ------------------------------------------------------------------
+    def fail_shard(self, shard: int) -> None:
+        """A cache shard died: fail its key range over to storage.
+
+        The shard transport is killed (subsequent per-shard ops degrade
+        to misses/drops in the client), and every sample the ring maps
+        to the dead shard is re-marked IN_STORAGE so the sampler stops
+        treating it as cached; the residency push is invalidated so the
+        next batch sees the shrunk ring."""
+        kill = getattr(self.cache, "kill_shard", None)
+        if kill is None:
+            raise ValueError("fail_shard needs a sharded data plane "
+                             "(SenecaConfig(shards=N))")
+        kill(shard)
+        with self._lock:
+            n = self.cfg.dataset.n_total
+            owned = np.flatnonzero(
+                self.cache.router.shard_of_many(np.arange(n)) == shard)
+            if len(owned):
+                self.backend.mark_evicted(owned)
+            self._residency_version = -1
+        self.telemetry.record_error("fault.shard-kill")
+
+    def restore_shard(self, shard: int) -> None:
+        """Bring a killed shard back (cold: its cache is empty); the
+        ring re-expands and admissions repopulate it organically."""
+        restart = getattr(self.cache, "restart_shard", None)
+        if restart is None:
+            raise ValueError("restore_shard needs a sharded data plane "
+                             "(SenecaConfig(shards=N))")
+        restart(shard)
+        with self._lock:
+            self._residency_version = -1
+        self.telemetry.record_error("recovery.shard-restart")
+
+    # ------------------------------------------------------------------
     def close(self) -> None:
         """Tear down the engine's storage: drops every spill-tier file
         (idempotent; serving after close() re-creates nothing)."""
@@ -778,6 +852,19 @@ class SenecaService:
         shard_stats = getattr(self.cache, "shard_stats", None)
         if shard_stats is not None:
             out["shards"] = shard_stats()
+        errors = self.telemetry.as_dict().get("errors", {})
+        fault_counts = {k: v for k, v in errors.items()
+                        if k.startswith(("fault.", "recovery."))}
+        if fault_counts or getattr(self.cache, "failovers", 0):
+            out["faults"] = {
+                "counts": fault_counts,
+                "injected": sum(v for k, v in fault_counts.items()
+                                if k.startswith("fault.")),
+                "recovered": sum(v for k, v in fault_counts.items()
+                                 if k.startswith("recovery.")),
+                "shard_failovers": int(getattr(self.cache,
+                                               "failovers", 0)),
+            }
         return out
 
     def _spill_stats(self) -> Dict[str, object]:
@@ -863,6 +950,25 @@ class Session:
 
     def lookup_tiered(self, sample_id: int):
         return self.service.lookup_tiered(sample_id)
+
+    def checkpoint_state(self) -> Dict:
+        """Snapshot this job's sampler state (seen-mask, epoch, served
+        count, permutation + RNG position).  A preempted job restores it
+        into a *new* session via :meth:`restore_state` and keeps
+        exactly-once-per-epoch coverage with zero re-preprocessing."""
+        if self._closed:
+            raise SessionClosed(
+                f"session {self.job_id} is closed; snapshot before close")
+        return self.service.checkpoint_job(self.job_id)
+
+    def restore_state(self, state: Dict) -> None:
+        """Install a :meth:`checkpoint_state` snapshot (same dataset and
+        batch size required; the session id may differ)."""
+        if self._closed:
+            raise SessionClosed(
+                f"session {self.job_id} is closed; open a new one with "
+                f"SenecaServer.open_session()")
+        self.service.restore_job(self.job_id, state)
 
     def stats(self) -> Dict[str, float]:
         out = self.service.stats()

@@ -210,6 +210,44 @@ class ODSState:
         total = self.hits + self.misses
         return self.hits / total if total else 0.0
 
+    # ------------------------------------------------------------------
+    def checkpoint_job(self, job_id: int) -> Dict:
+        """Epoch-consistent snapshot of one job's sampling state.
+
+        Captures exactly what exactly-once-per-epoch coverage depends
+        on: the seen bit-vector (bit-packed), epoch counter, and served
+        count.  The shared substitution RNG and counters are recorded
+        for inspection but deliberately *not* restored by
+        :meth:`restore_job` — they are dataset-global, and rewinding
+        them would perturb every concurrent job.
+        """
+        if job_id not in self.seen:
+            raise KeyError(f"job {job_id} is not registered")
+        return {
+            "n_samples": self.n_samples,
+            "seen": np.packbits(self.seen[job_id]),
+            "epoch": int(self.epoch[job_id]),
+            "served": int(self.served[job_id]),
+            "substitutions": int(self.substitutions),
+            "rng_state": self.rng.bit_generator.state,
+        }
+
+    def restore_job(self, job_id: int, snap: Dict) -> None:
+        """Install a :meth:`checkpoint_job` snapshot for ``job_id`` (the
+        id may differ from the one snapshotted — re-admitted jobs get a
+        fresh session id)."""
+        if int(snap["n_samples"]) != self.n_samples:
+            raise ValueError(
+                f"snapshot is for a {snap['n_samples']}-sample dataset, "
+                f"this one has {self.n_samples}")
+        if job_id not in self.seen:
+            raise KeyError(f"job {job_id} is not registered")
+        self.seen[job_id] = np.unpackbits(
+            np.asarray(snap["seen"], np.uint8),
+            count=self.n_samples).astype(bool)
+        self.epoch[job_id] = int(snap["epoch"])
+        self.served[job_id] = int(snap["served"])
+
 
 def merge_residency(parts) -> np.ndarray:
     """Merge per-shard residency (or status) arrays into the global
@@ -250,3 +288,25 @@ class EpochSampler:
         out = self._perm[self._pos:self._pos + self.bs]
         self._pos += self.bs
         return out
+
+    # ------------------------------------------------------------------
+    def state_dict(self) -> Dict:
+        """Full sampler position: current permutation, offset, and RNG
+        state — restoring reproduces the exact upcoming request
+        sequence, including every future re-permutation."""
+        return {
+            "n": self.n,
+            "bs": self.bs,
+            "perm": self._perm.copy(),
+            "pos": int(self._pos),
+            "rng_state": self.rng.bit_generator.state,
+        }
+
+    def load_state_dict(self, state: Dict) -> None:
+        if int(state["n"]) != self.n or int(state["bs"]) != self.bs:
+            raise ValueError(
+                f"sampler snapshot is for n={state['n']} bs={state['bs']}"
+                f", this sampler has n={self.n} bs={self.bs}")
+        self._perm = np.asarray(state["perm"], dtype=self._perm.dtype).copy()
+        self._pos = int(state["pos"])
+        self.rng.bit_generator.state = state["rng_state"]

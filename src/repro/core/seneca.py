@@ -22,9 +22,13 @@ from repro.api.server import (CODE_FORM, FORM_CODE, SenecaConfig,
 __all__ = ["SenecaConfig", "SenecaService", "SenecaServer", "Session",
            "SessionClosed", "FORM_CODE", "CODE_FORM"]
 
+# Removal postponed 2026-10-01 -> 2026-12-01: the original date had not
+# yet passed when the fault-tolerance refactor landed, and downstream
+# benchmark forks still import from here; one more deprecation cycle
+# gives them a release window to move to repro.api before deletion.
 warnings.warn(
-    "repro.core.seneca is deprecated and will be REMOVED after 2026-10-01 "
-    "(two PR cycles); import SenecaServer / SenecaService from repro.api "
+    "repro.core.seneca is deprecated and will be REMOVED after 2026-12-01; "
+    "import SenecaServer / SenecaService from repro.api "
     "instead. The legacy positional DSIPipeline(job_id, service, storage, "
     "batch_size) call style is scheduled for removal on the same date.",
     DeprecationWarning, stacklevel=2)

@@ -943,7 +943,11 @@ class DSIPipeline:
                 if time.monotonic() >= deadline:
                     raise
 
-    def stop(self) -> None:
+    def stop(self, close_session: bool = True) -> None:
+        """Tear the pipeline down.  ``close_session=False`` keeps the
+        session (and its sampler state) alive — the fault-recovery path
+        rebuilds a fresh pipeline on the surviving session after a
+        worker crash or around a preemption."""
         if not self._stop.is_set():
             self.telemetry.remove_concurrency(self._n_workers)
         self._stop.set()
@@ -952,4 +956,5 @@ class DSIPipeline:
         if self._executor is not None:
             self._executor.stop()
         self.pool.shutdown(wait=False)
-        self.session.close()
+        if close_session:
+            self.session.close()

@@ -11,6 +11,12 @@ Counter discipline: ``BandwidthBudget.bytes_served`` and
 ``RemoteStorage.fetches`` are only ever mutated under the budget lock —
 concurrent fetch workers previously raced the bare ``+=`` and dropped
 increments, so benchmark fetch tallies undercounted under load.
+
+Fault injection (``repro.faults``): :meth:`RemoteStorage.degrade` scales
+the token-bucket rate (a storage-bandwidth collapse) and
+:meth:`restore_bandwidth` undoes it; transient dataset IO errors are
+retried a few times before propagating, with both degradations counted
+for ``stats()``.
 """
 from __future__ import annotations
 
@@ -22,6 +28,7 @@ from typing import Optional
 class BandwidthBudget:
     def __init__(self, bytes_per_s: Optional[float]):
         self.rate = bytes_per_s
+        self.base_rate = bytes_per_s     # pre-degradation rate
         self.lock = threading.Lock()
         self._available_at = time.monotonic()
         self.bytes_served = 0
@@ -48,10 +55,44 @@ class RemoteStorage:
         self.dataset = dataset
         self.budget = BandwidthBudget(bandwidth)
         self.fetches = 0
+        self.degraded = False
+        self.degraded_fetches = 0        # fetches served while degraded
+        self.io_retries = 0              # transient read errors retried
 
+    # -- fault injection -------------------------------------------------
+    def degrade(self, factor: float = 0.1) -> None:
+        """Collapse the shared bandwidth to ``factor`` of the configured
+        rate (an injected storage brownout).  No-op on unlimited
+        stores beyond flipping the flag — there is no rate to scale."""
+        if not factor > 0:
+            raise ValueError(f"degrade factor must be > 0, got {factor}")
+        with self.budget.lock:
+            if self.budget.base_rate is not None:
+                self.budget.rate = max(self.budget.base_rate * factor, 1.0)
+            self.degraded = True
+
+    def restore_bandwidth(self) -> None:
+        with self.budget.lock:
+            self.budget.rate = self.budget.base_rate
+            self.degraded = False
+
+    # -- data path ---------------------------------------------------------
     def fetch(self, sample_id: int) -> bytes:
-        data = self.dataset.encoded(sample_id)
+        data = None
+        for attempt in range(3):
+            try:
+                data = self.dataset.encoded(sample_id)
+                break
+            except OSError:
+                # transient read failure (FileDataset under churn):
+                # bounded retry before the pipeline sees the error
+                with self.budget.lock:
+                    self.io_retries += 1
+                if attempt == 2:
+                    raise
         self.budget.consume(len(data))
         with self.budget.lock:
             self.fetches += 1
+            if self.degraded:
+                self.degraded_fetches += 1
         return data

@@ -19,6 +19,7 @@ import json
 import os
 import shutil
 import tempfile
+import zipfile
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
@@ -77,25 +78,76 @@ def save(ckpt_dir: str, step: int, tree: Any,
     return final
 
 
+def _is_complete(path: str) -> bool:
+    """A checkpoint directory is complete iff its manifest parses, its
+    arrays.npz opens, and every manifest key has an array.  Crash-
+    truncated or partially-pruned checkpoints fail one of these."""
+    try:
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+        with np.load(os.path.join(path, "arrays.npz")) as data:
+            files = set(data.files)
+        return set(manifest["keys"]) <= files
+    except (OSError, ValueError, KeyError, json.JSONDecodeError,
+            zipfile.BadZipFile):
+        return False
+
+
+def _step_dirs(ckpt_dir: str) -> List[str]:
+    if not os.path.isdir(ckpt_dir):
+        return []
+    return sorted(d for d in os.listdir(ckpt_dir)
+                  if d.startswith("step_") and not d.endswith(".tmp"))
+
+
 def latest_step(ckpt_dir: str) -> Optional[int]:
+    """Newest *complete* checkpoint step, or None.
+
+    The LATEST pointer is the fast path; when it is stale, missing, or
+    names an incomplete directory (crash mid-write, overlapping prune)
+    fall back to scanning step dirs newest-first and return the first
+    that validates.
+    """
     ptr = os.path.join(ckpt_dir, "LATEST")
-    if not os.path.exists(ptr):
-        return None
-    with open(ptr) as f:
-        name = f.read().strip()
-    if not os.path.isdir(os.path.join(ckpt_dir, name)):
-        return None
-    return int(name.split("_")[1])
+    if os.path.exists(ptr):
+        with open(ptr) as f:
+            name = f.read().strip()
+        path = os.path.join(ckpt_dir, name)
+        if os.path.isdir(path) and _is_complete(path):
+            return int(name.split("_")[1])
+    for name in reversed(_step_dirs(ckpt_dir)):
+        if _is_complete(os.path.join(ckpt_dir, name)):
+            return int(name.split("_")[1])
+    return None
 
 
 def restore(ckpt_dir: str, template: Any,
             step: Optional[int] = None) -> Tuple[Any, Dict]:
-    """Restore into the structure of ``template`` (shape-checked)."""
-    if step is None:
-        step = latest_step(ckpt_dir)
-        if step is None:
+    """Restore into the structure of ``template`` (shape-checked).
+
+    With ``step=None`` the newest complete checkpoint is used; if that
+    directory disappears or truncates between selection and read (prune
+    racing restore), selection retries on the survivors — genuine
+    template mismatches (shapes, missing keys) still raise.
+    """
+    if step is not None:
+        return _restore_path(
+            os.path.join(ckpt_dir, f"step_{step:08d}"), template)
+    last_err: Optional[Exception] = None
+    for _attempt in range(4):
+        chosen = latest_step(ckpt_dir)
+        if chosen is None:
             raise FileNotFoundError(f"no checkpoint in {ckpt_dir}")
-    path = os.path.join(ckpt_dir, f"step_{step:08d}")
+        try:
+            return _restore_path(
+                os.path.join(ckpt_dir, f"step_{chosen:08d}"), template)
+        except (OSError, zipfile.BadZipFile, json.JSONDecodeError) as e:
+            last_err = e               # dir vanished/truncated under us
+    raise FileNotFoundError(
+        f"no stable checkpoint in {ckpt_dir}: {last_err!r}")
+
+
+def _restore_path(path: str, template: Any) -> Tuple[Any, Dict]:
     with open(os.path.join(path, "manifest.json")) as f:
         manifest = json.load(f)
     data = np.load(os.path.join(path, "arrays.npz"))

@@ -38,6 +38,28 @@ def make_mesh(n_devices: int, axis_names=("data", "model"),
     return Mesh(np.asarray(devs).reshape(shape), axis_names)
 
 
+def shrunk_mesh(n_devices: int, failed: Any,
+                axis_names=("data", "model"),
+                model_parallel: int = 0) -> Mesh:
+    """Rebuild the mesh with the failed hosts removed.
+
+    ``failed`` is either an iterable of dead device/host indices or a
+    liveness registry (anything with a ``failed()`` method — the
+    :class:`~repro.faults.liveness.LivenessRegistry` the trainer's
+    heartbeats now ride on), so the elastic path consumes failure
+    detection directly instead of a hand-maintained list.
+    """
+    if hasattr(failed, "failed"):
+        failed = failed.failed()
+    dead = {int(h) for h in failed}
+    live = [i for i in range(n_devices) if i not in dead]
+    if not live:
+        raise ValueError(f"no live devices left of {n_devices} "
+                         f"(failed: {sorted(dead)})")
+    return make_mesh(len(live), axis_names=axis_names,
+                     model_parallel=model_parallel)
+
+
 def _valid_spec(spec: P, shape: Tuple[int, ...], mesh: Mesh) -> P:
     """Demote axes whose mesh factor no longer divides the dim."""
     parts = []

@@ -11,30 +11,31 @@
   stalling the step (the paper's opportunistic sampling doubles as
   straggler relief — DESIGN.md §3);
 * failure injection hooks for tests/examples.
+
+All timing runs on an injected ``Clock`` (default
+:class:`~repro.workload.clock.RealClock`), so heartbeat expiry and
+batch deadlines are testable under ``VirtualClock`` like the rest of
+the stack.  ``HeartbeatRegistry`` is now a thin host-flavoured view of
+the generalized :class:`~repro.faults.liveness.LivenessRegistry` shared
+with the sharded cache client.
 """
 from __future__ import annotations
 
-import time
-from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, List, Optional, Tuple
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, List, Optional
 
 import jax
 
 from repro.distributed import checkpoint as ckpt
+from repro.faults.liveness import LivenessRegistry
 
 
-@dataclass
-class HeartbeatRegistry:
-    dead_after_s: float = 10.0
-    last_beat: Dict[int, float] = field(default_factory=dict)
-
-    def beat(self, host: int, now: Optional[float] = None) -> None:
-        self.last_beat[host] = now if now is not None else time.monotonic()
+class HeartbeatRegistry(LivenessRegistry):
+    """Host-liveness view kept for API compatibility: ``beat(host)`` /
+    ``failed_hosts()`` over the generalized registry."""
 
     def failed_hosts(self, now: Optional[float] = None) -> List[int]:
-        now = now if now is not None else time.monotonic()
-        return [h for h, t in self.last_beat.items()
-                if now - t > self.dead_after_s]
+        return self.failed(now)
 
 
 @dataclass
@@ -54,15 +55,24 @@ class ResilientTrainer:
                  cfg: FTConfig,
                  batch_source: Callable[[], Any],
                  straggler_substitute: Optional[Callable[[], Any]] = None,
-                 failure_injector: Optional[Callable[[int], bool]] = None):
+                 failure_injector: Optional[Callable[[int], bool]] = None,
+                 clock: Optional[Any] = None):
+        if clock is None:
+            from repro.workload.clock import RealClock
+            clock = RealClock()
+        self.clock = clock
         self.step_fn = step_fn
         self.params = params
         self.opt_state = opt_state
+        # keep the initial state so a missing/corrupt checkpoint restarts
+        # from step 0 instead of crashing the whole job
+        self._init_params = jax.tree_util.tree_map(lambda x: x, params)
+        self._init_opt = jax.tree_util.tree_map(lambda x: x, opt_state)
         self.cfg = cfg
         self.batch_source = batch_source
         self.straggler_substitute = straggler_substitute
         self.failure_injector = failure_injector
-        self.heartbeats = HeartbeatRegistry(cfg.dead_after_s)
+        self.heartbeats = HeartbeatRegistry(cfg.dead_after_s, clock=clock)
         self.step = 0
         self.restarts = 0
         self.straggler_substitutions = 0
@@ -76,9 +86,17 @@ class ResilientTrainer:
         ckpt.prune(self.cfg.ckpt_dir, self.cfg.keep)
 
     def _restore(self) -> None:
-        tree, manifest = ckpt.restore(
-            self.cfg.ckpt_dir, {"params": self.params,
-                                "opt": self.opt_state})
+        """Restore the newest complete checkpoint; with none usable,
+        restart from the initial state at step 0 rather than crash."""
+        try:
+            tree, manifest = ckpt.restore(
+                self.cfg.ckpt_dir, {"params": self.params,
+                                    "opt": self.opt_state})
+        except (FileNotFoundError, ValueError, KeyError, OSError):
+            self.params = self._init_params
+            self.opt_state = self._init_opt
+            self.step = 0
+            return
         self.params = tree["params"]
         self.opt_state = tree["opt"]
         self.step = manifest["step"]
@@ -88,12 +106,18 @@ class ResilientTrainer:
         if self.cfg.batch_deadline_s is None or \
                 self.straggler_substitute is None:
             return self.batch_source()
-        t0 = time.monotonic()
+        t0 = self.clock.now()
         batch = self.batch_source()
-        if time.monotonic() - t0 > self.cfg.batch_deadline_s:
+        if self.clock.now() - t0 > self.cfg.batch_deadline_s:
             self.straggler_substitutions += 1
             return self.straggler_substitute()
         return batch
+
+    def _restart(self) -> None:
+        if self.restarts >= self.cfg.max_restarts:
+            raise RuntimeError("restart budget exhausted")
+        self.restarts += 1
+        self._restore()
 
     def run(self, n_steps: int) -> List[Dict]:
         if ckpt.latest_step(self.cfg.ckpt_dir) is not None:
@@ -101,10 +125,15 @@ class ResilientTrainer:
         while self.step < n_steps:
             if self.failure_injector and self.failure_injector(self.step):
                 # simulated node failure: lose in-memory state, restart
-                if self.restarts >= self.cfg.max_restarts:
-                    raise RuntimeError("restart budget exhausted")
-                self.restarts += 1
-                self._restore()
+                self._restart()
+                continue
+            failed = self.heartbeats.failed_hosts()
+            if failed:
+                # a host missed its heartbeat window (or was marked dead
+                # by a fault injector): restore and bring it back in
+                self._restart()
+                for h in failed:
+                    self.heartbeats.mark_alive(h)
                 continue
             batch = self._get_batch()
             self.params, self.opt_state, metrics = self.step_fn(

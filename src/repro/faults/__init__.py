@@ -1,0 +1,17 @@
+"""Clock-driven fault injection and failover primitives.
+
+Import-light by design: this package must be importable from
+``repro.service`` (the cache client wires a :class:`LivenessRegistry`)
+without dragging in ``repro.workload`` — see the module docstrings.
+"""
+from repro.faults.injector import FaultInjector, corrupt_spill_files
+from repro.faults.liveness import LivenessRegistry
+from repro.faults.spec import FAULT_KINDS, FaultSpec
+
+__all__ = [
+    "FAULT_KINDS",
+    "FaultInjector",
+    "FaultSpec",
+    "LivenessRegistry",
+    "corrupt_spill_files",
+]

@@ -15,11 +15,12 @@ from repro.service.client import ShardedCache
 from repro.service.proto import Request, Response
 from repro.service.router import ShardRouter
 from repro.service.shard import CacheShard, ShardConfig
-from repro.service.transport import (ProcessTransport, SimTransport,
-                                     TRANSPORTS, make_transport)
+from repro.service.transport import (ProcessTransport, ShardDownError,
+                                     SimTransport, TRANSPORTS,
+                                     make_transport)
 
 __all__ = [
     "ShardRouter", "ShardedCache", "CacheShard", "ShardConfig",
     "Request", "Response", "SimTransport", "ProcessTransport",
-    "TRANSPORTS", "make_transport",
+    "ShardDownError", "TRANSPORTS", "make_transport",
 ]

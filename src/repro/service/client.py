@@ -36,10 +36,11 @@ import numpy as np
 from repro.cache.codecs import PayloadRef, receive_payload, ship_payload
 from repro.cache.store import FORMS
 from repro.core.ods import merge_residency
+from repro.faults.liveness import LivenessRegistry
 from repro.service import proto
 from repro.service.router import ShardRouter
 from repro.service.shard import ShardConfig
-from repro.service.transport import make_transport
+from repro.service.transport import ShardDownError, make_transport
 
 
 class ShardedCache:
@@ -86,6 +87,12 @@ class ShardedCache:
         self._shard_versions = [0] * n
         self._seq = itertools.count()
         self._closed = False
+        #: shard liveness: a shard explicitly marked dead (fault
+        #: injection, broken transport) has its key range failed over to
+        #: storage until restart_shard brings it back
+        self.liveness = LivenessRegistry()
+        self.failovers = 0           # per-op fallbacks taken on dead shards
+        self._generation = 0         # bumps on kill/restart: residency epoch
         solve_per_shard = (solve_per_shard and hardware is not None
                            and dataset_profile is not None)
         if split is None and not solve_per_shard:
@@ -143,6 +150,7 @@ class ShardedCache:
     # -- plumbing -------------------------------------------------------
     def _call(self, shard_id: int, op: str, *args) -> Any:
         resp = self.transport.call(shard_id, proto.Request(op, args))
+        self.liveness.beat(shard_id)
         with self._lock:
             self._shard_versions[shard_id] = max(
                 self._shard_versions[shard_id], resp.version)
@@ -152,6 +160,55 @@ class ShardedCache:
             raise RuntimeError(
                 f"shard {shard_id} {op} failed: {resp.error}")
         return resp.value
+
+    def _call_failover(self, shard_id: int, op: str, fallback: Any,
+                       *args) -> Any:
+        """Per-op degradation: a dead shard's ops return ``fallback``
+        (miss / drop / zeros) instead of raising — its key range is
+        effectively served by storage until the shard restarts."""
+        if self.liveness.is_dead(shard_id):
+            with self._lock:
+                self.failovers += 1
+            return fallback
+        try:
+            return self._call(shard_id, op, *args)
+        except ShardDownError:
+            self.mark_shard_down(shard_id)
+            with self._lock:
+                self.failovers += 1
+            return fallback
+
+    # -- shard lifecycle ------------------------------------------------
+    def mark_shard_down(self, shard_id: int) -> None:
+        """Record a shard as dead (detected broken transport or told by
+        fault injection); bumps the residency generation so the sampler
+        layer rebuilds its view of what is cached."""
+        self.liveness.mark_dead(shard_id)
+        with self._lock:
+            self._generation += 1
+
+    def kill_shard(self, shard_id: int) -> None:
+        """Kill a shard outright (fault injection): tear down its
+        process/object through the transport, then fail its range over."""
+        kill = getattr(self.transport, "kill", None)
+        if kill is not None:
+            kill(shard_id)
+        self.mark_shard_down(shard_id)
+
+    def restart_shard(self, shard_id: int) -> None:
+        """Cold-restart a dead shard and re-expand the ring onto it.
+        The new shard's version counter starts over, so the old high
+        count is dropped (not max-merged) or its early inserts would be
+        invisible to the version-gated residency rebuild."""
+        restart = getattr(self.transport, "restart", None)
+        if restart is None:
+            raise RuntimeError(
+                f"transport {self.transport_name!r} cannot restart shards")
+        restart(shard_id)
+        with self._lock:
+            self._shard_versions[shard_id] = 0
+            self._generation += 1
+        self.liveness.mark_alive(shard_id)
 
     def _shard_of(self, key: int) -> int:
         return self.router.shard_of(int(key))
@@ -178,8 +235,11 @@ class ShardedCache:
     # -- the TieredCache surface ---------------------------------------
     @property
     def version(self) -> int:
+        # the generation term makes kill/restart bump the composite even
+        # though a cold shard's own counter restarts at zero
         with self._lock:
-            return sum(self._shard_versions)
+            return (sum(self._shard_versions)
+                    + (1 << 32) * self._generation)
 
     @property
     def has_spill(self) -> bool:
@@ -195,15 +255,16 @@ class ShardedCache:
 
     def lookup_tiered(self, key: int
                       ) -> Tuple[Optional[str], Any, Optional[str]]:
-        form, value, tier = self._call(self._shard_of(key),
-                                       proto.OP_LOOKUP, int(key))
+        form, value, tier = self._call_failover(
+            self._shard_of(key), proto.OP_LOOKUP, (None, None, None),
+            int(key))
         return form, self._recv(value), tier
 
     def insert(self, key: int, form: str, value: Any,
                nbytes: int) -> bool:
-        return self._call(self._shard_of(key), proto.OP_INSERT,
-                          int(key), form, self._ship(form, value),
-                          int(nbytes), False)
+        return self._call_failover(
+            self._shard_of(key), proto.OP_INSERT, False,
+            int(key), form, self._ship(form, value), int(nbytes), False)
 
     def insert_gated(self, key: int, form: str, value: Any, nbytes: int,
                      policy=None) -> bool:
@@ -211,9 +272,9 @@ class ShardedCache:
         admission policy (``policy`` is accepted for signature parity
         but the shard's instance decides — it is the one that can be
         atomic with the put)."""
-        return self._call(self._shard_of(key), proto.OP_INSERT,
-                          int(key), form, self._ship(form, value),
-                          int(nbytes), True)
+        return self._call_failover(
+            self._shard_of(key), proto.OP_INSERT, False,
+            int(key), form, self._ship(form, value), int(nbytes), True)
 
     def insert_batch_gated(self, form: str, entries,
                            policy=None) -> List[bool]:
@@ -227,18 +288,19 @@ class ShardedCache:
             payload = [(int(entries[i][0]),
                         self._ship(form, entries[i][1]),
                         int(entries[i][2])) for i in idxs]
-            res = self._call(sid, proto.OP_INSERT_BATCH, form, payload)
+            res = self._call_failover(sid, proto.OP_INSERT_BATCH,
+                                      [False] * len(idxs), form, payload)
             for i, ok in zip(idxs, res):
                 out[int(i)] = bool(ok)
         return out
 
     def evict(self, key: int, form: str) -> bool:
-        return self._call(self._shard_of(key), proto.OP_EVICT,
-                          int(key), form)
+        return self._call_failover(self._shard_of(key), proto.OP_EVICT,
+                                   False, int(key), form)
 
     def form_of(self, key: int) -> Optional[str]:
-        return self._call(self._shard_of(key), proto.OP_FORM_OF,
-                          int(key))
+        return self._call_failover(self._shard_of(key), proto.OP_FORM_OF,
+                                   None, int(key))
 
     def contains(self, form: str, key: int) -> bool:
         return self.contains_many(form, [key])[0]
@@ -247,8 +309,9 @@ class ShardedCache:
         keys = [int(k) for k in keys]
         out = [False] * len(keys)
         for sid, idxs in self.router.group(keys).items():
-            res = self._call(sid, proto.OP_CONTAINS, form,
-                             [keys[int(i)] for i in idxs])
+            res = self._call_failover(sid, proto.OP_CONTAINS,
+                                      [False] * len(idxs), form,
+                                      [keys[int(i)] for i in idxs])
             for i, ok in zip(idxs, res):
                 out[int(i)] = bool(ok)
         return out
@@ -257,8 +320,9 @@ class ShardedCache:
         keys = [int(k) for k in keys]
         out: List[Optional[str]] = [None] * len(keys)
         for sid, idxs in self.router.group(keys).items():
-            res = self._call(sid, proto.OP_SERVING_FORMS,
-                             [keys[int(i)] for i in idxs])
+            res = self._call_failover(sid, proto.OP_SERVING_FORMS,
+                                      [None] * len(idxs),
+                                      [keys[int(i)] for i in idxs])
             for i, form in zip(idxs, res):
                 out[int(i)] = form
         return out
@@ -267,7 +331,7 @@ class ShardedCache:
         return self._caps[form]
 
     def chain_free_bytes(self, form: str) -> int:
-        return sum(self._call(i, proto.OP_FREE_BYTES, form)
+        return sum(self._call_failover(i, proto.OP_FREE_BYTES, 0, form)
                    for i in range(self.n_shards))
 
     def take_evicted(self) -> List[int]:
@@ -288,9 +352,10 @@ class ShardedCache:
         evicted-key maps (disjoint keys — a plain extend)."""
         merged: Dict[str, List[int]] = {}
         for sid in range(self.n_shards):
-            ev = self._call(sid, proto.OP_RESIZE, tuple(split),
-                            tuple(spill_split) if spill_split else None,
-                            tuple(hbm_split) if hbm_split else None)
+            ev = self._call_failover(
+                sid, proto.OP_RESIZE, {}, tuple(split),
+                tuple(spill_split) if spill_split else None,
+                tuple(hbm_split) if hbm_split else None)
             for form, keys in ev.items():
                 if keys:
                     merged.setdefault(form, []).extend(keys)
@@ -303,21 +368,32 @@ class ShardedCache:
 
     def set_form_costs(self, costs: Dict[str, float]) -> None:
         for sid in range(self.n_shards):
-            self._call(sid, proto.OP_SET_COSTS, dict(costs))
+            self._call_failover(sid, proto.OP_SET_COSTS, None,
+                                dict(costs))
 
     def status_array(self, n: int) -> np.ndarray:
-        return merge_residency([self._call(i, proto.OP_STATUS, int(n))
-                                for i in range(self.n_shards)])
+        # a dead shard's keys report 0 (IN_STORAGE) — exactly the
+        # failed-over truth: its range is served by storage
+        return merge_residency(
+            [self._call_failover(i, proto.OP_STATUS,
+                                 np.zeros(int(n), np.uint8), int(n))
+             for i in range(self.n_shards)])
 
     def residency_array(self, n: int) -> np.ndarray:
-        return merge_residency([self._call(i, proto.OP_RESIDENCY, int(n))
-                                for i in range(self.n_shards)])
+        return merge_residency(
+            [self._call_failover(i, proto.OP_RESIDENCY,
+                                 np.zeros(int(n), np.uint8), int(n))
+             for i in range(self.n_shards)])
 
     # -- stats ----------------------------------------------------------
     def shard_stats(self) -> List[Dict[str, Any]]:
         """Raw per-shard stats dicts (hit rates, bytes, telemetry) —
-        surfaced through ``SenecaService.stats()["shards"]``."""
-        return [self._call(i, proto.OP_STATS)
+        surfaced through ``SenecaService.stats()["shards"]``.  A dead
+        shard reports a zeroed marker entry with ``"dead": True``."""
+        return [self._call_failover(
+                    i, proto.OP_STATS,
+                    {"shard": i, "dead": True, "hits": 0, "misses": 0,
+                     "bytes_used": 0, "disk_bytes_used": 0})
                 for i in range(self.n_shards)]
 
     def hit_rate(self) -> float:
@@ -362,8 +438,9 @@ class ShardedCache:
                 want_payload: bool = True):
         """Serve one augmented sample from its owning shard (shard-side
         fetch/decode/augment)."""
-        value = self._call(self._shard_of(sid), proto.OP_PRODUCE,
-                           int(sid), int(epoch_tag), bool(want_payload))
+        value = self._call_failover(
+            self._shard_of(sid), proto.OP_PRODUCE, None,
+            int(sid), int(epoch_tag), bool(want_payload))
         return self._recv(value) if want_payload else value
 
     def ingest(self, ids, epoch_tag: int = 0, chunk: int = 64) -> int:
@@ -377,8 +454,8 @@ class ShardedCache:
         def drive(sid: int, sids: np.ndarray) -> int:
             done = 0
             for off in range(0, len(sids), chunk):
-                done += self._call(
-                    sid, proto.OP_PRODUCE_MANY,
+                done += self._call_failover(
+                    sid, proto.OP_PRODUCE_MANY, 0,
                     [int(x) for x in sids[off:off + chunk]],
                     int(epoch_tag))
             return done

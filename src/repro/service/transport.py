@@ -30,6 +30,12 @@ from repro.service.shard import CacheShard, ShardConfig
 TRANSPORTS = ("sim", "process")
 
 
+class ShardDownError(RuntimeError):
+    """A call targeted a shard that is dead (killed by fault injection
+    or lost mid-call).  The client catches this and fails the shard's
+    key range over to storage."""
+
+
 class SimTransport:
     """In-process shards; deterministic and free."""
 
@@ -38,6 +44,7 @@ class SimTransport:
     wants_refs = False
 
     def __init__(self, configs: Sequence[ShardConfig]):
+        self._configs = list(configs)
         self.shards: List[CacheShard] = []
         try:
             for cfg in configs:
@@ -47,11 +54,29 @@ class SimTransport:
             raise
 
     def call(self, shard_id: int, req: proto.Request) -> proto.Response:
-        return self.shards[shard_id].handle(req)
+        shard = self.shards[shard_id]
+        if shard is None:
+            raise ShardDownError(f"shard {shard_id} is down")
+        return shard.handle(req)
+
+    def kill(self, shard_id: int) -> None:
+        """Simulate shard death: drop the object (its spill files go
+        with it, like a crashed process's would on restart)."""
+        shard = self.shards[shard_id]
+        if shard is not None:
+            shard.close()
+            self.shards[shard_id] = None
+
+    def restart(self, shard_id: int) -> None:
+        """Cold-restart a killed shard from its original config."""
+        if self.shards[shard_id] is not None:
+            return
+        self.shards[shard_id] = CacheShard(self._configs[shard_id])
 
     def close(self) -> None:
         for shard in self.shards:
-            shard.close()
+            if shard is not None:
+                shard.close()
 
 
 def _shard_main(cfg: ShardConfig, conn) -> None:
@@ -104,9 +129,13 @@ class ProcessTransport:
                  start_method: str = "spawn",
                  start_timeout: float = 120.0):
         ctx = mp.get_context(start_method)
+        self._ctx = ctx
+        self._configs = list(configs)
+        self._start_timeout = start_timeout
         self._procs: list = []
         self._conns: list = []
         self._locks: List[threading.Lock] = []
+        self._dead: set = set()
         self._closed = False
         try:
             for cfg in configs:
@@ -134,10 +163,59 @@ class ProcessTransport:
     def call(self, shard_id: int, req: proto.Request) -> proto.Response:
         if self._closed:
             raise RuntimeError("transport is closed")
+        if shard_id in self._dead:
+            raise ShardDownError(f"shard {shard_id} is down")
         with self._locks[shard_id]:
             conn = self._conns[shard_id]
-            conn.send(req)
-            return conn.recv()
+            try:
+                conn.send(req)
+                return conn.recv()
+            except (BrokenPipeError, EOFError, OSError) as e:
+                # the shard died under us: mark it so callers fail over
+                # instead of hammering a broken pipe
+                self._dead.add(shard_id)
+                raise ShardDownError(
+                    f"shard {shard_id} lost mid-call: {e!r}") from e
+
+    def kill(self, shard_id: int) -> None:
+        """Hard-kill the shard process (fault injection)."""
+        if shard_id in self._dead:
+            return
+        self._dead.add(shard_id)
+        with self._locks[shard_id]:
+            proc = self._procs[shard_id]
+            proc.terminate()
+            proc.join(timeout=10.0)
+            try:
+                self._conns[shard_id].close()
+            except OSError:
+                pass
+
+    def restart(self, shard_id: int) -> None:
+        """Spawn a fresh shard process from the original config (cold
+        cache) and block on its readiness handshake."""
+        if shard_id not in self._dead:
+            return
+        cfg = self._configs[shard_id]
+        parent, child = self._ctx.Pipe()
+        proc = self._ctx.Process(
+            target=_shard_main, args=(cfg, child),
+            name=f"seneca-shard-{cfg.shard_id}", daemon=True)
+        proc.start()
+        child.close()
+        if not parent.poll(self._start_timeout):
+            proc.terminate()
+            raise RuntimeError(
+                f"restarted shard {shard_id} not ready within "
+                f"{self._start_timeout}s")
+        resp = parent.recv()
+        if not resp.ok:
+            raise RuntimeError(
+                f"shard {shard_id} failed to restart: {resp.error}")
+        with self._locks[shard_id]:
+            self._procs[shard_id] = proc
+            self._conns[shard_id] = parent
+        self._dead.discard(shard_id)
 
     def close(self) -> None:
         """Idempotent orderly shutdown: CLOSE every shard (so spill
@@ -147,6 +225,8 @@ class ProcessTransport:
             return
         self._closed = True
         for i, conn in enumerate(self._conns):
+            if i in self._dead:
+                continue
             with self._locks[i]:
                 try:
                     conn.send(proto.Request(proto.OP_CLOSE))

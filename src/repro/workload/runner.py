@@ -35,12 +35,19 @@ import logging
 import math
 import threading
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import (TYPE_CHECKING, Callable, Dict, List, Optional,
+                    Sequence)
 
-from repro.api.server import SenecaServer, SessionClosed
 from repro.data.pipeline import DSIPipeline, EXECUTORS
 from repro.data.storage import RemoteStorage
+from repro.faults.injector import FaultInjector
+from repro.faults.spec import FaultSpec
 from repro.workload.clock import Clock, RealClock, VirtualClock
+
+if TYPE_CHECKING:                      # runtime import is deferred: the
+    from repro.api.server import SenecaServer   # api package re-exports
+                                       # workload names, so a module-level
+                                       # import here would be circular
 
 log = logging.getLogger(__name__)
 
@@ -92,6 +99,8 @@ class JobResult:
     error: Optional[str] = None
     cancelled: bool = False
     stats: Optional[Dict] = None     # private-server runs: stats at close
+    preemptions: int = 0             # injected preempt + re-admission count
+    worker_restarts: int = 0         # injected worker-crash recoveries
 
     @property
     def duration_s(self) -> float:
@@ -177,19 +186,29 @@ class WorkloadRunner:
                      Callable[[JobSpec], SenecaServer]] = None,
                  clock: Optional[Clock] = None,
                  record_ids: bool = True,
-                 seed: int = 0):
+                 seed: int = 0,
+                 faults: Optional[Sequence[FaultSpec]] = None,
+                 fault_policy: str = "checkpoint"):
         if (server is None) == (server_factory is None):
             raise ValueError("WorkloadRunner needs exactly one of server= "
                              "(shared cache) or server_factory= (private "
                              "per-job caches)")
         if storage is None:
             raise TypeError("WorkloadRunner needs a shared RemoteStorage")
+        if fault_policy not in ("checkpoint", "restart"):
+            raise ValueError("fault_policy must be 'checkpoint' (snapshot "
+                             "sampler state, restore on re-admission) or "
+                             "'restart' (naive: lose all progress), got "
+                             f"{fault_policy!r}")
         self.server = server
         self.server_factory = server_factory
         self.storage = storage
         self.clock = clock or RealClock()
         self.record_ids = record_ids
         self.seed = seed
+        self.faults = list(faults) if faults else []
+        self.fault_policy = fault_policy
+        self._injector: Optional[FaultInjector] = None
         self._stop = threading.Event()
         if isinstance(self.clock, VirtualClock) and server is not None:
             # determinism only holds for in-process shards: the sim
@@ -235,6 +254,19 @@ class WorkloadRunner:
                     f"(jobs {bad} use the stage-parallel executor, whose "
                     f"free-running stage threads would race past the "
                     f"clock's turn discipline)")
+        if self.faults:
+            bad_jobs = [f.job for f in self.faults
+                        if f.job is not None and f.job not in names]
+            if bad_jobs:
+                raise ValueError(f"fault trace targets unknown jobs "
+                                 f"{bad_jobs}; trace has {names}")
+            if any(f.shard is not None for f in self.faults) and (
+                    self.server is None
+                    or not hasattr(self.server.service, "fail_shard")
+                    or not hasattr(self.server.service.cache,
+                                   "kill_shard")):
+                raise ValueError("shard faults need a shared sharded "
+                                 "server (SenecaConfig(shards=N))")
         self._stop.clear()
 
         import time as _time
@@ -245,6 +277,14 @@ class WorkloadRunner:
         # virtual clock must know the full roster or it would dispatch
         # the first sleeper alone
         tickets = [self.clock.register() for _ in trace]
+        # the fault injector registers as one more participant, so its
+        # events fire at exact virtual times between job turns
+        self._injector = None
+        if self.faults:
+            self._injector = FaultInjector(
+                self.faults, self.clock,
+                server=self.server, storage=self.storage)
+            self._injector.start(t0)
         threads = []
         for spec, ticket, res in zip(trace, tickets, results):
             t = threading.Thread(
@@ -266,6 +306,8 @@ class WorkloadRunner:
         still = [t.name for t in threads if t.is_alive()]
         if still:       # pragma: no cover - join() hanging is a bug
             raise RuntimeError(f"workload threads failed to join: {still}")
+        if self._injector is not None:
+            self._injector.stop()   # every job joined: drain + unregister
 
         out = WorkloadResult(
             jobs=results,
@@ -293,6 +335,7 @@ class WorkloadRunner:
                  t0: float) -> None:
         """One job's thread body: wait for arrival, open a session, pump
         batches through a rate-limited consumer, account epochs."""
+        from repro.api.server import SessionClosed   # deferred: cycle
         pipe = None
         sess = None
         private_server = None
@@ -314,11 +357,15 @@ class WorkloadRunner:
             pacer = _IngestPacer(self.clock, ticket, spec.gpu_rate,
                                  start_at=now, interrupt=self._stop)
             deterministic = self.clock.deterministic
-            pipe = DSIPipeline(
-                sess, self.storage,
-                n_workers=1 if deterministic else spec.n_workers,
-                executor=spec.executor, seed=self.seed,
-                consume_hook=pacer, sync_refills=deterministic)
+
+            def build_pipe() -> DSIPipeline:
+                return DSIPipeline(
+                    sess, self.storage,
+                    n_workers=1 if deterministic else spec.n_workers,
+                    executor=spec.executor, seed=self.seed,
+                    consume_hook=pacer, sync_refills=deterministic)
+
+            pipe = build_pipe()
             n = self.storage.dataset.n_samples
             # the samplers serve whole batches and re-permute early when
             # the batch size does not divide the dataset, so one "epoch"
@@ -333,7 +380,50 @@ class WorkloadRunner:
             target = spec.epochs * epoch_size
             if spec.max_batches is not None:
                 target = min(target, spec.max_batches * spec.batch_size)
+            injector = self._injector
             while res.samples < target and not self._stop.is_set():
+                fault = injector.take_job_fault(spec.name) \
+                    if injector is not None else None
+                if fault is not None:
+                    if fault.kind == "worker-crash":
+                        # pipeline workers died: in-flight batches are
+                        # lost but the session (sampler state) survives —
+                        # rebuild the pipeline on the same session
+                        pipe.stop(close_session=False)
+                        pipe = build_pipe()
+                        res.worker_restarts += 1
+                        injector.record_recovery("worker-restart")
+                    elif fault.kind == "preempt":
+                        snap = sess.checkpoint_state() \
+                            if self.fault_policy == "checkpoint" else None
+                        pipe.stop(close_session=False)
+                        sess.close()   # the job leaves the system
+                        now = self.clock.sleep_until(
+                            ticket, pacer.now + fault.duration_s,
+                            interrupt=self._stop)
+                        if self._stop.is_set():
+                            res.cancelled = True
+                            res.end_s = now - t0
+                            return
+                        # re-admission: fresh session; under the
+                        # checkpoint policy the sampler resumes exactly
+                        # where it left off, under the naive-restart
+                        # baseline all progress is lost
+                        sess = server.open_session(
+                            batch_size=spec.batch_size)
+                        res.job_id = sess.job_id
+                        if snap is not None:
+                            sess.restore_state(snap)
+                        else:
+                            res.samples = 0
+                            res.batches = 0
+                            res.sample_ids.clear()
+                            res.epoch_ends.clear()
+                        pacer.now = now
+                        pipe = build_pipe()
+                        res.preemptions += 1
+                        injector.record_recovery("preempt-readmit")
+                    continue
                 try:
                     batch = pipe.next_batch()   # pacer sleeps inside
                 except SessionClosed:

@@ -1,4 +1,5 @@
 """Checkpoint + fault-tolerance behaviour."""
+import json
 import os
 
 import jax
@@ -48,6 +49,80 @@ def test_shape_mismatch_rejected(tmp_path):
         ckpt.restore(str(tmp_path), {"a": jnp.ones((3, 3))})
 
 
+def test_latest_step_skips_truncated_manifest(tmp_path):
+    t = _tree()
+    for s in (1, 2, 3):
+        ckpt.save(str(tmp_path), s, t)
+    # crash-truncate the newest manifest: LATEST points at garbage
+    mpath = tmp_path / "step_00000003" / "manifest.json"
+    mpath.write_text(mpath.read_text()[:20])
+    assert ckpt.latest_step(str(tmp_path)) == 2
+    back, manifest = ckpt.restore(str(tmp_path), t)
+    assert manifest["step"] == 2
+    for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_latest_step_mixed_validity(tmp_path):
+    """Restore picks the newest *complete* checkpoint across a mix of
+    valid, truncated-npz, missing-manifest, and missing-key dirs."""
+    t = _tree()
+    for s in (1, 2, 3, 4, 5):
+        ckpt.save(str(tmp_path), s, t)
+    # 5: truncated arrays.npz (crash mid-write after rename — bad zip)
+    npz = tmp_path / "step_00000005" / "arrays.npz"
+    npz.write_bytes(npz.read_bytes()[:10])
+    # 4: manifest deleted outright
+    (tmp_path / "step_00000004" / "manifest.json").unlink()
+    # 3: manifest claims a key the npz doesn't have
+    m = tmp_path / "step_00000003" / "manifest.json"
+    doc = json.loads(m.read_text())
+    doc["keys"].append("ghost/leaf")
+    m.write_text(json.dumps(doc))
+    assert ckpt.latest_step(str(tmp_path)) == 2
+    _back, manifest = ckpt.restore(str(tmp_path), t)
+    assert manifest["step"] == 2
+
+
+def test_latest_step_stale_pointer(tmp_path):
+    t = _tree()
+    ckpt.save(str(tmp_path), 1, t)
+    ckpt.save(str(tmp_path), 2, t)
+    # LATEST names a dir that prune already removed
+    (tmp_path / "LATEST").write_text("step_00000009")
+    assert ckpt.latest_step(str(tmp_path)) == 2
+    # no checkpoints at all -> None / FileNotFoundError
+    empty = tmp_path / "empty"
+    empty.mkdir()
+    assert ckpt.latest_step(str(empty)) is None
+    with pytest.raises(FileNotFoundError):
+        ckpt.restore(str(empty), t)
+
+
+def test_restore_survives_prune_race(tmp_path, monkeypatch):
+    """A checkpoint vanishing between selection and read (prune racing
+    restore) must fall through to an older survivor, not crash."""
+    t = _tree()
+    ckpt.save(str(tmp_path), 1, t)
+    ckpt.save(str(tmp_path), 2, t)
+    real = ckpt._restore_path
+    calls = {"n": 0}
+
+    def racy(path, template):
+        calls["n"] += 1
+        if calls["n"] == 1 and path.endswith("step_00000002"):
+            import shutil as _sh
+            _sh.rmtree(path)          # prune wins the race on attempt 1
+            raise FileNotFoundError(path)
+        return real(path, template)
+
+    monkeypatch.setattr(ckpt, "_restore_path", racy)
+    _back, manifest = ckpt.restore(str(tmp_path), t)
+    assert manifest["step"] == 1
+    assert calls["n"] == 2
+
+
 def test_resilient_trainer_survives_failures(tmp_path):
     """Inject failures mid-run; the final state must equal a failure-free
     run (determinism of restore + fixed batch stream)."""
@@ -77,6 +152,93 @@ def test_resilient_trainer_survives_failures(tmp_path):
                     jax.tree.leaves(faulty.params)):
         np.testing.assert_array_equal(np.asarray(a, np.float32),
                                       np.asarray(b, np.float32))
+
+
+def test_trainer_restart_without_checkpoint_resets_to_step0(tmp_path):
+    """A failure before the first checkpoint restores the initial state
+    (step 0) instead of crashing on the empty checkpoint dir — and the
+    final params still match a failure-free run."""
+    cfg = registry.get_reduced("deepseek-7b")
+    m = build(cfg)
+    opt = AdamW(lr=1e-3)
+    batch = make_batch(jax.random.key(1), m, TRAIN_4K, reduced_shape=(2, 16))
+    step = jax.jit(build_train_step(m, ParallelismConfig(), opt))
+
+    def mk_trainer(dirname, injector=None):
+        params = m.init(jax.random.key(0))
+        return ResilientTrainer(
+            step_fn=step, params=params, opt_state=opt.init(params),
+            cfg=FTConfig(ckpt_dir=str(tmp_path / dirname), ckpt_every=50,
+                         max_restarts=3),
+            batch_source=lambda: batch, failure_injector=injector)
+
+    clean = mk_trainer("clean")
+    clean.run(6)
+    fails = {3: True}                # fires before any checkpoint exists
+    faulty = mk_trainer("faulty", injector=lambda s: fails.pop(s, False))
+    faulty.run(6)
+    assert faulty.restarts == 1
+    for a, b in zip(jax.tree.leaves(clean.params),
+                    jax.tree.leaves(faulty.params)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+
+
+def test_trainer_restart_on_corrupt_checkpoint(tmp_path):
+    """All checkpoints corrupt -> graceful reset to step 0, no raise."""
+    cfg = registry.get_reduced("deepseek-7b")
+    m = build(cfg)
+    opt = AdamW(lr=1e-3)
+    batch = make_batch(jax.random.key(1), m, TRAIN_4K, reduced_shape=(2, 16))
+    step = jax.jit(build_train_step(m, ParallelismConfig(), opt))
+    params = m.init(jax.random.key(0))
+    t = ResilientTrainer(step, params, opt.init(params),
+                         FTConfig(ckpt_dir=str(tmp_path), ckpt_every=2,
+                                  max_restarts=3),
+                         batch_source=lambda: batch)
+    t.run(4)                         # writes step_2, step_4
+    for d in tmp_path.glob("step_*"):
+        (d / "manifest.json").write_text("{")
+    t._restart()
+    assert t.step == 0 and t.restarts == 1
+    t.run(6)                         # trains forward again from scratch
+    assert t.step == 6
+
+
+def test_trainer_consults_failed_hosts(tmp_path):
+    """A host marked dead in the heartbeat registry triggers a restore
+    before the next step and is re-admitted afterwards."""
+    cfg = registry.get_reduced("deepseek-7b")
+    m = build(cfg)
+    opt = AdamW(lr=1e-3)
+    batch = make_batch(jax.random.key(1), m, TRAIN_4K, reduced_shape=(2, 16))
+    step = jax.jit(build_train_step(m, ParallelismConfig(), opt))
+    params = m.init(jax.random.key(0))
+    t = ResilientTrainer(step, params, opt.init(params),
+                         FTConfig(ckpt_dir=str(tmp_path), ckpt_every=2,
+                                  max_restarts=3),
+                         batch_source=lambda: batch)
+    t.run(4)
+    t.heartbeats.mark_dead(7)        # fault injector reports host 7 gone
+    t.run(8)
+    assert t.restarts == 1
+    assert t.step == 8
+    assert not t.heartbeats.is_dead(7)   # re-admitted after restore
+
+
+def test_trainer_restart_budget_exhausted(tmp_path):
+    cfg = registry.get_reduced("deepseek-7b")
+    m = build(cfg)
+    opt = AdamW(lr=1e-3)
+    batch = make_batch(jax.random.key(1), m, TRAIN_4K, reduced_shape=(2, 16))
+    step = jax.jit(build_train_step(m, ParallelismConfig(), opt))
+    params = m.init(jax.random.key(0))
+    t = ResilientTrainer(step, params, opt.init(params),
+                         FTConfig(ckpt_dir=str(tmp_path), max_restarts=1),
+                         batch_source=lambda: batch,
+                         failure_injector=lambda s: True)
+    with pytest.raises(RuntimeError, match="restart budget"):
+        t.run(4)
 
 
 def test_resume_after_interrupt(tmp_path):

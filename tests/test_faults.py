@@ -1,0 +1,334 @@
+"""Fault-injection + failover layer (ISSUE-8).
+
+Covers the acceptance trace — a VirtualClock workload surviving a shard
+kill, spill-file corruption, and a job preemption with exactly-once-per-
+epoch coverage and byte-for-byte determinism across two runs — plus the
+per-domain fault paths: shard failover + ring re-expansion on restart,
+sampler checkpoint/restore through ``Session``, storage bandwidth
+collapse, worker-crash recovery, and the :class:`FaultSpec` /
+:class:`LivenessRegistry` contracts.
+"""
+import numpy as np
+import pytest
+
+from repro.api import (FaultSpec, JobSpec, SenecaServer, VirtualClock,
+                       WorkloadRunner)
+from repro.data.storage import RemoteStorage
+from repro.data.synthetic import tiny
+from repro.faults import FAULT_KINDS, FaultInjector, LivenessRegistry
+from repro.faults.injector import corrupt_spill_files
+
+
+def _server(ds, **kw):
+    kw.setdefault("cache_frac", 0.4)
+    kw.setdefault("seed", 0)
+    return SenecaServer.for_dataset(ds, **kw)
+
+
+def _coverage_exact(sample_ids, n):
+    ids = np.asarray(sample_ids)
+    if len(ids) % n:
+        return False
+    want = np.arange(n)
+    return all(np.array_equal(np.sort(ids[e * n:(e + 1) * n]), want)
+               for e in range(len(ids) // n))
+
+
+# ----------------------------------------------------------------------
+# FaultSpec validation
+def test_fault_spec_kinds_and_validation():
+    assert "shard-kill" in FAULT_KINDS and "preempt" in FAULT_KINDS
+    with pytest.raises(ValueError):
+        FaultSpec("no-such-kind", at_s=0.0)
+    with pytest.raises(ValueError):
+        FaultSpec("preempt", at_s=0.1)            # job required
+    with pytest.raises(ValueError):
+        FaultSpec("worker-crash", at_s=0.1)       # job required
+    with pytest.raises(ValueError):
+        FaultSpec("shard-kill", at_s=0.1)         # shard required
+    with pytest.raises(ValueError):
+        FaultSpec("bandwidth-collapse", at_s=0.1, factor=0.0)
+    with pytest.raises(ValueError):
+        FaultSpec("spill-corrupt", at_s=0.1, n_files=0)
+    with pytest.raises(ValueError):
+        FaultSpec("preempt", at_s=-1.0, job="a")
+    s = FaultSpec("shard-kill", at_s=0.5, shard=1, duration_s=0.2)
+    assert (s.kind, s.at_s, s.shard, s.duration_s) == \
+        ("shard-kill", 0.5, 1, 0.2)
+
+
+def test_injector_requires_targets():
+    with pytest.raises(ValueError, match="server"):
+        FaultInjector([FaultSpec("shard-kill", at_s=0.0, shard=0)])
+    with pytest.raises(ValueError, match="RemoteStorage"):
+        FaultInjector([FaultSpec("bandwidth-collapse", at_s=0.0)],
+                      server=object())
+
+
+# ----------------------------------------------------------------------
+# LivenessRegistry
+def test_liveness_registry_expiry_and_overrides():
+    t = [0.0]
+
+    class FakeClock:
+        def now(self):
+            return t[0]
+
+    reg = LivenessRegistry(dead_after_s=5.0, clock=FakeClock())
+    reg.beat("h0")
+    reg.beat("h1")
+    assert reg.failed() == []
+    t[0] = 6.0
+    assert sorted(reg.failed()) == ["h0", "h1"]
+    # expiry means "maybe slow" — is_dead() reports explicit marks only
+    assert not reg.is_dead("h0")
+    reg.beat("h0")
+    assert reg.failed() == ["h1"]
+    reg.mark_dead("h0")                  # explicit kill beats heartbeats
+    assert reg.is_dead("h0")
+    reg.mark_alive("h0")
+    assert not reg.is_dead("h0") and reg.failed() == ["h1"]
+    reg.forget("h1")
+    assert reg.failed() == []
+
+
+# ----------------------------------------------------------------------
+# Shard failover + ring re-expansion
+def test_shard_kill_failover_and_restart(tmp_path):
+    ds = tiny(n=96)
+    server = _server(ds, shards=2)
+    try:
+        svc = server.service
+        cache = svc.cache
+        n = ds.n_samples
+        owned = np.flatnonzero(
+            cache.router.shard_of_many(np.arange(n)) == 1)
+        assert len(owned) > 0
+        data = np.zeros(64, np.uint8)
+        cache.insert(int(owned[0]), "decoded", data, data.nbytes)
+        assert cache.lookup_tiered(int(owned[0]))[0] == "decoded"
+
+        svc.fail_shard(1)
+        # dead shard degrades: lookups miss, inserts are dropped, the
+        # failover counter moves, and stats carry the dead marker
+        assert cache.lookup_tiered(int(owned[0]))[0] is None
+        assert cache.insert(int(owned[1]), "decoded", data,
+                            data.nbytes) is False
+        assert cache.failovers > 0
+        dead = [s for s in cache.shard_stats() if s.get("dead")]
+        assert [s["shard"] for s in dead] == [1]
+        # surviving shard still serves its own keys
+        other = np.flatnonzero(
+            cache.router.shard_of_many(np.arange(n)) == 0)
+        assert cache.insert(int(other[0]), "decoded", data, data.nbytes)
+        assert cache.lookup_tiered(int(other[0]))[0] == "decoded"
+        # the dead shard's keys now read as storage-resident, not cached
+        res = cache.residency_array(n)
+        assert not res[owned].any()
+
+        v_dead = cache.version
+        svc.restore_shard(1)
+        assert cache.version != v_dead     # generation bump, no masking
+        assert not any(s.get("dead") for s in cache.shard_stats())
+        assert cache.insert(int(owned[2]), "decoded", data, data.nbytes)
+        assert cache.lookup_tiered(int(owned[2]))[0] == "decoded"
+        stats = svc.stats()
+        assert stats["faults"]["counts"]["fault.shard-kill"] == 1
+        assert stats["faults"]["counts"]["recovery.shard-restart"] == 1
+        assert stats["faults"]["shard_failovers"] > 0
+    finally:
+        server.close()
+
+
+# ----------------------------------------------------------------------
+# Session sampler checkpoint/restore
+@pytest.mark.parametrize("backend", ["numpy", "jax"])
+def test_session_checkpoint_restore_roundtrip(backend):
+    ds = tiny(n=64)
+    server = _server(ds, backend=backend)
+    try:
+        sess = server.open_session(batch_size=8)
+        pre = [sess.next_batch_ids()[0] for _ in range(3)]
+        snap = sess.checkpoint_state()
+        assert snap["format"] == 1
+        cont = [sess.next_batch_ids()[0] for _ in range(5)]
+        sess.close()
+
+        sess2 = server.open_session(batch_size=8)
+        sess2.restore_state(snap)
+        resumed = [sess2.next_batch_ids()[0] for _ in range(5)]
+        if backend == "numpy":
+            # restored session replays the exact post-checkpoint stream
+            assert [list(b) for b in resumed] == [list(b) for b in cont]
+        # exactly-once-per-epoch coverage holds for checkpoint + resume
+        # on both backends (the jax backend's substitution RNG key is
+        # shared and deliberately not restored, so its post-restore
+        # *order* may differ — coverage may not)
+        ids = [i for b in pre + resumed for i in b]
+        assert _coverage_exact(ids, 64)
+        sess2.close()
+    finally:
+        server.close()
+
+
+def test_session_restore_rejects_mismatched_shape():
+    ds = tiny(n=64)
+    server = _server(ds)
+    try:
+        sess = server.open_session(batch_size=8)
+        snap = sess.checkpoint_state()
+        other = server.open_session(batch_size=16)
+        with pytest.raises(ValueError):
+            other.restore_state(snap)       # batch_size mismatch
+        with pytest.raises(ValueError):
+            sess.restore_state({**snap, "format": 99})
+        sess.close()
+        other.close()
+    finally:
+        server.close()
+
+
+# ----------------------------------------------------------------------
+# Storage bandwidth collapse
+def test_storage_degrade_and_restore():
+    ds = tiny(n=16)
+    storage = RemoteStorage(ds, bandwidth=1e9)
+    storage.fetch(0)
+    assert storage.degraded_fetches == 0
+    storage.degrade(0.5)
+    assert storage.degraded and storage.budget.rate == 0.5e9
+    storage.fetch(1)
+    assert storage.degraded_fetches == 1
+    storage.restore_bandwidth()
+    assert not storage.degraded and storage.budget.rate == 1e9
+    with pytest.raises(ValueError):
+        storage.degrade(0.0)
+    # unlimited store: flag flips but there is no rate to scale
+    unl = RemoteStorage(ds)
+    unl.degrade(0.1)
+    assert unl.degraded and unl.budget.rate is None
+
+
+# ----------------------------------------------------------------------
+# Spill corruption helper
+def test_corrupt_spill_files_truncates_deterministically(tmp_path):
+    for name in ("b.bin", "a.bin", "c.bin"):
+        (tmp_path / name).write_bytes(b"x" * 64)
+    hit = corrupt_spill_files(str(tmp_path), 2)
+    assert [p.rsplit("/", 1)[1] for p in hit] == ["a.bin", "b.bin"]
+    assert (tmp_path / "a.bin").stat().st_size == 1
+    assert (tmp_path / "c.bin").stat().st_size == 64
+
+
+# ----------------------------------------------------------------------
+# End-to-end acceptance trace: shard kill + spill corruption + preempt
+def _acceptance_run(policy, tmp_path, seed=0, tag="r"):
+    ds = tiny(n=128)
+    spill = tmp_path / f"spill-{tag}"
+    spill.mkdir()
+    server = _server(
+        ds, shards=2, cache_frac=0.3, spill_dir=str(spill),
+        spill_bytes=int(0.2 * 128 * ds.augmented_bytes()))
+    storage = RemoteStorage(ds)
+    faults = [
+        FaultSpec("shard-kill", at_s=0.05, shard=1, duration_s=0.1),
+        FaultSpec("spill-corrupt", at_s=0.08, n_files=2),
+        FaultSpec("preempt", at_s=0.10, job="a", duration_s=0.06),
+    ]
+    runner = WorkloadRunner(server, storage, clock=VirtualClock(),
+                            seed=seed, faults=faults, fault_policy=policy)
+    res = runner.run([
+        JobSpec("a", arrival_s=0.0, epochs=2, batch_size=16,
+                gpu_rate=1000),
+        JobSpec("b", arrival_s=0.02, epochs=2, batch_size=16,
+                gpu_rate=700),
+    ], timeout=300)
+    stats = res.stats
+    server.close()
+    return res, stats
+
+
+def test_acceptance_trace_coverage_and_determinism(tmp_path):
+    r1, stats = _acceptance_run("checkpoint", tmp_path, tag="r1")
+    r2, _ = _acceptance_run("checkpoint", tmp_path, tag="r2")
+    # byte-for-byte reproducible under the VirtualClock
+    assert r1.makespan == r2.makespan
+    for a, b in zip(r1.jobs, r2.jobs):
+        assert a.sample_ids == b.sample_ids
+        assert a.epoch_ends == b.epoch_ends
+    # exactly-once-per-epoch coverage survives all three fault kinds
+    for job in r1.jobs:
+        assert _coverage_exact(job.sample_ids, 128), job.spec.name
+    assert sum(j.preemptions for j in r1.jobs) == 1
+    counts = stats["faults"]["counts"]
+    assert counts["fault.shard-kill"] == 1
+    assert counts["fault.spill-corrupt"] == 1
+    assert counts["fault.preempt"] == 1
+    assert counts["recovery.shard-restart"] == 1
+    assert counts["recovery.preempt-readmit"] == 1
+    assert stats["faults"]["injected"] >= 3
+    assert stats["faults"]["recovered"] >= 2
+
+
+def test_naive_restart_replays_but_still_covers(tmp_path):
+    rec, _ = _acceptance_run("checkpoint", tmp_path, tag="c")
+    naive, _ = _acceptance_run("restart", tmp_path, tag="n")
+    for job in naive.jobs:
+        assert _coverage_exact(job.sample_ids, 128), job.spec.name
+    a_rec = next(j for j in rec.jobs if j.spec.name == "a")
+    a_naive = next(j for j in naive.jobs if j.spec.name == "a")
+    # restart resets the job's counters, so the replayed progress shows
+    # up as extra runtime, not extra recorded samples
+    assert a_naive.samples == a_rec.samples
+    assert a_naive.duration_s > a_rec.duration_s
+
+
+def test_worker_crash_recovery(tmp_path):
+    ds = tiny(n=64)
+    server = _server(ds)
+    storage = RemoteStorage(ds)
+    runner = WorkloadRunner(
+        server, storage, clock=VirtualClock(), seed=0,
+        faults=[FaultSpec("worker-crash", at_s=0.03, job="a")])
+    res = runner.run([JobSpec("a", arrival_s=0.0, epochs=2,
+                              batch_size=8, gpu_rate=1000)], timeout=300)
+    server.close()
+    job = res.jobs[0]
+    assert job.worker_restarts == 1
+    assert _coverage_exact(job.sample_ids, 64)
+
+
+def test_unknown_fault_job_rejected():
+    ds = tiny(n=32)
+    server = _server(ds)
+    storage = RemoteStorage(ds)
+    runner = WorkloadRunner(
+        server, storage, clock=VirtualClock(), seed=0,
+        faults=[FaultSpec("preempt", at_s=0.1, job="ghost",
+                          duration_s=0.1)])
+    with pytest.raises(ValueError, match="ghost"):
+        runner.run([JobSpec("a", arrival_s=0.0, epochs=1, batch_size=8,
+                            gpu_rate=1000)], timeout=60)
+    server.close()
+
+
+def test_shard_fault_needs_sharded_server():
+    ds = tiny(n=32)
+    server = _server(ds)          # shards=1: single-process cache
+    storage = RemoteStorage(ds)
+    runner = WorkloadRunner(
+        server, storage, clock=VirtualClock(), seed=0,
+        faults=[FaultSpec("shard-kill", at_s=0.1, shard=0)])
+    with pytest.raises(ValueError, match="shard"):
+        runner.run([JobSpec("a", arrival_s=0.0, epochs=1, batch_size=8,
+                            gpu_rate=1000)], timeout=60)
+    server.close()
+
+
+def test_bad_fault_policy_rejected():
+    ds = tiny(n=32)
+    server = _server(ds)
+    with pytest.raises(ValueError):
+        WorkloadRunner(server, RemoteStorage(ds), clock=VirtualClock(),
+                       fault_policy="yolo")
+    server.close()
