@@ -1,0 +1,154 @@
+"""Open-loop serving: p99 tail latency vs offered load, with and without
+SLO-aware admission control.
+
+Closed-loop benchmarks (fig_live_makespan) measure makespan — the
+pipeline can never fall behind, only slow down.  This one drives the
+live stack *open-loop*: Poisson request arrivals replayed on a
+:class:`~repro.workload.clock.VirtualClock` (byte-reproducible
+schedules, storage stalls charged through the clock-aware token bucket,
+modeled decode/augment service costs), swept across offered rates from
+under- to over-load.  At each rate the same arrival trace runs twice:
+
+* **uncontrolled** — no SLO: every request queues, so past the capacity
+  knee the backlog (and p99) grows with the trace length;
+* **controlled** — :class:`~repro.api.SLO` admission: requests are
+  degraded (skip augment), served encoded, or shed once the estimated
+  queue wait crosses the target's fractions — p99 stays bounded and
+  every decision is counted.
+
+Emits ``BENCH_open_loop.json``; ``--check`` asserts (a) controlled p99 <
+uncontrolled p99 at the overload point with shed/degraded requests
+actually counted, and (b) the full per-request latency vector is
+identical across two fresh VirtualClock runs.
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Tuple
+
+from benchmarks.common import write_bench_json
+from repro.api import SLO, SenecaServer
+from repro.data.storage import RemoteStorage
+from repro.data.synthetic import tiny
+from repro.workload import (OpenLoopGenerator, VirtualClock,
+                            poisson_arrivals)
+
+# modeled per-request service costs (seconds) charged on the virtual
+# clock: with 2 workers the service capacity is 2 / 0.007 ~ 285 req/s
+PHASE_COSTS = {"decode": 0.004, "augment": 0.003}
+N_WORKERS = 2
+SLO_CFG = SLO(p99_target_s=0.05, max_queue=64)
+
+
+def run_point(rate: float, *, n_requests: int, n_samples: int,
+              controlled: bool, seed: int = 0) -> Dict:
+    """One (rate, admission-mode) cell: fresh server + clock + trace."""
+    ds = tiny(n=n_samples)
+    server = SenecaServer.for_dataset(ds, cache_frac=0.3, seed=seed)
+    clock = VirtualClock()
+    storage = RemoteStorage(ds, bandwidth=8e6, clock=clock)
+    gen = OpenLoopGenerator(server, storage, clock=clock,
+                            slo=SLO_CFG if controlled else None,
+                            n_workers=N_WORKERS, seed=seed,
+                            phase_costs=PHASE_COSTS)
+    arrivals = poisson_arrivals(rate, n=n_requests, seed=seed + 17)
+    res = gen.run(arrivals)
+    server.close()
+    out = {
+        "rate": rate,
+        "controlled": controlled,
+        "counts": dict(res.counts),
+        "latency_s": res.percentiles(),
+        "phase_latency_s": res.phase_percentiles(),
+        "makespan_s": res.makespan_s,
+        "latencies": [round(r.total_s, 9) for r in res.requests],
+    }
+    return out
+
+
+def run(full: bool = False) -> List[Tuple[str, str]]:
+    n_requests = 1200 if full else 400
+    n_samples = 512 if full else 128
+    rates = (100, 250, 400, 600) if full else (150, 450)
+    overload = rates[-1]
+
+    sweep: List[Dict] = []
+    for rate in rates:
+        for controlled in (False, True):
+            sweep.append(run_point(rate, n_requests=n_requests,
+                                   n_samples=n_samples,
+                                   controlled=controlled))
+    # determinism probe: replay the overload/controlled cell fresh and
+    # compare the full per-request latency vector bit-for-bit
+    again = run_point(overload, n_requests=n_requests,
+                      n_samples=n_samples, controlled=True)
+    first = next(p for p in sweep
+                 if p["rate"] == overload and p["controlled"])
+    deterministic = first["latencies"] == again["latencies"]
+
+    by_rate: Dict[float, Dict[str, Dict]] = {}
+    for p in sweep:
+        by_rate.setdefault(p["rate"], {})[
+            "controlled" if p["controlled"] else "uncontrolled"] = p
+    over = by_rate[overload]
+    payload = {
+        "config": {"n_requests": n_requests, "n_samples": n_samples,
+                   "n_workers": N_WORKERS, "phase_costs": PHASE_COSTS,
+                   "slo": {"p99_target_s": SLO_CFG.p99_target_s,
+                           "max_queue": SLO_CFG.max_queue},
+                   "rates": list(rates), "overload_rate": overload},
+        "deterministic": deterministic,
+        "sweep": [{k: v for k, v in p.items() if k != "latencies"}
+                  for p in sweep],
+        "overload": {
+            "uncontrolled_p99_s": over["uncontrolled"]["latency_s"]["p99"],
+            "controlled_p99_s": over["controlled"]["latency_s"]["p99"],
+            "controlled_counts": over["controlled"]["counts"],
+        },
+    }
+    path = write_bench_json("open_loop", payload)
+
+    rows = []
+    for rate in rates:
+        u, c = by_rate[rate]["uncontrolled"], by_rate[rate]["controlled"]
+        rows.append((
+            f"fig_open_loop/rate{rate:.0f}",
+            f"p99 uncontrolled={u['latency_s']['p99'] * 1e3:.1f}ms "
+            f"controlled={c['latency_s']['p99'] * 1e3:.1f}ms "
+            f"shed={c['counts']['shed']} "
+            f"degraded={c['counts']['degraded']}"))
+    rows.append(("fig_open_loop/deterministic",
+                 f"replay_identical={deterministic} json={path}"))
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--check", action="store_true",
+                    help="assert controlled p99 < uncontrolled p99 at "
+                         "overload and VirtualClock determinism")
+    args = ap.parse_args()
+    out_rows = run(full=args.full)
+    for name, derived in out_rows:
+        print(f"{name},{derived}")
+    if args.check:
+        import json
+        with open("BENCH_open_loop.json") as f:
+            bench = json.load(f)
+        over = bench["overload"]
+        u99, c99 = (float(over["uncontrolled_p99_s"]),
+                    float(over["controlled_p99_s"]))
+        counts = over["controlled_counts"]
+        assert c99 < u99, (
+            f"admission control did not hold p99 below the uncontrolled "
+            f"baseline at overload ({c99:.4f}s >= {u99:.4f}s)")
+        assert counts["shed"] + counts["degraded"] + counts["encoded"] > 0, \
+            f"overload run never shed or degraded a request: {counts}"
+        assert bench["deterministic"], (
+            "VirtualClock replay produced different per-request latencies")
+        print(f"CHECK OK: overload p99 {c99 * 1e3:.1f}ms (controlled) < "
+              f"{u99 * 1e3:.1f}ms (uncontrolled), "
+              f"shed={counts['shed']} degraded={counts['degraded']}, "
+              f"deterministic replay")

@@ -23,8 +23,9 @@ def main() -> None:
                             fig14_concurrency, fig15_ect,
                             fig_device_pipeline, fig_dynamic_jobs,
                             fig_fault_recovery, fig_live_makespan,
-                            fig_pipeline_throughput, fig_sharded,
-                            fig_tiered_cache, roofline_report, table6_mdp)
+                            fig_open_loop, fig_pipeline_throughput,
+                            fig_sharded, fig_tiered_cache, roofline_report,
+                            table6_mdp)
     modules = [
         ("fig3", fig3_cache_forms), ("fig4", fig4_pagecache),
         ("table6", table6_mdp), ("fig8", fig8_validation),
@@ -37,6 +38,7 @@ def main() -> None:
         ("tiered", fig_tiered_cache),
         ("sharded", fig_sharded),
         ("faults", fig_fault_recovery),
+        ("openloop", fig_open_loop),
         ("roofline", roofline_report),
     ]
     only = set(args.only.split(",")) if args.only else None

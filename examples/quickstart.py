@@ -12,6 +12,11 @@ server's stats — the smallest real run of the paper's whole stack.  Pass
 ``--lm`` instead runs the original LM driver (reduced qwen3-8b under the
 ResilientTrainer with atomic checkpoints); ``python -m repro.launch.train``
 exposes the same paths with all knobs.
+
+``--open-loop RATE`` replaces the closed training loop with trace-timed
+request arrivals at RATE req/s (VirtualClock-deterministic, SLO
+admission control) and prints exact p50/p99/p999 latency with a
+per-phase breakdown — docs/API.md "Open-loop serving & SLOs".
 """
 import argparse
 import os
@@ -262,6 +267,53 @@ def run_multi(args) -> None:
     print(f"[quickstart] OK — {args.jobs} jobs shared one Seneca cache")
 
 
+def run_open_loop(args) -> None:
+    """``--open-loop RATE``: drive the server with trace-timed request
+    arrivals instead of a closed training loop (docs/API.md "Open-loop
+    serving & SLOs") — a VirtualClock replays the schedule
+    deterministically, the SLO admission controller degrades/sheds under
+    overload, and the exact latency percentiles are printed per phase."""
+    from repro.api import SLO
+    from repro.workload import (OpenLoopGenerator, VirtualClock,
+                                poisson_arrivals)
+
+    ds = _make_dataset(args)
+    server = SenecaServer.for_dataset(ds, cache_frac=0.35, seed=0,
+                                      backend=args.backend,
+                                      **_spill_kwargs(args, ds))
+    clock = VirtualClock()
+    storage = RemoteStorage(ds, bandwidth=8e6, clock=clock)
+    slo = SLO(p99_target_s=args.slo_p99, max_queue=64)
+    gen = OpenLoopGenerator(server, storage, clock=clock, slo=slo,
+                            n_workers=2, seed=0,
+                            phase_costs={"decode": 0.004,
+                                         "augment": 0.003})
+    n = args.steps * args.batch
+    res = gen.run(poisson_arrivals(args.open_loop, n=n, seed=0))
+    print(f"[quickstart] open-loop @ {args.open_loop:.0f} req/s, "
+          f"{n} requests, SLO p99 target {args.slo_p99 * 1e3:.0f}ms: "
+          f"{res.counts}")
+    lat = res.percentiles()
+    if lat:
+        print(f"[quickstart] latency p50={lat['p50'] * 1e3:.2f}ms "
+              f"p99={lat['p99'] * 1e3:.2f}ms "
+              f"p999={lat['p999'] * 1e3:.2f}ms "
+              f"(virtual makespan {res.makespan_s:.2f}s)")
+        for phase, pcts in sorted(res.phase_percentiles().items()):
+            print(f"[quickstart]   {phase:>8}: "
+                  f"p50={pcts['p50'] * 1e3:.2f}ms "
+                  f"p99={pcts['p99'] * 1e3:.2f}ms")
+    stats = server.stats()
+    req = stats["telemetry"]["requests"]
+    print(f"[quickstart] stats()['telemetry']['requests']: "
+          f"outcomes={req['outcomes']} "
+          f"completed={req['completed']}")
+    server.close()
+    assert res.counts["served"] > 0
+    print("[quickstart] OK — open-loop serving through the repro.api "
+          "facade")
+
+
 def run_lm(args) -> None:
     from repro.distributed.ft import FTConfig, ResilientTrainer
     from repro.launch.train import lm_batch_source
@@ -343,6 +395,15 @@ def main() -> None:
                          "becomes a DRAM→disk tier chain sized by the "
                          "form×tier MDP (docs/API.md \"Storage engine "
                          "& cache tiers\")")
+    ap.add_argument("--open-loop", type=float, default=None,
+                    metavar="RATE",
+                    help="drive the server open-loop at RATE req/s "
+                         "(Poisson arrivals on a VirtualClock, SLO "
+                         "admission control) and print latency "
+                         "percentiles instead of training (docs/API.md "
+                         "\"Open-loop serving & SLOs\")")
+    ap.add_argument("--slo-p99", type=float, default=0.05,
+                    help="open-loop p99 latency target in seconds")
     ap.add_argument("--dataset-dir", default=None,
                     help="materialize the synthetic dataset as "
                          "write-once sharded files here and serve "
@@ -358,8 +419,13 @@ def main() -> None:
                  "pass --jobs N (N >= 2) without --lm")
     if args.steps is None:
         args.steps = 200 if args.lm else 30
+    if args.open_loop is not None and (args.lm or args.jobs > 1):
+        ap.error("--open-loop replaces the training loop: drop --lm / "
+                 "--jobs")
     if args.lm:
         run_lm(args)
+    elif args.open_loop is not None:
+        run_open_loop(args)
     elif args.jobs > 1:
         run_multi(args)
     else:

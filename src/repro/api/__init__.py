@@ -35,9 +35,10 @@ from repro.api.policies import (AdmissionPolicy, CapacityAdmission,
                                 OdsSampler, RefcountEviction, SamplerPolicy,
                                 UnseenOnlyAdmission, policy_names,
                                 register_policy, resolve_policy)
-from repro.api.server import (CODE_FORM, FORM_CODE, RepartitionController,
-                              SenecaConfig, SenecaServer, SenecaService,
-                              Session, SessionClosed)
+from repro.api.server import (CODE_FORM, FORM_CODE, SLO,
+                              RepartitionController, SenecaConfig,
+                              SenecaServer, SenecaService, Session,
+                              SessionClosed)
 from repro.api.telemetry import (Ewma, TelemetryAggregator,
                                  TelemetrySnapshot)
 # hardware / dataset profiles + the closed-form DSI model (Eqs. 1-9,
@@ -70,7 +71,13 @@ from repro.faults import (FAULT_KINDS, FaultInjector, FaultSpec,
 # initialized module.
 _WORKLOAD_EXPORTS = ("Clock", "JobResult", "JobSpec", "RealClock",
                      "VirtualClock", "WorkloadResult", "WorkloadRunner",
-                     "deterministic_runner")
+                     "deterministic_runner",
+                     # open-loop serving (docs/API.md "Open-loop serving
+                     # & SLOs")
+                     "OpenLoopGenerator", "RequestResult", "ServeResult",
+                     "ARRIVAL_PROCESSES", "poisson_arrivals",
+                     "bursty_arrivals", "diurnal_arrivals",
+                     "make_arrivals")
 
 
 def __getattr__(name: str):
@@ -82,7 +89,7 @@ def __getattr__(name: str):
 __all__ = [
     # server / session facade
     "SenecaServer", "Session", "SessionClosed", "SenecaConfig",
-    "SenecaService", "FORM_CODE", "CODE_FORM",
+    "SenecaService", "SLO", "FORM_CODE", "CODE_FORM",
     # telemetry + adaptive repartitioning
     "RepartitionController", "TelemetryAggregator", "TelemetrySnapshot",
     "Ewma",
@@ -110,6 +117,10 @@ __all__ = [
     # live multi-job workloads
     "WorkloadRunner", "JobSpec", "JobResult", "WorkloadResult",
     "Clock", "RealClock", "VirtualClock", "deterministic_runner",
+    # open-loop serving
+    "OpenLoopGenerator", "RequestResult", "ServeResult",
+    "ARRIVAL_PROCESSES", "poisson_arrivals", "bursty_arrivals",
+    "diurnal_arrivals", "make_arrivals",
     # sharded data plane
     "ShardRouter", "ShardedCache", "CacheShard", "ShardConfig",
     # fault injection + failover

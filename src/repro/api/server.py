@@ -51,8 +51,53 @@ from repro.core.perf_model import (AZURE_NC96, DEFAULT_DISK_BW,
                                    HardwareProfile, JobProfile, calibrate)
 
 __all__ = ["SenecaConfig", "SenecaService", "SenecaServer", "Session",
-           "SessionClosed", "RepartitionController", "FORM_CODE",
+           "SessionClosed", "RepartitionController", "SLO", "FORM_CODE",
            "CODE_FORM"]
+
+
+@dataclass(frozen=True)
+class SLO:
+    """Tail-latency service-level objective for open-loop serving.
+
+    The open-loop admission controller
+    (:class:`~repro.workload.openloop.OpenLoopGenerator`) estimates each
+    arriving request's queue wait as ``backlog x service-time EWMA /
+    workers`` and compares it against ``p99_target_s``:
+
+    * estimated wait > ``degrade_frac`` x target — skip augmentation
+      (serve the decoded form);
+    * estimated wait > ``encode_frac`` x target — serve the encoded
+      form (skip decode *and* augment);
+    * estimated wait > ``shed_frac`` x target, or the queue is at
+      ``max_queue`` — shed the request outright.
+
+    Degrading caps the *work* a request may buy, never the served
+    quality of an already-cached form: a request degraded to encoded is
+    still answered from the augmented cache partition when it hits.
+    Every decision is counted (``shed`` / ``degraded``) and surfaced in
+    ``stats()["telemetry"]["requests"]``.
+    """
+
+    p99_target_s: float
+    max_queue: int = 256          # hard backlog bound (shed beyond it)
+    degrade_frac: float = 0.5     # skip augment past this fraction
+    encode_frac: float = 0.75     # serve encoded past this fraction
+    shed_frac: float = 1.0        # shed past this fraction
+
+    def __post_init__(self) -> None:
+        if not self.p99_target_s > 0:
+            raise ValueError(f"p99_target_s must be > 0, got "
+                             f"{self.p99_target_s}")
+        if self.max_queue < 1:
+            raise ValueError(f"max_queue must be >= 1, got "
+                             f"{self.max_queue}")
+        if not (0 < self.degrade_frac <= self.encode_frac
+                <= self.shed_frac):
+            raise ValueError(
+                f"expected 0 < degrade_frac <= encode_frac <= shed_frac, "
+                f"got {self.degrade_frac}/{self.encode_frac}/"
+                f"{self.shed_frac}")
+
 
 REPARTITION_MODES = ("static", "on-change", "adaptive")
 
@@ -120,6 +165,11 @@ class SenecaConfig:
     # single TieredCache — byte-identical to the pre-shard engine.
     shards: int = 1
     shard_transport: str = "sim"
+    # tail-latency SLO for open-loop serving (docs/API.md "Open-loop
+    # serving & SLOs"): None disables admission control — requests
+    # queue unboundedly like the closed-loop path.  The
+    # OpenLoopGenerator defaults to this when not given its own.
+    slo: Optional[SLO] = None
 
 
 class RepartitionController:
@@ -232,12 +282,21 @@ class RepartitionController:
         with self._lock:
             return self._resolve_locked(self._calibrated(), "sessions")
 
+    def _now(self) -> float:
+        """Cooldown time source: the server's pluggable clock when one
+        is configured (``SenecaService.set_clock``), else wall time.
+        Gating the adaptive cadence on ``time.monotonic`` under a
+        VirtualClock made the repartition rhythm depend on host CPU
+        speed instead of trace time — a determinism leak."""
+        clock = self.service.clock
+        return time.monotonic() if clock is None else clock.now()
+
     def tick(self) -> bool:
         """Adaptive drift check; returns True when a resize was applied."""
         if self.mode != "adaptive" or self._stop.is_set():
             return False
         with self._lock:
-            now = time.monotonic()
+            now = self._now()
             if now - self._last_tick < self.service.cfg.repartition_cooldown:
                 return False
             self._last_tick = now
@@ -448,6 +507,11 @@ class SenecaService:
             self._refill_pending: list = []
             self._batch_counter = itertools.count()
             self.telemetry = TelemetryAggregator()
+            # pluggable time source (duck-typed Clock: .now()) for every
+            # component that paces itself against trace time — the
+            # adaptive repartition cooldown reads it, the WorkloadRunner
+            # and OpenLoopGenerator install theirs (None = wall time)
+            self.clock = None
             self.controller = RepartitionController(self)
         except BaseException:
             # close-after-failed-start: a half-built service must not
@@ -726,6 +790,15 @@ class SenecaService:
             return {}
         with self._lock:
             return self._remark_keys_locked(sorted(keys))
+
+    def set_clock(self, clock) -> None:
+        """Install a pluggable time source (anything with ``.now()``;
+        ``None`` restores wall time).  Under a
+        :class:`~repro.workload.clock.VirtualClock` this makes the
+        adaptive repartition cooldown count *trace* seconds, so the
+        repartition cadence is deterministic instead of tracking host
+        CPU speed."""
+        self.clock = clock
 
     def maybe_repartition(self) -> bool:
         """Adaptive-mode tick: cheap no-op unless telemetry-calibrated

@@ -47,15 +47,38 @@ Notes on estimator semantics:
 """
 from __future__ import annotations
 
+import math
 import threading
 from dataclasses import dataclass, field
-from typing import Dict, Optional
+from typing import Dict, List, Optional, Sequence
 
 STAGES = ("fetch_storage", "fetch_cache", "decode", "augment", "collate")
 #: "h2d" is the host→device transfer channel: its EWMA calibrates the
 #: device tier's ``b_hbm`` and its cumulative byte counter is the
 #: zero-copy assertion surface (an all-HBM-hit epoch moves no h2d bytes)
 CHANNELS = ("storage", "cache", "disk", "h2d")
+
+#: open-loop per-request phase breakdown (queue wait + data-path stages)
+REQUEST_PHASES = ("queue", "fetch", "decode", "augment")
+#: request outcomes: "served" (full quality), "degraded" (augment
+#: skipped, decoded form), "encoded" (decode+augment skipped), "shed"
+#: (rejected at admission — counted, never silently dropped)
+REQUEST_OUTCOMES = ("served", "degraded", "encoded", "shed")
+
+
+def quantile(samples: Sequence[float], q: float) -> float:
+    """Exact nearest-rank quantile: the smallest sample x such that at
+    least ``ceil(q * n)`` samples are <= x.  No interpolation — p99 of a
+    latency set is always a latency that actually occurred, and the
+    result is bit-reproducible across runs (the property the
+    VirtualClock determinism tests assert on)."""
+    if not 0.0 <= q <= 1.0:
+        raise ValueError(f"quantile q must be in [0, 1], got {q}")
+    if len(samples) == 0:
+        raise ValueError("quantile of an empty sample set")
+    xs = sorted(samples)
+    k = max(math.ceil(q * len(xs)), 1)
+    return xs[min(k, len(xs)) - 1]
 
 
 class Ewma:
@@ -131,6 +154,16 @@ class TelemetryAggregator:
         self._queue_occ: Dict[str, Ewma] = {}
         self._errors: Dict[str, int] = {}
         self._stage_workers: Dict[str, int] = {}
+        # open-loop request accounting: outcome counters + raw latency
+        # samples (exact percentiles need the full set, not an EWMA).
+        # Bounded so an unbounded serve run cannot grow memory without
+        # limit; drops beyond the cap are counted, not silent.
+        self._req_counts: Dict[str, int] = {o: 0 for o in REQUEST_OUTCOMES}
+        self._req_total: List[float] = []
+        self._req_phase: Dict[str, List[float]] = {
+            p: [] for p in REQUEST_PHASES}
+        self._req_cap = 200_000
+        self._req_dropped = 0
 
     # -- reporting (pipeline side) -------------------------------------
     def add_concurrency(self, n: int) -> None:
@@ -213,6 +246,55 @@ class TelemetryAggregator:
         with self._lock:
             return self._errors.get(kind, 0)
 
+    # -- open-loop request accounting ----------------------------------
+    def record_request(self, outcome: str, total_s: Optional[float] = None,
+                       phases: Optional[Dict[str, float]] = None) -> None:
+        """Account one open-loop request.  ``outcome`` is one of
+        :data:`REQUEST_OUTCOMES`; shed requests carry no latency.
+        ``phases`` maps :data:`REQUEST_PHASES` names to seconds spent in
+        each (missing phases — e.g. no decode on an augmented hit — are
+        simply absent from that request's breakdown)."""
+        if outcome not in self._req_counts:
+            raise ValueError(f"unknown request outcome {outcome!r}; "
+                             f"expected one of {REQUEST_OUTCOMES}")
+        with self._lock:
+            self._req_counts[outcome] += 1
+            if total_s is None:
+                return
+            if len(self._req_total) >= self._req_cap:
+                self._req_dropped += 1
+                return
+            self._req_total.append(float(total_s))
+            if phases:
+                for p, dt in phases.items():
+                    if p in self._req_phase:
+                        self._req_phase[p].append(float(dt))
+
+    def request_summary(self) -> Dict[str, object]:
+        """Outcome counters + exact latency percentiles (p50/p99/p999,
+        per-phase p50/p99).  Empty-latency runs report counters only."""
+        with self._lock:
+            counts = dict(self._req_counts)
+            total = list(self._req_total)
+            phases = {p: list(v) for p, v in self._req_phase.items() if v}
+            dropped = self._req_dropped
+        out: Dict[str, object] = {
+            "outcomes": counts,
+            "completed": sum(v for k, v in counts.items() if k != "shed"),
+            "latency_samples": len(total),
+            "latency_samples_dropped": dropped,
+        }
+        if total:
+            out["latency_s"] = {"p50": quantile(total, 0.50),
+                                "p99": quantile(total, 0.99),
+                                "p999": quantile(total, 0.999),
+                                "mean": sum(total) / len(total),
+                                "max": max(total)}
+            out["phase_latency_s"] = {
+                p: {"p50": quantile(v, 0.50), "p99": quantile(v, 0.99)}
+                for p, v in phases.items()}
+        return out
+
     # -- reading (controller side) -------------------------------------
     def snapshot(self) -> TelemetrySnapshot:
         with self._lock:
@@ -264,9 +346,14 @@ class TelemetryAggregator:
             channel_bytes=ch_bytes)
 
     def as_dict(self) -> Dict[str, object]:
-        """JSON-friendly summary for ``stats()`` surfaces."""
+        """JSON-friendly summary for ``stats()`` surfaces.  The
+        ``"requests"`` key is additive: present only once open-loop
+        requests have been recorded, so closed-loop stats payloads are
+        unchanged."""
         snap = self.snapshot()
-        return {
+        with self._lock:
+            any_requests = any(self._req_counts.values())
+        out = {
             "stage_latency_s": {k: v for k, v in snap.stage_latency.items()
                                 if v is not None},
             "bandwidth_bps": {k: v for k, v in snap.bandwidth.items()
@@ -282,3 +369,6 @@ class TelemetryAggregator:
             "b_disk": snap.b_disk, "b_hbm": snap.b_hbm,
             "channel_bytes": dict(snap.channel_bytes),
         }
+        if any_requests:
+            out["requests"] = self.request_summary()
+        return out

@@ -300,13 +300,13 @@ class _StageParallelExecutor:
             asm, slot = item
             sid = asm.ids[slot]
             try:
-                t_look = time.monotonic()
+                t_look = pipe._now()
                 form, value, tier = pipe.session.lookup_tiered(sid)
                 tel.record_serve(form)
-                t0 = time.monotonic()
+                t0 = pipe._now()
                 if form is None:
                     enc = pipe.storage.fetch(sid)
-                    dt = time.monotonic() - t0
+                    dt = pipe._now() - t0
                     pipe.times.fetch += dt
                     tel.record_stage("fetch_storage", dt)
                     tel.record_bytes("storage", len(enc), dt)
@@ -345,9 +345,9 @@ class _StageParallelExecutor:
                 return
             asm, slot, enc, from_storage = item
             try:
-                t1 = time.monotonic()
+                t1 = pipe._now()
                 img = pipe.ds.decode(enc, asm.ids[slot])
-                dt = time.monotonic() - t1
+                dt = pipe._now() - t1
                 pipe.times.decode += dt
                 # unlocked _live read: an approximate worker count is
                 # fine for the calibration scale factor
@@ -410,9 +410,9 @@ class _StageParallelExecutor:
         imgs = np.stack([img for _slot, img, _enc, _ad in group])
         seeds = np.asarray([_aug_seed(asm.epoch, asm.ids[s]) for s in slots],
                            np.int64)
-        t2 = time.monotonic()
+        t2 = pipe._now()
         outs = pipe.augment.augment_batch(imgs, pipe.ds.crop_hw, seeds)
-        dt = time.monotonic() - t2
+        dt = pipe._now() - t2
         pipe.times.augment += dt
         # the augment stage is one thread, not the whole worker pool:
         # report that, or calibrate() would overestimate t_a ~n_workers x
@@ -444,7 +444,7 @@ class _StageParallelExecutor:
                 pending[asm.seq] = asm
                 while next_seq in pending:     # emit in sampling order
                     asm = pending.pop(next_seq)
-                    t0 = time.monotonic()
+                    t0 = pipe._now()
                     batch = {
                         # copy=False: backends return float32 already —
                         # don't re-copy the whole batch on the one
@@ -455,7 +455,7 @@ class _StageParallelExecutor:
                             [pipe.ds.label(s) for s in asm.ids], np.int32),
                         "ids": np.asarray(asm.ids, np.int64),
                     }
-                    dt = time.monotonic() - t0
+                    dt = pipe._now() - t0
                     pipe.times.collate += dt
                     pipe.telemetry.record_stage("collate", dt,
                                                 n=len(asm.ids))
@@ -485,12 +485,19 @@ class _StageParallelExecutor:
         """Next collated batch.  ``timeout=None`` blocks until one is
         ready (``next_batch`` semantics — a slow pipeline is not an
         error); a finite timeout raises ``queue.Empty`` at the deadline
-        (``get`` semantics, matching the per-sample prefetch queue)."""
+        (``get`` semantics, matching the per-sample prefetch queue).
+
+        The inner poll is capped at the *remaining* deadline, never a
+        fixed quantum: a finite ``timeout < 0.2`` used to overshoot by
+        up to a full 0.2 s poll interval before the deadline was even
+        checked."""
         deadline = float("inf") if timeout is None \
             else time.monotonic() + timeout
         while True:
+            wait = min(0.2, deadline - time.monotonic()) \
+                if deadline != float("inf") else 0.2
             try:
-                return self.out_q.get(timeout=0.2)
+                return self.out_q.get(timeout=max(wait, 0.0))
             except queue.Empty:
                 if self.error is not None:
                     raise RuntimeError(
@@ -523,7 +530,8 @@ class DSIPipeline:
                  *legacy_storage, batch_size: Optional[int] = None,
                  n_workers: int = 4, prefetch: int = 2, seed: int = 0,
                  executor: str = "per-sample", augment_backend=None,
-                 consume_hook=None, sync_refills: bool = False):
+                 consume_hook=None, sync_refills: bool = False,
+                 clock=None):
         # validate before any side effect: the legacy path below
         # registers a job on the shared service, which must not leak
         # when construction fails
@@ -568,6 +576,15 @@ class DSIPipeline:
         self.bs = self.session.batch_size
         self.pool = ThreadPoolExecutor(max_workers=n_workers)
         self.times = StageTimes()
+        # pluggable time source for per-request/stage phase timestamps
+        # (duck-typed Clock: .now()).  None keeps the historical wall
+        # clock; a VirtualClock makes every recorded phase a *trace*
+        # time — storage stalls charged through the clock-aware token
+        # bucket then show up in fetch telemetry deterministically,
+        # while pure-compute phases cost zero virtual seconds.
+        # Host-side liveness deadlines (queue polls, thread joins) stay
+        # on wall time regardless.
+        self._now = time.monotonic if clock is None else clock.now
         # telemetry feeds the adaptive repartition loop: per-stage EWMAs,
         # transfer bandwidths, per-form serve counts and (stage-parallel)
         # queue gauges, aggregated across every pipeline on the service
@@ -602,12 +619,12 @@ class DSIPipeline:
     # ------------------------------------------------------------------
     def _produce_sample(self, sid: int, epoch_tag: int) -> np.ndarray:
         """Run one sample through the remaining pipeline stages."""
-        t_look = time.monotonic()
+        t_look = self._now()
         form, value, tier = self.session.lookup_tiered(sid)
         self.telemetry.record_serve(form)
         # spill-tier hits calibrate b_disk, DRAM hits b_cache
         channel = "disk" if tier == "disk" else "cache"
-        t0 = time.monotonic()
+        t0 = self._now()
         if form == "augmented":
             # hit cost is the lookup interval (t0 - t_look): StageTimes
             # and telemetry account the same thing (the seed charged
@@ -626,29 +643,29 @@ class DSIPipeline:
             self.times.fetch += t0 - t_look
             self.telemetry.record_stage("fetch_cache", t0 - t_look)
             self.telemetry.record_bytes(channel, len(enc), t0 - t_look)
-            t1 = time.monotonic()
+            t1 = self._now()
             img = self.ds.decode(enc, sid)
-            dt = time.monotonic() - t1
+            dt = self._now() - t1
             self.times.decode += dt
             self.telemetry.record_stage("decode", dt)
             self.session.admit(sid, "decoded", img, img.nbytes)
         else:
             enc = self.storage.fetch(sid)
-            dt = time.monotonic() - t0
+            dt = self._now() - t0
             self.times.fetch += dt
             self.telemetry.record_stage("fetch_storage", dt)
             self.telemetry.record_bytes("storage", len(enc), dt)
             self.session.admit(sid, "encoded", enc, len(enc))
-            t1 = time.monotonic()
+            t1 = self._now()
             img = self.ds.decode(enc, sid)
-            dt = time.monotonic() - t1
+            dt = self._now() - t1
             self.times.decode += dt
             self.telemetry.record_stage("decode", dt)
             self.session.admit(sid, "decoded", img, img.nbytes)
-        t2 = time.monotonic()
+        t2 = self._now()
         out = augment_np(img, self.ds.crop_hw,
                          np.random.default_rng(_aug_seed(epoch_tag, sid)))
-        dt = time.monotonic() - t2
+        dt = self._now() - t2
         self.times.augment += dt
         self.telemetry.record_stage("augment", dt)
         self.session.admit(sid, "augmented", out, out.nbytes)
@@ -672,14 +689,14 @@ class DSIPipeline:
         epoch_tag = self.session.epoch
         imgs = list(self.pool.map(
             lambda s: self._produce_sample(int(s), epoch_tag), ids))
-        t0 = time.monotonic()
+        t0 = self._now()
         batch = {
             "images": np.stack(imgs).astype(np.float32),
             "labels": np.asarray([self.ds.label(int(s)) for s in ids],
                                  np.int32),
             "ids": np.asarray(ids, np.int64),
         }
-        dt = time.monotonic() - t0
+        dt = self._now() - t0
         self.times.collate += dt
         self.telemetry.record_stage("collate", dt, n=len(ids))
         self.times.batches += 1
@@ -721,13 +738,13 @@ class DSIPipeline:
         dec_dev_group: List[Tuple[int, int, object]] = []  # HBM decoded hits
         for slot, sid_ in enumerate(ids):
             sid = int(sid_)
-            t_look = time.monotonic()
+            t_look = self._now()
             form, value, tier = self.session.lookup_tiered(sid)
             tel.record_serve(form)
-            t0 = time.monotonic()
+            t0 = self._now()
             if form is None:
                 enc = self.storage.fetch(sid)
-                dt = time.monotonic() - t0
+                dt = self._now() - t0
                 self.times.fetch += dt
                 tel.record_stage("fetch_storage", dt)
                 tel.record_bytes("storage", len(enc), dt)
@@ -744,10 +761,10 @@ class DSIPipeline:
             if form == "augmented":
                 host = np.asarray(value)
                 tel.record_bytes(channel, host.nbytes, t0 - t_look)
-                t1 = time.monotonic()
+                t1 = self._now()
                 rows[slot] = jax.block_until_ready(jnp.asarray(host))
                 tel.record_bytes("h2d", host.nbytes,
-                                 time.monotonic() - t1)
+                                 self._now() - t1)
             elif form == "decoded":
                 if tier == "hbm":
                     # device-resident decoded hit: augment on device —
@@ -766,12 +783,12 @@ class DSIPipeline:
             sids = [sid for _s, sid, _p in enc_group]
             seeds = np.asarray([_aug_seed(epoch_tag, sid) for sid in sids],
                                np.int64)
-            t1 = time.monotonic()
+            t1 = self._now()
             out = jax.block_until_ready(decode_augment_batch_seeded(
                 [p for _s, _sid, p in enc_group], sids, seeds,
                 ds_seed=self._fused_seed, image_hw=self.ds.image_hw,
                 crop_h=self.ds.crop_hw[0], crop_w=self.ds.crop_hw[1]))
-            dt = time.monotonic() - t1
+            dt = self._now() - t1
             # one fused launch covers both stages; split its time evenly
             # so the calibrated t_da = conc/(decode+augment) lands on
             # the fused rate
@@ -787,11 +804,11 @@ class DSIPipeline:
             imgs = np.stack([img for _s, _sid, img in dec_group])
             seeds = np.asarray([_aug_seed(epoch_tag, sid) for sid in sids],
                                np.int64)
-            t1 = time.monotonic()
+            t1 = self._now()
             out = jax.block_until_ready(
                 augment_batch_seeded(imgs, seeds, *self.ds.crop_hw,
                                      as_device=True))
-            dt = time.monotonic() - t1
+            dt = self._now() - t1
             self.times.augment += dt
             tel.record_stage("augment", dt, n=len(dec_group))
             # decoded pixels shipped up for the device-side augment
@@ -804,11 +821,11 @@ class DSIPipeline:
             imgs_dev = jnp.stack([img for _s, _sid, img in dec_dev_group])
             seeds = np.asarray([_aug_seed(epoch_tag, sid) for sid in sids],
                                np.int64)
-            t1 = time.monotonic()
+            t1 = self._now()
             out = jax.block_until_ready(
                 augment_batch_seeded(imgs_dev, seeds, *self.ds.crop_hw,
                                      as_device=True))
-            dt = time.monotonic() - t1
+            dt = self._now() - t1
             self.times.augment += dt
             tel.record_stage("augment", dt, n=len(dec_dev_group))
             # pixels were already device-resident: no h2d traffic
@@ -826,14 +843,14 @@ class DSIPipeline:
                        for (sid, row), w in zip(fresh, wanted) if w]
             if entries:
                 self.session.admit_batch("augmented", entries)
-        t0 = time.monotonic()
+        t0 = self._now()
         batch = {
             "images": jnp.stack(rows).astype(jnp.float32),
             "labels": np.asarray([self.ds.label(int(s)) for s in ids],
                                  np.int32),
             "ids": np.asarray(ids, np.int64),
         }
-        dt = time.monotonic() - t0
+        dt = self._now() - t0
         self.times.collate += dt
         tel.record_stage("collate", dt, n=len(ids))
         self.times.batches += 1
@@ -933,8 +950,11 @@ class DSIPipeline:
             return batch
         deadline = time.monotonic() + timeout
         while True:
+            # cap the poll at the remaining deadline (sub-poll timeouts
+            # must not overshoot by a whole 0.2 s quantum)
+            wait = min(0.2, deadline - time.monotonic())
             try:
-                return self._q.get(timeout=min(0.2, max(timeout, 0.01)))
+                return self._q.get(timeout=max(wait, 0.0))
             except queue.Empty:
                 if self._prefetch_exc is not None:
                     raise RuntimeError(

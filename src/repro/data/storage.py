@@ -17,6 +17,20 @@ the token-bucket rate (a storage-bandwidth collapse) and
 :meth:`restore_bandwidth` undoes it; transient dataset IO errors are
 retried a few times before propagating, with both degradations counted
 for ``stats()``.
+
+Clock correctness: the token bucket takes an optional pluggable
+``clock`` (:class:`~repro.workload.clock.Clock`).  Without one the
+historical behavior is byte-identical (``time.monotonic`` +
+``time.sleep``) — but that bypasses a :class:`VirtualClock` entirely:
+storage stalls then burn *wall* time on the calling job's turn and cost
+zero *virtual* time, so virtual makespans and injected
+bandwidth-collapse faults never shape the simulated timeline.  With a
+clock, ``_available_at`` lives on the clock's timeline and the stall is
+charged through :meth:`Clock.stall` on the calling thread's bound
+participant ticket — :meth:`degrade`/:meth:`restore_bandwidth` then
+take effect at the exact (virtual) instant they are applied, because
+every subsequent ``consume`` prices its transfer off the clock's ``now``
+and the post-change ``rate``.
 """
 from __future__ import annotations
 
@@ -26,12 +40,16 @@ from typing import Optional
 
 
 class BandwidthBudget:
-    def __init__(self, bytes_per_s: Optional[float]):
+    def __init__(self, bytes_per_s: Optional[float], clock=None):
         self.rate = bytes_per_s
         self.base_rate = bytes_per_s     # pre-degradation rate
+        self.clock = clock               # None -> wall time (historical)
         self.lock = threading.Lock()
-        self._available_at = time.monotonic()
+        self._available_at = self._now()
         self.bytes_served = 0
+
+    def _now(self) -> float:
+        return time.monotonic() if self.clock is None else self.clock.now()
 
     def consume(self, nbytes: int) -> float:
         """Blocks until the transfer 'completes'; returns the stall time."""
@@ -40,20 +58,27 @@ class BandwidthBudget:
                 self.bytes_served += nbytes
             return 0.0
         with self.lock:
-            now = time.monotonic()
+            now = self._now()
             start = max(now, self._available_at)
             self._available_at = start + nbytes / self.rate
             wait = self._available_at - now
             self.bytes_served += nbytes
         if wait > 0:
-            time.sleep(wait)
+            if self.clock is None:
+                time.sleep(wait)
+            else:
+                # charge the stall on the caller's clock participant:
+                # under a VirtualClock this advances virtual time (and
+                # yields the turn) instead of burning wall time
+                self.clock.stall(wait)
         return max(wait, 0.0)
 
 
 class RemoteStorage:
-    def __init__(self, dataset, bandwidth: Optional[float] = None):
+    def __init__(self, dataset, bandwidth: Optional[float] = None,
+                 clock=None):
         self.dataset = dataset
-        self.budget = BandwidthBudget(bandwidth)
+        self.budget = BandwidthBudget(bandwidth, clock=clock)
         self.fetches = 0
         self.degraded = False
         self.degraded_fetches = 0        # fetches served while degraded

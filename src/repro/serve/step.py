@@ -3,11 +3,18 @@
 ``Server`` implements simple continuous batching over a fixed slot count:
 requests occupy slots, prefill fills the slot's cache region, decode steps
 advance all active slots in lockstep (one jitted decode_step per token).
+
+Requests carry arrival/admit/finish timestamps (stamped by the server
+through a pluggable ``now`` time source, so an open-loop driver can pass
+the same clock its arrival schedule runs on) — per-request end-to-end
+latency is ``done_s - arrival_s``, queue wait is ``admitted_s -
+arrival_s``.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
+import time
 from typing import Callable, Dict, List, Optional, Tuple
 
 import jax
@@ -22,15 +29,24 @@ class Request:
     req_id: int
     prompt: np.ndarray           # (prompt_len,) int32
     max_new: int = 16
+    arrival_s: float = 0.0       # caller-stamped (open-loop drivers)
     # runtime
     generated: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
+    admitted_s: float = 0.0      # server-stamped at slot admission
+    done_s: float = 0.0          # server-stamped when max_new reached
+
+    @property
+    def latency_s(self) -> float:
+        """End-to-end arrival→finish latency (0 until done)."""
+        return self.done_s - self.arrival_s if self.done else 0.0
 
 
 class Server:
     """Batched decode over ``n_slots`` sequences with a shared jitted step."""
 
-    def __init__(self, model: Model, params, n_slots: int, s_max: int):
+    def __init__(self, model: Model, params, n_slots: int, s_max: int,
+                 now: Optional[Callable[[], float]] = None):
         self.model = model
         self.params = params
         self.n_slots = n_slots
@@ -39,6 +55,7 @@ class Server:
         self.pos = np.zeros(n_slots, np.int64)
         self.slots: List[Optional[Request]] = [None] * n_slots
         self._decode = jax.jit(model.decode_step)
+        self._now = now or time.monotonic
         self.steps = 0
 
     def add_request(self, req: Request) -> bool:
@@ -46,6 +63,7 @@ class Server:
             if s is None:
                 self.slots[i] = req
                 self.pos[i] = 0
+                req.admitted_s = self._now()
                 # sequential prefill through the decode path keeps one
                 # compiled program; bulk prefill is model.prefill
                 for t in req.prompt:
@@ -88,5 +106,6 @@ class Server:
             self.pos[i] = idx + 1
             if len(req.generated) >= req.max_new:
                 req.done = True    # caller harvests and frees the slot
+                req.done_s = self._now()
         self.steps += 1
         return len(active)

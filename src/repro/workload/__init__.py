@@ -8,9 +8,20 @@ abstraction makes concurrency reproducible: :class:`RealClock` is wall
 time, :class:`VirtualClock` serializes job threads deterministically so
 multi-job interleavings are byte-for-byte repeatable in tests.
 
+Open-loop serving (docs/API.md "Open-loop serving & SLOs"):
+:class:`OpenLoopGenerator` replays a trace-driven arrival schedule
+(:func:`poisson_arrivals` / :func:`bursty_arrivals` /
+:func:`diurnal_arrivals`) against the session API with per-request
+p50/p99/p999 latency accounting and SLO-aware admission control.
+
 See docs/API.md "Multi-job workloads".
 """
 from repro.workload.clock import Clock, RealClock, VirtualClock
+from repro.workload.openloop import (ARRIVAL_PROCESSES, OpenLoopGenerator,
+                                     RequestResult, ServeResult,
+                                     bursty_arrivals, diurnal_arrivals,
+                                     make_arrivals, poisson_arrivals,
+                                     quantile)
 from repro.workload.runner import (JobResult, JobSpec, WorkloadResult,
                                    WorkloadRunner, deterministic_runner)
 
@@ -18,4 +29,7 @@ __all__ = [
     "Clock", "RealClock", "VirtualClock",
     "JobSpec", "JobResult", "WorkloadResult", "WorkloadRunner",
     "deterministic_runner",
+    "OpenLoopGenerator", "RequestResult", "ServeResult",
+    "ARRIVAL_PROCESSES", "poisson_arrivals", "bursty_arrivals",
+    "diurnal_arrivals", "make_arrivals", "quantile",
 ]

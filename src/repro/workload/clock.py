@@ -69,6 +69,51 @@ class Clock(ABC):
         return self.sleep_until(ticket, self.now() + max(seconds, 0.0),
                                 interrupt=interrupt)
 
+    # -- thread-ticket binding -----------------------------------------
+    # Components deep inside the data path (the storage token bucket,
+    # the open-loop serving phases) need to charge blocking stalls on
+    # the clock without having a ticket threaded through every call
+    # signature.  A participant thread binds its ticket once
+    # (``bind``), and anything it later calls can ``stall(seconds)``:
+    # with a bound ticket the stall is a real scheduled sleep (virtual
+    # time advances deterministically); unbound threads fall back to a
+    # wall sleep on non-deterministic clocks and a no-op on
+    # deterministic ones (an unregistered thread cannot take a turn —
+    # the VirtualClock contract pins all timed work to participants).
+
+    def _bound(self) -> Dict[int, int]:
+        d = getattr(self, "_thread_tickets", None)
+        if d is None:
+            d = self._thread_tickets = {}
+        return d
+
+    def bind(self, ticket: int) -> None:
+        """Associate the calling thread with ``ticket`` for ``stall``."""
+        self._bound()[threading.get_ident()] = ticket
+
+    def unbind(self) -> None:
+        self._bound().pop(threading.get_ident(), None)
+
+    def bound_ticket(self) -> Optional[int]:
+        return self._bound().get(threading.get_ident())
+
+    def stall(self, seconds: float,
+              interrupt: Optional[threading.Event] = None) -> float:
+        """Charge a blocking stall of ``seconds`` on the calling
+        thread's bound ticket; returns the clock time after the stall.
+        """
+        if seconds <= 0:
+            return self.now()
+        ticket = self.bound_ticket()
+        if ticket is not None:
+            return self.sleep(ticket, seconds, interrupt=interrupt)
+        if not self.deterministic:
+            if interrupt is not None:
+                interrupt.wait(seconds)
+            else:
+                time.sleep(seconds)
+        return self.now()
+
 
 class RealClock(Clock):
     """Wall-clock time; sleeps are interruptible via the cancel event."""

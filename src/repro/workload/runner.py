@@ -20,9 +20,12 @@ a time, released in ``(wake_time, ticket)`` order) and pins each job to
 the per-sample executor with one worker and synchronous refills — two
 runs of the same trace then produce byte-identical per-job sample-id
 sequences and identical makespans, which is what keeps the concurrency
-tests non-flaky.  Virtual runs should use ``repartition="static"`` and
-an unthrottled ``RemoteStorage`` (the adaptive controller and the token
-bucket consult wall time).
+tests non-flaky.  The runner installs its clock on the shared service
+(adaptive-repartition cooldowns tick in trace time) and binds each job
+thread's participant ticket on the clock, so a clock-aware
+``RemoteStorage(ds, bandwidth, clock=clock)`` charges storage stalls as
+*virtual* time on the job's own turn — bandwidth then shapes virtual
+makespans exactly as it would wall ones.
 
 Shared vs private: construct with ``server=`` for the paper's
 many-jobs-one-cache scenario, or ``server_factory=`` to give every job
@@ -271,6 +274,10 @@ class WorkloadRunner:
 
         import time as _time
         wall0 = _time.monotonic()
+        if self.server is not None:
+            # clock-correct control plane: the adaptive repartition
+            # cooldown ticks in trace time, not host CPU time
+            self.server.service.set_clock(self.clock)
         t0 = self.clock.now()
         results = [JobResult(spec=s) for s in trace]
         # register every participant BEFORE any thread starts: the
@@ -339,6 +346,10 @@ class WorkloadRunner:
         pipe = None
         sess = None
         private_server = None
+        # bind this thread to its participant ticket so components deep
+        # in the data path (the storage token bucket) can charge stalls
+        # on the clock without a ticket threaded through their signatures
+        self.clock.bind(ticket)
         try:
             now = self.clock.sleep_until(ticket, t0 + spec.arrival_s,
                                          interrupt=self._stop)
@@ -350,6 +361,7 @@ class WorkloadRunner:
             if self.server_factory is not None:
                 private_server = self.server_factory(spec)
                 server = private_server
+                server.service.set_clock(self.clock)
             else:
                 server = self.server
             sess = server.open_session(batch_size=spec.batch_size)
@@ -363,7 +375,8 @@ class WorkloadRunner:
                     sess, self.storage,
                     n_workers=1 if deterministic else spec.n_workers,
                     executor=spec.executor, seed=self.seed,
-                    consume_hook=pacer, sync_refills=deterministic)
+                    consume_hook=pacer, sync_refills=deterministic,
+                    clock=self.clock)
 
             pipe = build_pipe()
             n = self.storage.dataset.n_samples
@@ -459,6 +472,7 @@ class WorkloadRunner:
                             exc_info=True)
             finally:
                 # ALWAYS release the clock turn or peers deadlock
+                self.clock.unbind()
                 self.clock.unregister(ticket)
 
 
