@@ -1,0 +1,177 @@
+"""Cross-job coalescing x lock-striping grid (ISSUE-10 tentpole).
+
+K jobs with *identical* Zipfian request streams (same-seed samplers:
+maximal working-set overlap, the worst case for duplicated preparation)
+share one server and one token-bucket RemoteStorage, so the run is
+bandwidth-bound and the win from single-flight coalescing is the
+fetch-dedup factor rather than a host-dependent CPU effect.  Each
+K in {1,2,4,8} runs the 2x2 feature grid:
+
+  baseline          coalesce=False, lock_stripes=1  (the seed's layout)
+  striped           coalesce=False, lock_stripes=8
+  coalesce          coalesce=True,  lock_stripes=1
+  coalesce+striped  coalesce=True,  lock_stripes=8
+
+The baseline cells still *count* concurrent same-key productions (the
+ProductionTable's observe mode), which is how ``--check`` proves the
+claim pair: duplicates > 0 without coalescing, ~0 with it, and >= 1.3x
+aggregate samples/s at K=4 for coalesce+striped over baseline.
+
+Emits ``BENCH_concurrency.json``; registered as ``concurrency`` in
+benchmarks/run.py.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Dict, List, Tuple
+
+from benchmarks.common import write_bench_json
+from repro.api import SenecaServer
+from repro.data.pipeline import DSIPipeline
+from repro.data.storage import RemoteStorage
+from repro.data.synthetic import tiny
+from repro.workload.samplers import ZipfianSampler
+
+CELLS: Tuple[Tuple[str, bool, int], ...] = (
+    ("baseline", False, 1),
+    ("striped", False, 8),
+    ("coalesce", True, 1),
+    ("coalesce+striped", True, 8),
+)
+
+
+def run_cell(k_jobs: int, coalesce: bool, stripes: int, *, n_samples: int,
+             batch: int, batches: int, bandwidth: float,
+             seed: int = 0) -> Dict:
+    ds = tiny(n=n_samples)
+    server = SenecaServer.for_dataset(
+        ds, cache_frac=0.3, seed=seed,
+        coalesce=coalesce, lock_stripes=stripes)
+    storage = RemoteStorage(ds, bandwidth=bandwidth)
+
+    # same-seed Zipfian streams: every job hammers the same hot head in
+    # the same order, so misses collide *simultaneously* (the scenario
+    # the cache alone cannot dedup — the second misser arrives while
+    # the first production is still in flight)
+    def same_seed_zipfian(n, bs, _job_seed, _base=seed):
+        return ZipfianSampler(n, bs, seed=_base)
+
+    pipes = [DSIPipeline(server.open_session(batch_size=batch,
+                                             sampler=same_seed_zipfian),
+                         storage, n_workers=4, seed=seed)
+             for _ in range(k_jobs)]
+    barrier = threading.Barrier(k_jobs + 1)
+    errors: List[BaseException] = []
+
+    def job(pipe: DSIPipeline) -> None:
+        barrier.wait()
+        try:
+            for _ in range(batches):
+                pipe.next_batch()
+        except BaseException as e:        # noqa: BLE001 - surfaced below
+            errors.append(e)
+
+    threads = [threading.Thread(target=job, args=(p,)) for p in pipes]
+    for t in threads:
+        t.start()
+    barrier.wait()
+    t0 = time.monotonic()
+    for t in threads:
+        t.join()
+    wall = time.monotonic() - t0
+    if errors:
+        raise errors[0]
+    stats = server.service.stats()
+    prod = stats.get("production",
+                     {"led": 0, "coalesced": 0, "duplicates": 0,
+                      "coalesce_wait_s": 0.0})
+    for p in pipes:
+        p.stop()
+    server.close()
+    samples = k_jobs * batches * batch
+    return {
+        "k_jobs": k_jobs,
+        "coalesce": coalesce,
+        "lock_stripes": stripes,
+        "wall_s": wall,
+        "agg_samples_per_s": samples / max(wall, 1e-9),
+        "storage_fetches": storage.fetches,
+        "cache_hit_rate": stats["cache_lookup_hit_rate"],
+        "led": int(prod["led"]),
+        "coalesced": int(prod["coalesced"]),
+        "duplicates": int(prod["duplicates"]),
+        "coalesce_wait_s": float(prod["coalesce_wait_s"]),
+    }
+
+
+def _check(results: Dict[int, Dict[str, Dict]]) -> None:
+    """The acceptance gates: >= 1.3x aggregate throughput at 4+ jobs
+    and duplicate productions driven to ~0 by coalescing."""
+    k = max(k for k in results if k >= 4)
+    base = results[k]["baseline"]
+    best = results[k]["coalesce+striped"]
+    speedup = best["agg_samples_per_s"] / base["agg_samples_per_s"]
+    assert speedup >= 1.3, (
+        f"K={k} coalesce+striped speedup {speedup:.2f}x < 1.3x over "
+        f"single-lock no-coalescing baseline")
+    assert best["coalesced"] > 0, "no production was ever coalesced"
+    assert base["duplicates"] > 0, (
+        "baseline saw no concurrent duplicate productions — the grid "
+        "is not exercising overlapping misses")
+    dup_budget = max(2, best["led"] // 50)
+    assert best["duplicates"] <= dup_budget, (
+        f"coalescing left {best['duplicates']} duplicate productions "
+        f"(budget {dup_budget})")
+    print(f"CHECK ok: K={k} speedup={speedup:.2f}x "
+          f"coalesced={best['coalesced']} "
+          f"duplicates {base['duplicates']} -> {best['duplicates']}")
+
+
+def run(full: bool = False, check: bool = False) -> List[Tuple[str, str]]:
+    knobs = dict(n_samples=3_072 if full else 384,
+                 batch=32 if full else 16,
+                 batches=24 if full else 10,
+                 bandwidth=8e6 if full else 1.5e6)
+    ks = (1, 2, 4, 8) if full else (1, 2, 4)
+    results: Dict[int, Dict[str, Dict]] = {}
+    for k in ks:
+        results[k] = {name: run_cell(k, coalesce, stripes, **knobs)
+                      for name, coalesce, stripes in CELLS}
+    payload = {"config": {**{k: str(v) for k, v in knobs.items()},
+                          "k_jobs": list(ks)},
+               "grid": {str(k): cells for k, cells in results.items()}}
+    path = write_bench_json("concurrency", payload)
+
+    rows = []
+    for k in ks:
+        for name, _c, _s in CELLS:
+            r = results[k][name]
+            rows.append((
+                f"fig_concurrency/K{k}/{name}",
+                f"sps={r['agg_samples_per_s']:.0f} "
+                f"fetches={r['storage_fetches']} "
+                f"coalesced={r['coalesced']} dup={r['duplicates']}"))
+    k = max(k for k in ks if k >= 4)
+    speedup = (results[k]["coalesce+striped"]["agg_samples_per_s"]
+               / results[k]["baseline"]["agg_samples_per_s"])
+    rows.append((
+        "fig_concurrency/summary",
+        f"K={k} coalesce+striped speedup={speedup:.2f}x "
+        f"dup {results[k]['baseline']['duplicates']}->"
+        f"{results[k]['coalesce+striped']['duplicates']} json={path}"))
+    if check:
+        _check(results)
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--check", action="store_true",
+                    help="assert the ISSUE-10 acceptance gates")
+    args = ap.parse_args()
+    for name, derived in run(full=args.full, check=args.check):
+        print(f"{name},{derived}")

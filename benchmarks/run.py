@@ -20,7 +20,7 @@ def main() -> None:
 
     from benchmarks import (fig3_cache_forms, fig4_pagecache,
                             fig8_validation, fig10_makespan, fig13_hitrate,
-                            fig14_concurrency, fig15_ect,
+                            fig14_concurrency, fig15_ect, fig_concurrency,
                             fig_device_pipeline, fig_dynamic_jobs,
                             fig_fault_recovery, fig_live_makespan,
                             fig_open_loop, fig_pipeline_throughput,
@@ -38,6 +38,7 @@ def main() -> None:
         ("tiered", fig_tiered_cache),
         ("sharded", fig_sharded),
         ("faults", fig_fault_recovery),
+        ("concurrency", fig_concurrency),
         ("openloop", fig_open_loop),
         ("roofline", roofline_report),
     ]

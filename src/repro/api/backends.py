@@ -62,6 +62,7 @@ class OdsBackend(Protocol):
     def mark_cached(self, ids: np.ndarray, form: int) -> None: ...
     def mark_evicted(self, ids: np.ndarray) -> None: ...
     def set_residency(self, levels: Optional[np.ndarray]) -> None: ...
+    def set_inflight(self, mask: Optional[np.ndarray]) -> None: ...
     def admission_value(self, sample_id: int) -> int: ...
     def storage_pool(self) -> np.ndarray: ...
 
@@ -126,6 +127,9 @@ class NumpyOdsBackend:
     def set_residency(self, levels):
         self.state.set_residency(levels)
 
+    def set_inflight(self, mask):
+        self.state.set_inflight(mask)
+
     def admission_value(self, sample_id):
         return self.state.admission_value(sample_id)
 
@@ -184,6 +188,7 @@ class JaxOdsBackend:
         self.epoch: Dict[int, int] = {}
         self._key = jax.random.key(seed)
         self._residency: Optional[np.ndarray] = None
+        self._inflight: Optional[np.ndarray] = None
         self._hits = 0
         self._misses = 0
         self._substitutions = 0
@@ -222,12 +227,29 @@ class JaxOdsBackend:
             seen=jnp.asarray(pre_seen),
             served=jnp.asarray(self.served[job_id], jnp.int32))
         self._key, sub = self._jax.random.split(self._key)
+        # the coalescing table's in-flight mask routes to separate
+        # jitted variants; with the mask absent (coalescing off or
+        # table idle) the historical kernels — and their exact draw
+        # sequences — run untouched
+        infl = self._inflight
+        if infl is not None and not infl.any():
+            infl = None
         if self._residency is not None:
             # two-level cache: the residency-ranked kernel (DRAM-unseen
             # candidates outrank disk-unseen ones outrank storage)
-            state, batch, evict_mask = self._ods_jax.substitute_tiered_jit(
-                state, jnp.asarray(requested), sub, thr,
-                jnp.asarray(self._residency))
+            if infl is not None:
+                state, batch, evict_mask = \
+                    self._ods_jax.substitute_tiered_inflight_jit(
+                        state, jnp.asarray(requested), sub, thr,
+                        jnp.asarray(self._residency), jnp.asarray(infl))
+            else:
+                state, batch, evict_mask = \
+                    self._ods_jax.substitute_tiered_jit(
+                        state, jnp.asarray(requested), sub, thr,
+                        jnp.asarray(self._residency))
+        elif infl is not None:
+            state, batch, evict_mask = self._ods_jax.substitute_inflight_jit(
+                state, jnp.asarray(requested), sub, thr, jnp.asarray(infl))
         else:
             state, batch, evict_mask = self._ods_jax.substitute_jit(
                 state, jnp.asarray(requested), sub, thr)
@@ -277,6 +299,9 @@ class JaxOdsBackend:
 
     def set_residency(self, levels):
         self._residency = levels
+
+    def set_inflight(self, mask):
+        self._inflight = mask
 
     def admission_value(self, sample_id):
         return self.n_jobs - int(sum(bits[sample_id]

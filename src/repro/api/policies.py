@@ -32,7 +32,7 @@ from repro.cache.store import CachePartition
 __all__ = [
     "SamplerPolicy", "AdmissionPolicy", "EvictionPolicy",
     "OdsSampler", "NaiveSampler",
-    "UnseenOnlyAdmission", "CapacityAdmission",
+    "UnseenOnlyAdmission", "CapacityAdmission", "FrequencyAdmission",
     "RefcountEviction", "LruEviction", "CostAwareEviction",
     "register_policy", "resolve_policy", "policy_names",
 ]
@@ -142,6 +142,59 @@ class CapacityAdmission(_CapacityGate):
         return True
 
 
+class FrequencyAdmission(_CapacityGate):
+    """Count-min-sketch doorkeeper (TinyLFU-style): a produced form only
+    earns a cache slot once its sample has been produced ``threshold``
+    times within the current aging window.  One scan-heavy job streaming
+    the dataset once cannot flush the shared cache — its one-touch keys
+    never pass the doorkeeper — while any key two jobs touch (or one job
+    revisits) is admitted immediately.
+
+    The sketch is ``depth`` rows of ``width`` counters (uint32, a few
+    KiB total, zero per-key metadata); over-estimates are possible
+    (hash collisions), under-estimates are not, so the filter can only
+    err toward admitting — never toward starving a genuinely hot key.
+    Counters age by periodic halving every ``window`` observations,
+    so long-dead hotness decays instead of accumulating forever.
+    ``wants`` runs under the service metadata lock (the standard
+    admission contract), which also serializes sketch updates.
+    """
+
+    name = "frequency"
+
+    def __init__(self, threshold: int = 2, width: int = 4096,
+                 depth: int = 4, window: int = 65536):
+        if threshold < 1:
+            raise ValueError(f"threshold must be >= 1, got {threshold}")
+        self.threshold = int(threshold)
+        self.width = int(width)
+        self.depth = int(depth)
+        self.window = int(window)
+        self._table = np.zeros((self.depth, self.width), np.uint32)
+        self._seen = 0
+        # fixed odd multipliers (splitmix-style) — one hash per row
+        self._salts = np.array(
+            [0x9E3779B1, 0x85EBCA77, 0xC2B2AE3D, 0x27D4EB2F,
+             0x165667B1, 0xD3A2646D, 0xFD7046C5, 0xB55A4F09][:self.depth],
+            np.uint64)
+
+    def _rows(self, sample_id: int) -> np.ndarray:
+        h = (np.uint64(sample_id * 2 + 1) * self._salts) >> np.uint64(32)
+        return (h % np.uint64(self.width)).astype(np.int64)
+
+    def wants(self, backend, sample_id, form):
+        cols = self._rows(int(sample_id))
+        rows = np.arange(self.depth)
+        self._table[rows, cols] += 1
+        estimate = int(self._table[rows, cols].min())
+        self._seen += 1
+        if self._seen >= self.window:
+            # age: halve every counter so stale hotness decays
+            self._table >>= 1
+            self._seen = 0
+        return estimate >= self.threshold
+
+
 # ----------------------------------------------------------------------
 # eviction implementations
 class RefcountEviction:
@@ -223,7 +276,8 @@ class CostAwareEviction:
 _REGISTRY: Dict[str, Dict[str, type]] = {
     "sampler": {"ods": OdsSampler, "naive": NaiveSampler},
     "admission": {"unseen-only": UnseenOnlyAdmission,
-                  "capacity": CapacityAdmission},
+                  "capacity": CapacityAdmission,
+                  "frequency": FrequencyAdmission},
     "eviction": {"refcount": RefcountEviction, "lru": LruEviction,
                  "cost": CostAwareEviction},
 }

@@ -42,6 +42,7 @@ from repro.api.backends import (NO_REFCOUNT_EVICT, resolve_augment_backend,
                                 resolve_backend)
 from repro.api.policies import resolve_policy
 from repro.api.telemetry import TelemetryAggregator
+from repro.cache.coalesce import ProductionTable
 from repro.cache.store import FORMS, TieredCache
 from repro.core import mdp
 from repro.core.ods import (AUGMENTED, DECODED, ENCODED, IN_STORAGE,
@@ -170,6 +171,16 @@ class SenecaConfig:
     # queue unboundedly like the closed-loop path.  The
     # OpenLoopGenerator defaults to this when not given its own.
     slo: Optional[SLO] = None
+    # concurrency layer (docs/API.md "Concurrency: coalescing & lock
+    # striping").  lock_stripes>1 hash-stripes the TieredCache key
+    # space over that many independent locks (single-process cache
+    # only; shards already partition the key space).  coalesce=True
+    # single-flights concurrent productions of the same (sample, form)
+    # across every session of this service; coalesce_timeout_s bounds
+    # a joiner's wall-clock wait before it falls back to producing.
+    lock_stripes: int = 1
+    coalesce: bool = True
+    coalesce_timeout_s: float = 5.0
 
 
 class RepartitionController:
@@ -493,7 +504,8 @@ class SenecaService:
                 spill_dir=cfg.spill_dir if self.has_spill else None,
                 spill_split=spill_t,
                 hbm_bytes=cfg.device_cache_bytes if self.has_hbm else 0,
-                hbm_split=hbm_t)
+                hbm_split=hbm_t,
+                n_stripes=cfg.lock_stripes)
         try:
             self.backend = resolve_backend(backend or cfg.backend,
                                            cfg.dataset.n_total,
@@ -507,6 +519,11 @@ class SenecaService:
             self._refill_pending: list = []
             self._batch_counter = itertools.count()
             self.telemetry = TelemetryAggregator()
+            # shared across every session/pipeline of this service —
+            # that sharing IS the cross-job coalescing (the first
+            # misser of a (sample, form) produces, the others join)
+            self.production = ProductionTable(
+                enabled=cfg.coalesce, timeout_s=cfg.coalesce_timeout_s)
             # pluggable time source (duck-typed Clock: .now()) for every
             # component that paces itself against trace time — the
             # adaptive repartition cooldown reads it, the WorkloadRunner
@@ -525,12 +542,25 @@ class SenecaService:
         return getattr(self.backend, "state", self.backend)
 
     # ------------------------------------------------------------------
-    def register_job(self, job_id: int, batch_size: int) -> None:
+    def register_job(self, job_id: int, batch_size: int,
+                     sampler=None) -> None:
+        """Register a job.  ``sampler`` selects the request stream: None
+        keeps the historical uniform :class:`EpochSampler`; a name from
+        :data:`repro.workload.samplers.REQUEST_SAMPLERS` ("zipfian",
+        "phase-shift") or a ``(n, bs, seed) -> sampler`` callable swaps
+        in skewed/shifting traffic for this job only."""
+        seed = self.cfg.seed + 97 * (job_id + 1)
+        if sampler is None:
+            smp = EpochSampler(self.cfg.dataset.n_total, batch_size, seed)
+        else:
+            # lazy import: repro.api must stay importable without
+            # repro.workload (which imports the pipeline layer)
+            from repro.workload.samplers import make_request_sampler
+            smp = make_request_sampler(sampler, self.cfg.dataset.n_total,
+                                       batch_size, seed)
         with self._lock:
             self.backend.register_job(job_id)
-            self._samplers[job_id] = EpochSampler(
-                self.cfg.dataset.n_total, batch_size,
-                self.cfg.seed + 97 * (job_id + 1))
+            self._samplers[job_id] = smp
         # outside the metadata lock: the controller's apply path takes it
         self.controller.on_sessions_changed()
 
@@ -570,6 +600,17 @@ class SenecaService:
                         self.cache.residency_array(
                             self.cfg.dataset.n_total))
                     self._residency_version = version
+            # deprioritize in-flight productions: when the coalescing
+            # table has live flights, tell the sampler so substitution
+            # and uncached fills prefer ids nobody is producing yet.
+            # inflight_mask() is None whenever the table is idle — the
+            # common case, and always with coalescing off — which keeps
+            # the sampler on its byte-identical mask-free path
+            set_inflight = getattr(self.backend, "set_inflight", None)
+            if set_inflight is not None:
+                set_inflight(self.production.inflight_mask(
+                    self.cfg.dataset.n_total)
+                    if self.production.enabled else None)
             requested = self._samplers[job_id].next_request()
             thr = self.eviction.threshold(self.backend)
             batch, evicted = self.sampler.sample(
@@ -925,6 +966,16 @@ class SenecaService:
         shard_stats = getattr(self.cache, "shard_stats", None)
         if shard_stats is not None:
             out["shards"] = shard_stats()
+            prod_stats = getattr(self.cache, "production_stats", None)
+            if prod_stats is not None:
+                sp = prod_stats()
+                if sp["led"] or sp["duplicates"]:
+                    out["shard_production"] = sp
+        # additive: the single-flight table's counters appear only once
+        # it has seen traffic, so idle payloads keep their shape
+        prod = self.production.stats()
+        if prod["led"] or prod["duplicates"]:
+            out["production"] = prod
         errors = self.telemetry.as_dict().get("errors", {})
         fault_counts = {k: v for k, v in errors.items()
                         if k.startswith(("fault.", "recovery."))}
@@ -1107,10 +1158,14 @@ class SenecaServer:
                                 dataset=profile, **cfg_kwargs))
 
     # ------------------------------------------------------------------
-    def open_session(self, batch_size: int) -> Session:
+    def open_session(self, batch_size: int, sampler=None) -> Session:
+        """Open a job session.  ``sampler`` (None | "zipfian" |
+        "phase-shift" | callable) picks this job's request stream — see
+        :meth:`SenecaService.register_job`."""
         with self._lock:
             job_id = next(self._ids)
-            self.service.register_job(job_id, batch_size)
+            self.service.register_job(job_id, batch_size,
+                                      sampler=sampler)
             sess = Session(self.service, job_id, batch_size,
                            on_close=self._forget)
             self._sessions[job_id] = sess

@@ -164,6 +164,10 @@ class TelemetryAggregator:
             p: [] for p in REQUEST_PHASES}
         self._req_cap = 200_000
         self._req_dropped = 0
+        # single-flight coalescing: productions avoided by joining
+        # another job's in-flight production, and the time spent waiting
+        self._coalesced = 0
+        self._coalesce_wait_s = 0.0
 
     # -- reporting (pipeline side) -------------------------------------
     def add_concurrency(self, n: int) -> None:
@@ -234,6 +238,14 @@ class TelemetryAggregator:
         with self._lock:
             for stage in stages or tuple(self._stage_workers):
                 self._stage_workers.pop(stage, None)
+
+    def record_coalesced(self, wait_s: float) -> None:
+        """Count one production avoided by joining an in-flight one
+        (single-flight coalescing), with the wall/virtual seconds the
+        joiner spent waiting for the leader's hand-off."""
+        with self._lock:
+            self._coalesced += 1
+            self._coalesce_wait_s += max(float(wait_s), 0.0)
 
     def record_error(self, kind: str) -> int:
         """Count one background failure; returns the new total for
@@ -353,6 +365,8 @@ class TelemetryAggregator:
         snap = self.snapshot()
         with self._lock:
             any_requests = any(self._req_counts.values())
+            coalesced = self._coalesced
+            coalesce_wait_s = self._coalesce_wait_s
         out = {
             "stage_latency_s": {k: v for k, v in snap.stage_latency.items()
                                 if v is not None},
@@ -371,4 +385,10 @@ class TelemetryAggregator:
         }
         if any_requests:
             out["requests"] = self.request_summary()
+        # additive like "requests": present only once coalescing has
+        # actually deduped a production, so existing payloads and their
+        # consumers are unchanged
+        if coalesced:
+            out["coalesced"] = coalesced
+            out["coalesce_wait_s"] = coalesce_wait_s
         return out

@@ -56,6 +56,20 @@ class PartitionStats:
     evictions: int = 0
     bytes_used: int = 0
 
+    @classmethod
+    def merged(cls, parts: "List[PartitionStats]") -> "PartitionStats":
+        """Aggregate stripe-local ledgers into one view (the striped
+        TieredCache keeps byte accounting per stripe so the hot path
+        never contends on a shared counter; readers sum on demand)."""
+        out = cls()
+        for p in parts:
+            out.hits += p.hits
+            out.misses += p.misses
+            out.inserts += p.inserts
+            out.evictions += p.evictions
+            out.bytes_used += p.bytes_used
+        return out
+
 
 @runtime_checkable
 class Tier(Protocol):

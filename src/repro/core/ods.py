@@ -43,6 +43,13 @@ class ODSState:
     # the service when the cache has a spill tier; None = single-tier
     # cache, substitution stays byte-identical to the paper's
     residency: Optional[np.ndarray] = None
+    # bool[N] mask of samples with an in-flight production (the
+    # single-flight coalescing table), pushed by the service per batch;
+    # None = table idle — every draw stays byte-identical to the
+    # mask-free path.  Uncached fills prefer non-in-flight ids so
+    # concurrent jobs fan out over distinct keys instead of piling onto
+    # productions already being coalesced
+    inflight: Optional[np.ndarray] = None
     # stats
     hits: int = 0
     misses: int = 0
@@ -108,6 +115,14 @@ class ODSState:
         still beats a storage fetch, but not a DRAM hit."""
         self.residency = levels
 
+    def set_inflight(self, mask: Optional[np.ndarray]) -> None:
+        """Install the coalescing table's in-flight mask (bool[N], or
+        None when the table is idle).  When set, substitution and
+        uncached fills deprioritize in-flight ids — another job is
+        already producing them, so a different pick costs the same and
+        widens aggregate coverage."""
+        self.inflight = mask
+
     # ------------------------------------------------------------------
     def sample_batch(self, job_id: int, requested: np.ndarray,
                      evict_threshold: Optional[int] = None
@@ -160,6 +175,15 @@ class ODSState:
                 if len(need):
                     pool = np.flatnonzero(~seen & (self.status == IN_STORAGE))
                     pool = np.setdiff1d(pool, batch, assume_unique=False)
+                    # deprioritize ids another job is already producing
+                    # (coalescing in flight) — but only when enough
+                    # clear ids remain to fill every slot, so coverage
+                    # guarantees never bend for a heuristic
+                    if (self.inflight is not None and len(pool)
+                            and self.inflight[pool].any()):
+                        clear = pool[~self.inflight[pool]]
+                        if len(clear) >= len(need):
+                            pool = clear
                     fill = self.rng.permutation(pool)[:len(need)]
                     batch[need] = fill
 
@@ -182,10 +206,33 @@ class ODSState:
         return batch, evict
 
     def _pick_candidates(self, cand: np.ndarray, take: int) -> np.ndarray:
-        """Draw ``take`` substitution picks from ``cand``.  Single-tier
-        (residency None): one uniform draw, the paper's rule and the
-        historical byte-identical path.  Tiered: faster-tier candidates
-        are exhausted first (uniformly among themselves) — device (HBM)
+        """Draw ``take`` substitution picks from ``cand``, in-flight
+        ids last: a cached candidate whose (re)production is being
+        coalesced right now is drawn only once the clear candidates run
+        out.  With no in-flight overlap (the common case, and always
+        when coalescing is off) this is exactly one :meth:`_draw` on
+        the full candidate set — byte-identical to the mask-free
+        sampler."""
+        infl = self.inflight
+        if infl is not None and len(cand) and infl[cand].any():
+            busy_mask = infl[cand]
+            groups = (cand[~busy_mask], cand[busy_mask])
+            picks = []
+            left = take
+            for group in groups:
+                n = min(left, len(group))
+                if n:
+                    picks.append(self._draw(group, n))
+                    left -= n
+            return (np.concatenate(picks) if picks
+                    else np.empty(0, np.int64))
+        return self._draw(cand, take)
+
+    def _draw(self, cand: np.ndarray, take: int) -> np.ndarray:
+        """Draw ``take`` picks from ``cand``.  Single-tier (residency
+        None): one uniform draw, the paper's rule and the historical
+        byte-identical path.  Tiered: faster-tier candidates are
+        exhausted first (uniformly among themselves) — device (HBM)
         residents, then DRAM, then disk — opportunistic sampling
         prefers the fastest tier when several could fill a slot.  With
         no level-3 entries the HBM bucket is empty and the draw

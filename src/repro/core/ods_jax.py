@@ -35,9 +35,10 @@ def create(n: int) -> ODSJaxState:
 
 
 def _substitute_core(state: ODSJaxState, requested: jax.Array,
-                     rng: jax.Array, n_jobs: int, residency
+                     rng: jax.Array, n_jobs: int, residency,
+                     inflight=None
                      ) -> Tuple[ODSJaxState, jax.Array, jax.Array]:
-    """One ODS batch step; the single body behind both public variants
+    """One ODS batch step; the single body behind all public variants
     (the rollover / direct-hit / fill / refcount bookkeeping must never
     diverge between them — only candidate *scoring* differs).
 
@@ -47,6 +48,13 @@ def _substitute_core(state: ODSJaxState, requested: jax.Array,
     uncached-unseen 1; with no level-3 entries the ranks reduce exactly
     to the two-tier rule) — a trace-time constant, so each variant
     compiles once.
+
+    ``inflight`` is ``None`` (no coalescing table, the historical
+    scoring — rank values byte-identical to before the knob existed) or
+    bool[N] in-flight productions: scores are doubled and in-flight
+    candidates pay a −1 penalty, so within every class the clear ids
+    outrank the in-flight ones while the class order itself (tier
+    beats tier, cached beats uncached) is preserved exactly.
     """
     N = state.status.shape[0]
     B = requested.shape[0]
@@ -74,6 +82,11 @@ def _substitute_core(state: ODSJaxState, requested: jax.Array,
         score = jnp.where(free & cached & ~dram, jnp.maximum(score, 2),
                           score)
     score = jnp.where(free & ~cached, jnp.maximum(score, 1), score)
+    if inflight is not None:
+        # double the class scores, then a −1 in-flight penalty: clear
+        # ids win within each class, classes never interleave
+        score = jnp.where(inflight & (score > 0), 2 * score - 1,
+                          2 * score)
     noise = jax.random.uniform(rng, (N,))
     rank = score.astype(jnp.float32) + noise          # in (0, max_score+1)
     order = jnp.argsort(-rank)                         # best candidates first
@@ -118,3 +131,36 @@ def substitute_tiered(state: ODSJaxState, requested: jax.Array,
 
 substitute_tiered_jit = jax.jit(substitute_tiered,
                                 static_argnames=("n_jobs",))
+
+
+def substitute_inflight(state: ODSJaxState, requested: jax.Array,
+                        rng: jax.Array, n_jobs: int, inflight: jax.Array
+                        ) -> Tuple[ODSJaxState, jax.Array, jax.Array]:
+    """Coalescing-aware ODS batch step: like :func:`substitute` but
+    candidates whose production is in flight (bool[N] mask from the
+    single-flight table) rank below clear candidates of the same class
+    — another job is already making them, so a different pick widens
+    aggregate coverage at no extra cost.  A separate jitted variant:
+    the mask-free twins keep their historical compiled programs (and
+    draw sequences) untouched."""
+    return _substitute_core(state, requested, rng, n_jobs, None, inflight)
+
+
+substitute_inflight_jit = jax.jit(substitute_inflight,
+                                  static_argnames=("n_jobs",))
+
+
+def substitute_tiered_inflight(state: ODSJaxState, requested: jax.Array,
+                               rng: jax.Array, n_jobs: int,
+                               residency: jax.Array, inflight: jax.Array
+                               ) -> Tuple[ODSJaxState, jax.Array,
+                                          jax.Array]:
+    """Residency- and coalescing-aware ODS batch step: tier order
+    first (:func:`substitute_tiered`), clear-before-in-flight within
+    each tier."""
+    return _substitute_core(state, requested, rng, n_jobs, residency,
+                            inflight)
+
+
+substitute_tiered_inflight_jit = jax.jit(substitute_tiered_inflight,
+                                         static_argnames=("n_jobs",))

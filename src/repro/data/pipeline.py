@@ -305,12 +305,7 @@ class _StageParallelExecutor:
                 tel.record_serve(form)
                 t0 = pipe._now()
                 if form is None:
-                    enc = pipe.storage.fetch(sid)
-                    dt = pipe._now() - t0
-                    pipe.times.fetch += dt
-                    tel.record_stage("fetch_storage", dt)
-                    tel.record_bytes("storage", len(enc), dt)
-                    ok = self._put(self.decode_q, (asm, slot, enc, True))
+                    ok = self._fetch_miss(asm, slot, sid)
                 else:
                     pipe.times.fetch += t0 - t_look
                     tel.record_stage("fetch_cache", t0 - t_look)
@@ -321,19 +316,62 @@ class _StageParallelExecutor:
                                      nbytes, t0 - t_look)
                     if form == "augmented":
                         ok = self._put(self.augment_q,
-                                       (asm, slot, value, None, False, True))
+                                       (asm, slot, value, None, False, True,
+                                        None))
                     elif form == "decoded":
                         ok = self._put(self.augment_q,
                                        (asm, slot, value, None, False,
-                                        False))
+                                        False, None))
                     else:                        # encoded cache hit
                         ok = self._put(self.decode_q,
-                                       (asm, slot, value, False))
+                                       (asm, slot, value, False, None))
                 if not ok:
                     return
             except Exception as e:      # noqa: BLE001
                 self._fail(e)
                 return
+
+    def _fetch_miss(self, asm: "_Assembly", slot: int, sid: int) -> bool:
+        """Storage-miss path of the fetch stage, single-flight aware:
+        the leader fetches and carries its flight through decode ->
+        augment (finished with the augmented row in `_augment_group`);
+        joiners receive the finished value and skip straight to the
+        pre-augmented queue."""
+        pipe = self.pipe
+        tel = pipe.telemetry
+        prod = pipe._production
+        flight = None
+        while prod is not None:
+            leader, flight = prod.begin(sid, "augmented")
+            if leader:
+                break            # flight is None in observe mode
+            t_j = pipe._now()
+            ok, joined = prod.join(flight, pipe._clock)
+            if ok:
+                tel.record_coalesced(max(pipe._now() - t_j, 0.0))
+                return self._put(self.augment_q,
+                                 (asm, slot, joined, None, False, True,
+                                  None))
+            if not flight.done:
+                # wait declined or timed out: produce ourselves
+                flight = None
+                break
+            # leader aborted: retry begin(); the first retrier leads
+        t0 = pipe._now()
+        try:
+            enc = pipe.storage.fetch(sid)
+        except BaseException:
+            if prod is not None:
+                prod.abort(flight)
+            raise
+        dt = pipe._now() - t0
+        pipe.times.fetch += dt
+        tel.record_stage("fetch_storage", dt)
+        tel.record_bytes("storage", len(enc), dt)
+        ok = self._put(self.decode_q, (asm, slot, enc, True, flight))
+        if not ok and prod is not None:
+            prod.abort(flight)   # shutting down: don't strand joiners
+        return ok
 
     def _decode_loop(self) -> None:
         pipe = self.pipe
@@ -343,7 +381,7 @@ class _StageParallelExecutor:
             item = self._get(self.decode_q)
             if item is None:
                 return
-            asm, slot, enc, from_storage = item
+            asm, slot, enc, from_storage, flight = item
             try:
                 t1 = pipe._now()
                 img = pipe.ds.decode(enc, asm.ids[slot])
@@ -358,9 +396,13 @@ class _StageParallelExecutor:
                 if not self._put(self.augment_q,
                                  (asm, slot, img,
                                   enc if from_storage else None, True,
-                                  False)):
+                                  False, flight)):
+                    if pipe._production is not None:
+                        pipe._production.abort(flight)
                     return
             except Exception as e:      # noqa: BLE001
+                if pipe._production is not None:
+                    pipe._production.abort(flight)
                 self._fail(e)
                 return
 
@@ -368,19 +410,19 @@ class _StageParallelExecutor:
         pipe = self.pipe
         sess = pipe.session
         # per-assembly buffers of samples awaiting vectorized augmentation:
-        # seq -> [(slot, img, enc_to_admit, admit_decoded)]
+        # seq -> [(slot, img, enc_to_admit, admit_decoded, flight)]
         buffers: Dict[int, List] = {}
         while not self._stop.is_set():
             item = self._get(self.augment_q)
             if item is None:
                 return
-            asm, slot, payload, enc, admit_dec, pre = item
+            asm, slot, payload, enc, admit_dec, pre, flight = item
             try:
                 if pre:
                     asm.out[slot] = payload
                 else:
                     buffers.setdefault(asm.seq, []).append(
-                        (slot, payload, enc, admit_dec))
+                        (slot, payload, enc, admit_dec, flight))
                 asm.arrived += 1
                 if asm.arrived < len(asm.ids):
                     continue
@@ -398,16 +440,31 @@ class _StageParallelExecutor:
         """Vectorized augment + batch-granular admission for the samples
         of one assembly that were not served pre-augmented."""
         pipe = self.pipe
+        try:
+            self._augment_group_inner(sess, asm, group)
+        except BaseException:
+            prod = pipe._production
+            if prod is not None:
+                # no flight was finished yet (the hand-off loop is the
+                # inner body's last step): wake every joiner to retry
+                for _slot, _img, _enc, _ad, fl in group:
+                    prod.abort(fl)
+            raise
+
+    def _augment_group_inner(self, sess: Session, asm: _Assembly,
+                             group: List) -> None:
+        pipe = self.pipe
         enc_entries = [(asm.ids[slot], enc, len(enc))
-                       for slot, _img, enc, _ad in group if enc is not None]
+                       for slot, _img, enc, _ad, _fl in group
+                       if enc is not None]
         if enc_entries:
             sess.admit_batch("encoded", enc_entries)
         dec_entries = [(asm.ids[slot], img, img.nbytes)
-                       for slot, img, _enc, ad in group if ad]
+                       for slot, img, _enc, ad, _fl in group if ad]
         if dec_entries:
             sess.admit_batch("decoded", dec_entries)
-        slots = [slot for slot, _img, _enc, _ad in group]
-        imgs = np.stack([img for _slot, img, _enc, _ad in group])
+        slots = [slot for slot, _img, _enc, _ad, _fl in group]
+        imgs = np.stack([img for _slot, img, _enc, _ad, _fl in group])
         seeds = np.asarray([_aug_seed(asm.epoch, asm.ids[s]) for s in slots],
                            np.int64)
         t2 = pipe._now()
@@ -431,6 +488,13 @@ class _StageParallelExecutor:
                 sess.admit_batch("augmented", entries)
         for i, s in enumerate(slots):
             asm.out[s] = outs[i]
+        prod = pipe._production
+        if prod is not None:
+            for i, (_slot, _img, _enc, _ad, fl) in enumerate(group):
+                if fl is not None:
+                    # np.array copy: the handed-off row must not pin
+                    # the whole batch array in every joiner's cache
+                    prod.finish(fl, np.array(outs[i]))
 
     def _collate_loop(self) -> None:
         pipe = self.pipe
@@ -585,6 +649,10 @@ class DSIPipeline:
         # Host-side liveness deadlines (queue polls, thread joins) stay
         # on wall time regardless.
         self._now = time.monotonic if clock is None else clock.now
+        self._clock = clock
+        # cross-job single-flight table (service-level; None for bare
+        # service doubles in tests) — consulted before producing a miss
+        self._production = getattr(self.svc, "production", None)
         # telemetry feeds the adaptive repartition loop: per-stage EWMAs,
         # transfer bandwidths, per-form serve counts and (stage-parallel)
         # queue gauges, aggregated across every pipeline on the service
@@ -633,23 +701,58 @@ class DSIPipeline:
             self.telemetry.record_stage("fetch_cache", t0 - t_look)
             self.telemetry.record_bytes(channel, value.nbytes, t0 - t_look)
             return value
+        if form is not None:
+            # decoded/encoded hit: the lookup interval is charged here,
+            # the remaining production stages in _produce_miss
+            nbytes = value.nbytes if form == "decoded" else len(value)
+            self.times.fetch += t0 - t_look
+            self.telemetry.record_stage("fetch_cache", t0 - t_look)
+            self.telemetry.record_bytes(channel, nbytes, t0 - t_look)
+        prod = self._production
+        if prod is None:
+            return self._produce_miss(sid, epoch_tag, form, value)
+        # single-flight: first misser of (sid, "augmented") leads and
+        # produces; concurrent missers join and receive the result
+        # zero-copy, or fall back to producing when waiting is unsafe
+        while True:
+            leader, flight = prod.begin(sid, "augmented")
+            if leader:
+                if flight is None:   # observe mode: duplicate, but live
+                    return self._produce_miss(sid, epoch_tag, form, value)
+                try:
+                    out = self._produce_miss(sid, epoch_tag, form, value)
+                except BaseException as e:
+                    prod.abort(flight, e)
+                    raise
+                prod.finish(flight, out)
+                return out
+            t_j = self._now()
+            ok, joined = prod.join(flight, self._clock)
+            if ok:
+                self.telemetry.record_coalesced(max(self._now() - t_j, 0.0))
+                return joined
+            if not flight.done:
+                # wait declined (deterministic clock, no bound ticket)
+                # or timed out on a wedged leader: produce ourselves —
+                # a duplicate production, never a stall
+                return self._produce_miss(sid, epoch_tag, form, value)
+            # leader aborted: retry begin(); the first retrier leads
+
+    def _produce_miss(self, sid: int, epoch_tag: int,
+                      form: Optional[str], value) -> np.ndarray:
+        """Remaining stages for a sample not cached in augmented form:
+        fetch/decode as ``form`` requires, then augment + admit."""
         if form == "decoded":
             img = value
-            self.times.fetch += t0 - t_look
-            self.telemetry.record_stage("fetch_cache", t0 - t_look)
-            self.telemetry.record_bytes(channel, img.nbytes, t0 - t_look)
         elif form == "encoded":
-            enc = value
-            self.times.fetch += t0 - t_look
-            self.telemetry.record_stage("fetch_cache", t0 - t_look)
-            self.telemetry.record_bytes(channel, len(enc), t0 - t_look)
             t1 = self._now()
-            img = self.ds.decode(enc, sid)
+            img = self.ds.decode(value, sid)
             dt = self._now() - t1
             self.times.decode += dt
             self.telemetry.record_stage("decode", dt)
             self.session.admit(sid, "decoded", img, img.nbytes)
         else:
+            t0 = self._now()
             enc = self.storage.fetch(sid)
             dt = self._now() - t0
             self.times.fetch += dt
@@ -878,6 +981,8 @@ class DSIPipeline:
                 self.pool.submit(self._refill_one, int(sid))
 
     def _refill_one(self, sid: int) -> None:
+        flight = None
+        prod = self._production
         try:
             # a raced refill/admit may already have repopulated this
             # slot; form_of() is stats-neutral and containment-only, so
@@ -885,12 +990,25 @@ class DSIPipeline:
             # payload off disk just to learn the form
             if self.svc.cache.form_of(sid) == "augmented":
                 return
+            if prod is not None:
+                leader, fl = prod.begin(sid, "augmented")
+                if not leader:
+                    # a foreground production of this id is already in
+                    # flight and will admit the augmented form itself —
+                    # the refill would be pure duplicate work
+                    return
+                flight = fl
             enc = self.storage.fetch(sid)
             img = self.ds.decode(enc, sid)
             out = augment_np(img, self.ds.crop_hw,
                              np.random.default_rng(sid ^ 0x5EED))
             self.session.admit(sid, "augmented", out, out.nbytes)
+            if prod is not None:
+                prod.finish(flight, out)
+                flight = None
         except Exception:      # background worker must never kill serving
+            if prod is not None and flight is not None:
+                prod.abort(flight)   # wake joiners; the first retries
             # ... but it must not fail silently either: count every
             # failure (stats()["refill_errors"]) and log the first
             if self.telemetry.record_error("refill") == 1:

@@ -411,6 +411,20 @@ class ShardedCache:
     def hbm_bytes_used(self) -> int:
         return sum(s.get("hbm_bytes_used", 0) for s in self.shard_stats())
 
+    def production_stats(self) -> Dict[str, float]:
+        """Single-flight production counters summed across shards.
+        Shard tables run in observe mode, so ``duplicates`` counts
+        concurrent same-key productions that client-side coalescing
+        did not absorb — the residual duplicate work reaching shards."""
+        out: Dict[str, float] = {"led": 0, "coalesced": 0,
+                                 "coalesce_wait_s": 0.0, "duplicates": 0,
+                                 "in_flight": 0}
+        for s in self.shard_stats():
+            p = s.get("production") or {}
+            for k in out:
+                out[k] += p.get(k, 0)
+        return out
+
     def spill_stats(self) -> Dict[str, Dict[str, int]]:
         if not self.has_spill:
             return {}

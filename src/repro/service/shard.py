@@ -33,6 +33,7 @@ from typing import Any, Dict, Optional, Tuple
 import numpy as np
 
 from repro.cache.codecs import PayloadRef, receive_payload, ship_payload
+from repro.cache.coalesce import ProductionTable
 from repro.cache.store import FORMS, TieredCache
 from repro.data.augment import augment_np
 from repro.service import proto
@@ -147,6 +148,13 @@ class CacheShard:
                                          bandwidth=cfg.storage_bandwidth)
         self._seq = itertools.count()
         self.produced = 0
+        # observe-mode single-flight table: shards must never block a
+        # request on another request's production (the sim transport
+        # may carry a virtual clock whose turn discipline a wall wait
+        # would wedge), so concurrent same-key productions proceed and
+        # are *counted* as duplicates instead of coalesced here —
+        # cross-job dedup happens client-side in DSIPipeline
+        self.production = ProductionTable(enabled=False)
         self._closed = False
 
     # -- payload marshalling -------------------------------------------
@@ -267,6 +275,7 @@ class CacheShard:
             "hbm_bytes_used": self.cache.hbm_bytes_used(),
             "entries": sum(len(p) for p in parts.values()),
             "produced": self.produced,
+            "production": self.production.stats(),
             "spill": self.cache.spill_stats(),
             "hbm": self.cache.hbm_stats(),
             "telemetry": self.telemetry.as_dict(),
@@ -303,6 +312,17 @@ class CacheShard:
         self.telemetry.record_serve(form)
         if form == "augmented":
             return value
+        _leader, flight = self.production.begin(sid, "augmented")
+        try:
+            out = self._produce_miss(sid, epoch_tag, form, value)
+        except BaseException as e:
+            self.production.abort(flight, e)
+            raise
+        self.production.finish(flight, out)
+        return out
+
+    def _produce_miss(self, sid: int, epoch_tag: int,
+                      form: Optional[str], value) -> np.ndarray:
         if form == "decoded":
             img = value
         else:

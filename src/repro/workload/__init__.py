@@ -24,11 +24,15 @@ from repro.workload.openloop import (ARRIVAL_PROCESSES, OpenLoopGenerator,
                                      quantile)
 from repro.workload.runner import (JobResult, JobSpec, WorkloadResult,
                                    WorkloadRunner, deterministic_runner)
+from repro.workload.samplers import (REQUEST_SAMPLERS, PhaseShiftSampler,
+                                     ZipfianSampler, make_request_sampler)
 
 __all__ = [
     "Clock", "RealClock", "VirtualClock",
     "JobSpec", "JobResult", "WorkloadResult", "WorkloadRunner",
     "deterministic_runner",
+    "ZipfianSampler", "PhaseShiftSampler", "make_request_sampler",
+    "REQUEST_SAMPLERS",
     "OpenLoopGenerator", "RequestResult", "ServeResult",
     "ARRIVAL_PROCESSES", "poisson_arrivals", "bursty_arrivals",
     "diurnal_arrivals", "make_arrivals", "quantile",

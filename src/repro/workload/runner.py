@@ -69,6 +69,11 @@ class JobSpec:
     executor: str = "per-sample"  # DSIPipeline executor
     n_workers: int = 2           # pipeline workers (1 under VirtualClock)
     max_batches: Optional[int] = None   # optional cap below epochs*N/B
+    # request-stream shape: None = uniform epoch permutation (the
+    # historical default); "zipfian" / "phase-shift" (or any name in
+    # repro.workload.samplers.REQUEST_SAMPLERS) = skewed/shifting
+    # traffic for this job only
+    sampler: Optional[str] = None
 
     def __post_init__(self) -> None:
         if self.epochs < 1:
@@ -85,6 +90,13 @@ class JobSpec:
             raise ValueError(f"job {self.name!r}: unknown executor "
                              f"{self.executor!r}; expected one of "
                              f"{EXECUTORS}")
+        if self.sampler is not None:
+            from repro.workload.samplers import REQUEST_SAMPLERS
+            if self.sampler not in REQUEST_SAMPLERS:
+                raise ValueError(
+                    f"job {self.name!r}: unknown sampler "
+                    f"{self.sampler!r}; expected one of "
+                    f"{tuple(sorted(REQUEST_SAMPLERS))}")
 
 
 @dataclass
@@ -364,7 +376,8 @@ class WorkloadRunner:
                 server.service.set_clock(self.clock)
             else:
                 server = self.server
-            sess = server.open_session(batch_size=spec.batch_size)
+            sess = server.open_session(batch_size=spec.batch_size,
+                                       sampler=spec.sampler)
             res.job_id = sess.job_id
             pacer = _IngestPacer(self.clock, ticket, spec.gpu_rate,
                                  start_at=now, interrupt=self._stop)
@@ -423,7 +436,8 @@ class WorkloadRunner:
                         # where it left off, under the naive-restart
                         # baseline all progress is lost
                         sess = server.open_session(
-                            batch_size=spec.batch_size)
+                            batch_size=spec.batch_size,
+                            sampler=spec.sampler)
                         res.job_id = sess.job_id
                         if snap is not None:
                             sess.restore_state(snap)

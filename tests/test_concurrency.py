@@ -1,0 +1,491 @@
+"""Cross-job production coalescing + lock-striped cache tests (ISSUE-10).
+
+Fast half (tier-1): ProductionTable single-flight protocol (one
+producer per in-flight key, zero-copy hand-off, abort/retry, orphan
+eviction), striped TieredCache serving equivalence with the single-lock
+layout, request samplers, and the frequency admission doorkeeper.
+
+The concurrent stress half lives in ``TestConcurrentStress`` (marked
+``slow``/``stress``, run by the CI stress job): a hypothesis sweep
+asserting the striped cache keeps exact byte ledgers and one-directional
+ODS metadata consistency under racing admit/lookup/resize/evict
+threads, and a many-thread single-flight hammer.
+"""
+import threading
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.api import (AZURE_NC96, DatasetProfile, SenecaConfig,
+                       SenecaServer, SenecaService)
+from repro.api.policies import FrequencyAdmission, resolve_policy
+from repro.api.server import CODE_FORM, FORM_CODE
+from repro.api.telemetry import TelemetryAggregator
+from repro.cache.coalesce import ProductionTable
+from repro.cache.store import FORMS, TieredCache
+from repro.data.pipeline import DSIPipeline
+from repro.data.storage import RemoteStorage
+from repro.data.synthetic import tiny
+from repro.workload import (JobSpec, PhaseShiftSampler, ZipfianSampler,
+                            make_request_sampler)
+
+
+# ----------------------------------------------------------------------
+# single-flight protocol
+class TestProductionTable:
+    def test_k_threads_one_producer_identical_bytes(self):
+        """The satellite's contract: K threads missing the same key run
+        exactly one producer; every thread observes identical bytes and
+        joiners receive the leader's array zero-copy."""
+        table = ProductionTable()
+        k = 8
+        produced = []
+        results = [None] * k
+        barrier = threading.Barrier(k)
+        lock = threading.Lock()
+
+        def produce():
+            with lock:
+                produced.append(threading.get_ident())
+            # widen the in-flight window so every other thread joins
+            import time
+            time.sleep(0.05)
+            return np.arange(16, dtype=np.float32)
+
+        def worker(i):
+            barrier.wait()
+            while True:
+                leader, flight = table.begin(7, "augmented")
+                if leader:
+                    out = produce()
+                    table.finish(flight, out)
+                    results[i] = out
+                    return
+                ok, value = table.join(flight)
+                if ok:
+                    results[i] = value
+                    return
+                if not flight.done:
+                    results[i] = produce()
+                    return
+
+        threads = [threading.Thread(target=worker, args=(i,))
+                   for i in range(k)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert len(produced) == 1, "duplicate productions of one key"
+        leader_out = results[0]
+        for r in results:
+            assert r is leader_out, "joiner did not get zero-copy value"
+        assert table.coalesced == k - 1
+        assert table.duplicates == 0
+        assert len(table) == 0
+
+    def test_observe_mode_counts_duplicates(self):
+        table = ProductionTable(enabled=False)
+        leader, flight = table.begin(3, "augmented")
+        assert leader and flight is not None
+        again, none_flight = table.begin(3, "augmented")
+        assert again and none_flight is None      # produce anyway
+        assert table.duplicates == 1
+        table.finish(flight, b"v")
+        assert len(table) == 0
+
+    def test_abort_wakes_joiner_who_retries_as_leader(self):
+        table = ProductionTable()
+        _leader, flight = table.begin(5, "augmented")
+        got = {}
+
+        def joiner():
+            is_leader, fl = table.begin(5, "augmented")
+            assert not is_leader
+            ok, value = table.join(fl)
+            got["join"] = (ok, value)
+            assert fl.done               # aborted, not timed out
+            is_leader, fl2 = table.begin(5, "augmented")
+            got["retry_leads"] = is_leader
+            table.finish(fl2, b"retried")
+
+        t = threading.Thread(target=joiner)
+        t.start()
+        import time
+        time.sleep(0.02)
+        table.abort(flight, RuntimeError("boom"))
+        t.join()
+        assert got["join"] == (False, None)
+        assert got["retry_leads"]
+        assert flight.error is not None
+
+    def test_abort_without_error_never_reads_as_success(self):
+        table = ProductionTable()
+        _leader, flight = table.begin(9, "augmented")
+        table.abort(flight)
+        ok, value = table.join(flight)
+        assert (ok, value) == (False, None)
+
+    def test_timeout_evicts_orphaned_flight(self):
+        table = ProductionTable(timeout_s=0.02)
+        _leader, flight = table.begin(1, "augmented")
+        is_leader, fl = table.begin(1, "augmented")
+        assert not is_leader
+        ok, _ = table.join(fl)               # leader never finishes
+        assert not ok
+        assert len(table) == 0               # orphan evicted
+        is_leader, fl2 = table.begin(1, "augmented")
+        assert is_leader                     # fresh flight, no stall
+        table.finish(fl2, b"v")
+        # the original leader finishing late must not pop the successor
+        table.finish(flight, b"stale")
+        assert len(table) == 0
+
+    def test_inflight_mask(self):
+        table = ProductionTable()
+        assert table.inflight_mask(8) is None
+        _l1, f1 = table.begin(2, "augmented")
+        _l2, f2 = table.begin(6, "augmented")
+        mask = table.inflight_mask(8)
+        assert mask is not None
+        assert list(np.flatnonzero(mask)) == [2, 6]
+        table.finish(f1, b"a")
+        table.abort(f2)
+        assert table.inflight_mask(8) is None
+
+    def test_deterministic_clock_without_ticket_declines(self):
+        class FakeClock:
+            deterministic = True
+
+            def now(self):
+                return 0.0
+
+            def bound_ticket(self):
+                return None
+
+        table = ProductionTable()
+        _leader, flight = table.begin(4, "augmented")
+        is_leader, fl = table.begin(4, "augmented")
+        assert not is_leader
+        ok, value = table.join(fl, FakeClock())
+        assert (ok, value) == (False, None)
+        assert table.duplicates == 1
+        assert not fl.done                   # caller produces itself
+        table.finish(flight, b"v")
+
+    def test_telemetry_coalesce_counters(self):
+        tel = TelemetryAggregator()
+        assert "coalesced" not in tel.as_dict()      # additive shape
+        tel.record_coalesced(0.25)
+        tel.record_coalesced(0.75)
+        out = tel.as_dict()
+        assert out["coalesced"] == 2
+        assert out["coalesce_wait_s"] == pytest.approx(1.0)
+
+
+# ----------------------------------------------------------------------
+# lock-striped cache
+class TestStripedCache:
+    def _fill(self, cache, n=48):
+        for k in range(n):
+            form = FORMS[k % 3]
+            cache.insert(k, form, b"x" * (100 + k), 100 + k)
+
+    def test_striped_matches_single_lock_serving(self):
+        flat = TieredCache(60_000, (0.4, 0.3, 0.3))
+        striped = TieredCache(60_000, (0.4, 0.3, 0.3), n_stripes=4)
+        self._fill(flat)
+        self._fill(striped)
+        for k in range(64):
+            assert flat.form_of(k) == striped.form_of(k)
+            f_form, f_val, f_tier = flat.lookup_tiered(k)
+            s_form, s_val, s_tier = striped.lookup_tiered(k)
+            assert (f_form, f_tier) == (s_form, s_tier)
+            assert f_val == s_val
+        assert flat.lookup_misses == striped.lookup_misses
+        assert flat.bytes_used() == striped.bytes_used()
+        for form in FORMS:
+            keys = list(range(64))
+            assert list(flat.contains_many(form, keys)) \
+                == list(striped.contains_many(form, keys))
+            assert len(flat.parts[form]) == len(striped.parts[form])
+
+    def test_striped_ledgers_exact_and_resize(self):
+        cache = TieredCache(60_000, (0.4, 0.3, 0.3), n_stripes=4)
+        self._fill(cache)
+        for stripe in cache._stripes:
+            for form, part in stripe.items():
+                assert part.stats.bytes_used == sum(part._sizes.values())
+                assert set(part._data) == set(part._sizes)
+                assert part.stats.bytes_used <= part.capacity
+        cache.resize((0.2, 0.3, 0.5))
+        total = 0
+        for stripe in cache._stripes:
+            for part in stripe.values():
+                assert part.stats.bytes_used == sum(part._sizes.values())
+                assert part.stats.bytes_used <= part.capacity
+                total += part.capacity
+        assert total <= cache.capacity
+        # whole-cache lock: ascending acquire over every stripe
+        with cache.lock:
+            pass
+        cache.close()
+
+    def test_server_integration_striped_and_coalescing(self):
+        ds = tiny(n=96)
+        server = SenecaServer.for_dataset(ds, cache_frac=0.5, seed=0,
+                                          lock_stripes=4, coalesce=True)
+        storage = RemoteStorage(ds)
+        pipe = DSIPipeline(server.open_session(batch_size=8), storage,
+                           n_workers=2, seed=0)
+        for _ in range(6):
+            batch = pipe.next_batch()
+            assert batch["images"].shape[0] == 8
+        stats = server.service.stats()
+        assert stats["production"]["led"] > 0
+        assert stats["production"]["enabled"]
+        pipe.stop()
+        server.close()
+
+
+# ----------------------------------------------------------------------
+# request samplers
+class TestRequestSamplers:
+    def test_zipfian_distinct_deterministic_and_skewed(self):
+        a = ZipfianSampler(256, 32, seed=1)
+        b = ZipfianSampler(256, 32, seed=1)
+        counts = np.zeros(256, np.int64)
+        for _ in range(40):
+            ra, rb = a.next_request(), b.next_request()
+            assert np.array_equal(ra, rb)        # same seed, same stream
+            assert len(set(ra.tolist())) == len(ra)
+            assert ra.min() >= 0 and ra.max() < 256
+            counts[ra] += 1
+        hot = a._ranks[:32]
+        cold = a._ranks[-32:]
+        assert counts[hot].sum() > counts[cold].sum()
+
+    def test_zipfian_state_roundtrip(self):
+        a = ZipfianSampler(128, 16, seed=7)
+        for _ in range(5):
+            a.next_request()
+        snap = a.state_dict()
+        expect = [a.next_request() for _ in range(3)]
+        b = ZipfianSampler(128, 16, seed=99)
+        b.load_state_dict(snap)
+        got = [b.next_request() for _ in range(3)]
+        for e, g in zip(expect, got):
+            assert np.array_equal(e, g)
+        with pytest.raises(ValueError):
+            ZipfianSampler(64, 16, seed=0).load_state_dict(snap)
+
+    def test_phase_shift_slides_window(self):
+        s = PhaseShiftSampler(256, 16, seed=3, window_frac=0.25,
+                              period=4, shift_frac=0.5)
+        first_phase = np.concatenate([s.next_request() for _ in range(4)])
+        assert first_phase.max() < s.window      # offset 0 phase
+        s.next_request()
+        assert s._offset == s.shift              # window advanced
+        snap = s.state_dict()
+        expect = [s.next_request() for _ in range(3)]
+        r = PhaseShiftSampler(256, 16, seed=8, window_frac=0.25,
+                              period=4, shift_frac=0.5)
+        r.load_state_dict(snap)
+        for e in expect:
+            assert np.array_equal(e, r.next_request())
+
+    def test_factory_and_jobspec_validation(self):
+        s = make_request_sampler("zipfian", 64, 8, seed=0)
+        assert isinstance(s, ZipfianSampler)
+        assert make_request_sampler(None, 64, 8, seed=0).n == 64
+        with pytest.raises(ValueError, match="unknown request sampler"):
+            make_request_sampler("nope", 64, 8, seed=0)
+        spec = JobSpec(name="j", batch_size=4, sampler="phase-shift")
+        assert spec.sampler == "phase-shift"
+        with pytest.raises(ValueError):
+            JobSpec(name="j", batch_size=4, sampler="bogus")
+
+
+# ----------------------------------------------------------------------
+# frequency admission
+class TestFrequencyAdmission:
+    def test_doorkeeper_threshold(self):
+        adm = FrequencyAdmission(threshold=2)
+        assert not adm.wants(None, 11, "augmented")   # first touch
+        assert adm.wants(None, 11, "augmented")       # second passes
+        assert adm.wants(None, 11, "augmented")
+        assert not adm.wants(None, 12, "encoded")     # independent key
+
+    def test_aging_decays_counts(self):
+        adm = FrequencyAdmission(threshold=2, window=4)
+        for _ in range(4):
+            adm.wants(None, 5, "augmented")           # 4th obs triggers age
+        # count was 4, halved to 2 by the aging pass: still admitted
+        assert adm.wants(None, 5, "augmented")
+        adm2 = FrequencyAdmission(threshold=3, window=2)
+        adm2.wants(None, 9, "augmented")
+        adm2.wants(None, 9, "augmented")              # ages: 2 -> 1
+        assert not adm2.wants(None, 9, "augmented")   # 1+1 < 3
+
+    def test_registry_resolution(self):
+        adm = resolve_policy("admission", "frequency")
+        assert isinstance(adm, FrequencyAdmission)
+
+    def test_service_runs_with_frequency_admission(self):
+        profile = DatasetProfile("freq", 64, 1_000, decoded_bytes=1_500,
+                                 augmented_bytes=2_000)
+        svc = SenecaService(SenecaConfig(
+            cache_bytes=64_000, hardware=AZURE_NC96, dataset=profile,
+            split=(0.4, 0.3, 0.3), seed=0, admission="frequency"))
+        svc.register_job(0, 4)
+        assert not svc.admit(1, "augmented", b"x" * 100, 100)  # 1st touch
+        assert svc.admit(1, "augmented", b"x" * 100, 100)      # doorkeeper
+        assert svc.cache.form_of(1) == "augmented"
+        svc.close()
+
+
+# ----------------------------------------------------------------------
+# stress half: racing threads (CI stress job; excluded from tier-1)
+N_KEYS = 64
+OPS = ("admit_encoded", "admit_decoded", "admit_augmented", "lookup",
+       "evict_augmented", "resize")
+op_strategy = st.lists(
+    st.tuples(st.sampled_from(OPS),
+              st.integers(0, N_KEYS - 1),
+              st.integers(1, 1_500),
+              st.floats(0.05, 0.9),
+              st.floats(0.05, 0.9)),
+    min_size=8, max_size=80)
+
+
+def _striped_service() -> SenecaService:
+    profile = DatasetProfile("stripe-prop", N_KEYS, 1_000,
+                             decoded_bytes=1_500, augmented_bytes=2_000)
+    # "on-change" keeps the repartition controller active, which is what
+    # arms admit()'s deferred-mark re-validation — resizing live against
+    # concurrent admits is only supported with an active controller
+    return SenecaService(SenecaConfig(
+        cache_bytes=16_384, hardware=AZURE_NC96, dataset=profile,
+        split=(0.4, 0.3, 0.3), seed=3, lock_stripes=4,
+        repartition="on-change"))
+
+
+@pytest.mark.slow
+@pytest.mark.stress
+@settings(max_examples=15, deadline=None)
+@given(ops=op_strategy)
+def test_striped_ledgers_and_ods_consistency_under_races(ops):
+    """4 threads race the drawn op tape against a 4-stripe service.
+    Threads own disjoint key residues for mutations (the service
+    serializes same-key admits anyway; disjoint ownership keeps the
+    *oracle* race-free) but share every stripe and issue lookups on
+    all keys; thread 0 additionally resizes whole-cache.  At join:
+    exact byte ledgers per stripe partition, capacities respected,
+    and the one-directional ODS contract — a nonzero status must
+    name a resident form."""
+    svc = _striped_service()
+    n_threads = 4
+    errors = []
+
+    def run(t):
+        try:
+            for kind, key, nbytes, f_enc, f_rest in ops:
+                if kind == "lookup":
+                    svc.lookup((key + t) % N_KEYS)
+                    continue
+                if kind == "resize":
+                    if t == 0:
+                        from repro.core import mdp
+                        x_e = round(f_enc, 3)
+                        x_d = round((1.0 - x_e) * f_rest, 3)
+                        svc.apply_partition(mdp.Partition(
+                            x_e, x_d, round(1.0 - x_e - x_d, 3),
+                            throughput=float("nan")))
+                    continue
+                key = (key - key % n_threads) + t   # own residue only
+                key %= N_KEYS
+                if kind == "evict_augmented":
+                    status = svc.backend.status_of(np.asarray([key]))
+                    if int(status[0]) == FORM_CODE["augmented"]:
+                        svc.cache.evict(key, "augmented")
+                        svc.backend.mark_evicted(np.asarray([key]))
+                else:
+                    form = kind[len("admit_"):]
+                    svc.admit(key, form, b"x" * nbytes, nbytes)
+        except Exception as e:          # noqa: BLE001
+            errors.append(e)
+
+    threads = [threading.Thread(target=run, args=(t,))
+               for t in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors, errors
+    svc.reconcile_evictions()
+    cache = svc.cache
+    with cache.lock:
+        total_cap = 0
+        for stripe in cache._stripes:
+            for form, part in stripe.items():
+                assert part.stats.bytes_used == \
+                    sum(part._sizes.values()), \
+                    f"{form}: byte ledger out of sync under races"
+                assert set(part._data) == set(part._sizes)
+                assert part.stats.bytes_used <= part.capacity
+                total_cap += part.capacity
+        assert total_cap <= cache.capacity
+        status = svc.backend.status_of(np.arange(N_KEYS))
+        for key in np.flatnonzero(status):
+            form = CODE_FORM[int(status[key])]
+            assert int(key) in cache.parts[form], \
+                f"status claims {form} for {key} but cache lost it"
+    svc.close()
+
+
+@pytest.mark.slow
+@pytest.mark.stress
+def test_single_flight_hammer():
+    """16 threads x 30 rounds on one key: every round runs exactly
+    one producer and hands identical bytes to all."""
+    import time
+    for rnd in range(30):
+        table = ProductionTable()
+        k = 16
+        produced = []
+        results = [None] * k
+        barrier = threading.Barrier(k)
+        lock = threading.Lock()
+
+        def worker(i, rnd=rnd, table=table, produced=produced,
+                   results=results, barrier=barrier, lock=lock):
+            barrier.wait()
+            while True:
+                leader, flight = table.begin(rnd, "augmented")
+                if leader:
+                    with lock:
+                        produced.append(i)
+                    time.sleep(0.005)
+                    out = np.full(8, rnd, np.int32)
+                    table.finish(flight, out)
+                    results[i] = out
+                    return
+                ok, value = table.join(flight)
+                if ok:
+                    results[i] = value
+                    return
+                if not flight.done:
+                    results[i] = np.full(8, rnd, np.int32)
+                    return
+
+        threads = [threading.Thread(target=worker, args=(i,))
+                   for i in range(k)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert len(produced) == 1
+        for r in results:
+            assert np.array_equal(r, np.full(8, rnd, np.int32))
+        assert len(table) == 0
